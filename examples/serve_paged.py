@@ -1,0 +1,58 @@
+"""Serving example: batched generation over a DiLi-indexed paged KV cache,
+with a live Split/Move of the page index between decode steps.
+
+This is the paper's headline capability applied to LM serving: the
+(sequence, page) -> slot index is re-partitioned and migrated *while
+decoding continues*, and the outputs are bit-identical to an undisturbed
+run (asserted below).
+
+Run:  PYTHONPATH=src python examples/serve_paged.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serving.engine import Request, ServingEngine
+
+cfg = get_smoke_config("qwen2.5-3b")
+params = T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+rng = np.random.default_rng(7)
+prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+           for n in (12, 9, 15)]
+N_NEW = 8
+
+
+def generate(rebalance: bool):
+    eng = ServingEngine(cfg, params, page_size=8, num_pages=128,
+                        dili_shards=2)
+    reqs = [Request(seq_id=i, prompt=p, max_new=N_NEW)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.admit(r)
+    for step in range(N_NEW):
+        if rebalance and step == 2:
+            subs = [e for e in eng.kv.dili.sublists(0) if e["owner"] == 0]
+            if subs:
+                eng.kv.dili.move(0, subs[0]["keymax"], 1)
+                print("  [step 2] issued Move of the page-index sublist "
+                      "shard0 -> shard1")
+        eng.step(rebalance=rebalance)
+    owners = sorted({e["owner"] for s in range(2)
+                     for e in eng.kv.dili.sublists(s)})
+    return [r.out for r in reqs], owners
+
+
+print("run A: undisturbed decode")
+out_a, _ = generate(rebalance=False)
+print("run B: decode with live page-index migration")
+out_b, owners = generate(rebalance=True)
+
+for i, (a, b) in enumerate(zip(out_a, out_b)):
+    status = "OK" if a == b else "MISMATCH"
+    print(f"seq {i}: {a[:N_NEW]}  [{status}]")
+assert out_a == out_b, "live migration changed the outputs!"
+print(f"page-index owners after migration: shards {owners}")
+print("outputs identical under live Split/Move — the paper's asynchronous "
+      "re-partitioning, applied to KV-cache serving. OK")

@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+through the full production stack (config -> data -> jitted step ->
+checkpointing -> resume), on whatever devices this host has.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import make_train_batch
+from repro.models.config import ShapeCell
+from repro.optim import AdamWConfig
+from repro.runtime.train import Trainer, TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+# ~100M params: qwen2-0.5b scaled down in depth, full width
+cfg = get_config("qwen2-0.5b").replace(n_layers=4, vocab=32768,
+                                       loss_chunk=128)
+cell = ShapeCell("example", "train", 256, 8)
+opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+
+n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+    jax.eval_shape(lambda: __import__(
+        "repro.models.transformer", fromlist=["T"]).init_params(
+            cfg, jax.random.PRNGKey(0), dtype=jnp.float32))))
+print(f"model: {cfg.name}-deep4  params={n_params/1e6:.1f}M  "
+      f"tokens/step={cell.global_batch * cell.seq_len}")
+
+tr = Trainer(cfg, cell, opt,
+             TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                           ckpt_dir=args.ckpt_dir, log_every=20),
+             make_batch=lambda s: make_train_batch(cfg, cell, seed=0, step=s,
+                                                   dtype=jnp.float32))
+if tr.maybe_resume():
+    print(f"resumed from checkpoint at step {tr.start_step}")
+t0 = time.time()
+out = tr.run()
+dt = time.time() - t0
+for m in out["metrics"]:
+    print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+          f"grad_norm {m['grad_norm']:.3f}  lr {m['lr']:.2e}")
+steps_done = out["final_step"] - tr.start_step
+if steps_done:
+    tok_s = steps_done * cell.global_batch * cell.seq_len / dt
+    print(f"throughput: {tok_s:,.0f} tokens/s over {steps_done} steps")
+first, last = out["metrics"][0]["loss"], out["metrics"][-1]["loss"]
+assert last < first, "loss did not decrease"
+print(f"loss {first:.3f} -> {last:.3f}  OK")

@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun_results.jsonl."""
+import json
+import sys
+
+
+def load(path="experiments/dryrun_results.jsonl"):
+    rows = [json.loads(l) for l in open(path)]
+    seen = {}
+    for r in rows:  # last write wins (re-runs)
+        seen[(r["arch"], str(r["cell"]), r["mesh"],
+              json.dumps(r.get("overrides", {}), sort_keys=True))] = r
+    return list(seen.values())
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | cell | FLOPs/dev | bytes/dev | coll/dev | compute s | "
+           "memory s | collective s | dominant | MODEL_FLOPS | useful | "
+           "MFU bound | fits (temp GB) |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], str(r["cell"]))):
+        if r["mesh"] != mesh or r["arch"] == "dili-service":
+            continue
+        if r.get("overrides"):
+            continue
+        t = r["terms_seconds"]
+        mem = r.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes")
+        fit = f"{temp/1e9:.1f}" if temp is not None else "n/a"
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['flops_per_device']:.2e} | "
+            f"{fmt_bytes(r['bytes_per_device'])} | "
+            f"{fmt_bytes(r['collective_bytes_per_device'])} | "
+            f"{t['compute']:.3e} | {t['memory']:.3e} | "
+            f"{t['collective']:.3e} | **{r['dominant']}** | "
+            f"{r['model_flops_global']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_mfu_bound']:.3f} | {fit} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | cell | mesh | kind | compile s | args GB | temp GB | "
+           "collective mix |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], str(r["cell"]),
+                                         r["mesh"])):
+        if r.get("overrides"):
+            continue
+        mem = r.get("memory_analysis", {})
+        a = mem.get("argument_size_in_bytes")
+        t = mem.get("temp_size_in_bytes")
+        coll = r.get("collectives", {})
+        mix = " ".join(f"{k}:{fmt_bytes(v)}" for k, v in
+                       sorted(coll.items(), key=lambda kv: -kv[1])[:3])
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+            f"{r.get('kind','-')} | {r.get('compile_seconds','-')} | "
+            f"{a/1e9:.2f} | " if a is not None else
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+            f"{r.get('kind','-')} | {r.get('compile_seconds','-')} | n/a | ")
+        out[-1] += (f"{t/1e9:.2f} | {mix} |" if t is not None
+                    else f"n/a | {mix} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load()
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        print(roofline_table(rows, sys.argv[2] if len(sys.argv) > 2
+                             else "16x16"))
+    else:
+        print(dryrun_table(rows))

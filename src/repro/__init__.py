@@ -1,0 +1,10 @@
+"""repro: DiLi (distributable lock-free index) + multi-pod JAX LM framework.
+
+Subpackages:
+  core       — the paper's contribution (DiLi protocol + runtimes)
+  kernels    — Pallas TPU kernels (hybrid_search, paged_attention)
+  models     — the 10 assigned architectures' backbones
+  data/optim/checkpoint/runtime/serving — production substrates
+  configs    — architecture registry (--arch <id>)
+  launch     — mesh / dryrun / train / serve entry points
+"""

@@ -1,0 +1,2 @@
+from .ckpt import (CheckpointManager, restore_pytree,  # noqa: F401
+                   save_pytree)

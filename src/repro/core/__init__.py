@@ -1,0 +1,3 @@
+"""DiLi core: the paper's data structure and distributed protocol."""
+from . import (background, balancer, messages, ops, oracle,  # noqa: F401
+               refs, registry, shard, sim, skiplist, traverse, types)

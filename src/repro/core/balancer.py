@@ -1,0 +1,85 @@
+"""The naive load balancer of §7.1, as a host-side policy over the cluster.
+
+One decision per shard per invocation (the paper runs one background thread
+per machine). Policy, verbatim from the paper:
+
+  * Split any owned sublist larger than ``split_threshold`` (125) roughly in
+    the middle — this bounds the linear-traversal length of the hybrid search.
+  * When a machine holds more than ``move_headroom`` (110%) of the mean load,
+    Move one of its sublists to the least-loaded machine.
+  * (Extension, Appendix B) Merge adjacent tiny sublists on the same shard
+    when both fall below ``merge_threshold`` — keeps the registry compact.
+
+The Split/Move primitives are the *interface*; this policy is deliberately
+simple and replaceable (the paper calls for workload-specific balancers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from . import background as B
+from .sim import Cluster
+
+
+class Balancer:
+    def __init__(self, cluster: Cluster, *, split_threshold: Optional[int] = None,
+                 move_headroom: float = 1.10, merge_threshold: int = 0,
+                 registry_headroom: int = 4):
+        self.cl = cluster
+        self.split_threshold = (split_threshold if split_threshold is not None
+                                else cluster.cfg.split_threshold)
+        self.move_headroom = move_headroom
+        self.merge_threshold = merge_threshold
+        self.registry_headroom = registry_headroom
+
+    def _owned(self, s: int):
+        return [e for e in self.cl.sublists(s) if e["owner"] == s
+                and e["size"] is not None]
+
+    def step(self) -> dict:
+        """One balancing pass; returns counts of issued commands."""
+        cl = self.cl
+        issued = {"split": 0, "move": 0, "merge": 0}
+        owned = {s: self._owned(s) for s in range(cl.n)}
+        loads = {s: sum(e["size"] for e in owned[s]) for s in range(cl.n)}
+        total = sum(loads.values())
+        mean = total / max(cl.n, 1)
+
+        for s in range(cl.n):
+            if int(cl.bgs[s].phase) != B.BG_IDLE:
+                continue
+            entries = owned[s]
+            # 1) split oversized sublists (registry capacity permitting)
+            reg_room = (cl.cfg.max_sublists - int(cl.states[s].registry.size)
+                        > self.registry_headroom)
+            big = [e for e in entries if e["size"] > self.split_threshold]
+            if big and reg_room:
+                e = max(big, key=lambda x: x["size"])
+                mid = cl.middle_item(s, e["head_idx"])
+                if mid is not None:
+                    cl.split(s, e["keymax"], mid)
+                    issued["split"] += 1
+                    continue
+            # 2) move a sublist off an overloaded shard
+            if cl.n > 1 and loads[s] > self.move_headroom * mean and entries:
+                tgt = min(range(cl.n), key=lambda d: loads[d])
+                if tgt != s and loads[s] - loads[tgt] > 1:
+                    # move the sublist that best evens the load — but only
+                    # if it strictly improves the pairwise imbalance (else a
+                    # lone big sublist ping-pongs between shards forever)
+                    gap = (loads[s] - loads[tgt]) / 2
+                    e = min(entries, key=lambda x: abs(x["size"] - gap))
+                    if loads[tgt] + e["size"] < loads[s]:
+                        cl.move(s, e["keymax"], tgt)
+                        issued["move"] += 1
+                        continue
+            # 3) merge adjacent runts on the same shard
+            if self.merge_threshold > 0:
+                entries_sorted = sorted(entries, key=lambda x: x["keymin"])
+                for a, b in zip(entries_sorted, entries_sorted[1:]):
+                    if (a["keymax"] == b["keymin"]
+                            and a["size"] + b["size"] < self.merge_threshold):
+                        cl.merge(s, a["keymax"], b["keymax"])
+                        issued["merge"] += 1
+                        break
+        return issued

@@ -1,0 +1,86 @@
+"""Message records for the round-based distributed runtime.
+
+The paper's RPCs/async messages (delegation, replicates, move items, switch
+notifications) become fixed-width int32 records routed between shards once
+per round by an ``all_to_all`` (real mesh) or a vectorized permutation
+(single-host simulation). Channels are reliable and FIFO per (src, dst)
+pair — exactly the paper's "communication takes a finite number of steps"
+condition of conditional lock-freedom (Definition 1).
+
+A message is a row of ``FIELDS`` int32 lanes. Refs (uint32) are bitcast.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- kinds
+MSG_NONE = 0
+MSG_OP = 1              # client operation (fresh or delegated)        §5.2
+MSG_RESULT = 2          # response routed back to the client's shard
+MSG_REP_INSERT = 3      # RepInsertAfter replicate                     §5.4
+MSG_REP_DELETE = 4      # RepDelete replicate                          §5.4
+MSG_ACK_INSERT = 5      # InsertReplayResponse (sets newLoc, endCt++)  L264
+MSG_ACK_DELETE = 6      # RemoveReplayResponse (endCt++)               L266
+MSG_MOVE_SH = 7         # MoveSH: create SH/ST + counters on target    L215
+MSG_MOVE_SH_ACK = 8
+MSG_MOVE_ITEM = 9       # MoveItem: copy one item                      L240
+MSG_MOVE_ACK = 10
+MSG_SWITCH_ST = 11      # SwitchST: repoint previous subtail           L272
+MSG_SWITCH_ST_ACK = 12
+MSG_REG_SPLIT = 13      # RegisterSublist broadcast after Split        L159
+MSG_SWITCH_SERVER = 14  # SwitchServer registry update broadcast       L285
+MSG_REG_MERGED = 15     # RegisterMergedSublist broadcast              L360
+
+# ---------------------------------------------------------------- layout
+# field meanings are per-kind; see docstrings at the emit sites.
+F_KIND = 0
+F_DST = 1
+F_SRC = 2
+F_A = 3        # op kind / flag / result value
+F_KEY = 4
+F_REF1 = 5     # primary ref (bitcast uint32): subhead / prev newLoc / new ref
+F_SID = 6      # item identity: origin shard id          (<sId, ts> of §5.4)
+F_TS = 7       # item identity: logical timestamp / client slot
+F_X1 = 8       # oldLoc pool index / keymax / marked flag
+F_X2 = 9       # hops / prev_sid / ok flag
+F_X3 = 10      # prev_ts / secondary ref (bitcast)
+F_X4 = 11      # spare (client slot for MSG_OP)
+F_VAL = 12     # item payload value (page slot etc.) — rides with inserts
+FIELDS = 13
+
+MSG_DTYPE = jnp.int32
+
+
+def ref2i(ref):
+    """Bitcast a uint32 Ref into an int32 message lane."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(ref, jnp.uint32), jnp.int32)
+
+
+def i2ref(i):
+    """Bitcast an int32 message lane back into a uint32 Ref."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(i, jnp.int32), jnp.uint32)
+
+
+def empty_outbox(cap: int):
+    """(buffer[cap, FIELDS], count) — MSG_NONE rows are padding."""
+    return jnp.zeros((cap, FIELDS), MSG_DTYPE), jnp.zeros((), jnp.int32)
+
+
+def push(outbox, count, row, do: bool | jnp.ndarray = True):
+    """Functionally append ``row`` when ``do``; drops silently past cap.
+
+    Capacity is a static budget computed per round (ops can emit at most a
+    bounded number of messages); tests assert no round ever hits the cap.
+    """
+    cap = outbox.shape[0]
+    pos = jnp.clip(count, 0, cap - 1)
+    do = jnp.asarray(do) & (count < cap)
+    new = jnp.where(do, outbox.at[pos].set(row), outbox)
+    return new, count + do.astype(jnp.int32)
+
+
+def make_row(kind, dst, src, *, a=0, key=0, ref1=0, sid=0, ts=0,
+             x1=0, x2=0, x3=0, x4=0, val=0):
+    vals = [kind, dst, src, a, key, ref1, sid, ts, x1, x2, x3, x4, val]
+    return jnp.stack([jnp.asarray(v, MSG_DTYPE) for v in vals])

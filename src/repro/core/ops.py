@@ -1,0 +1,211 @@
+"""Client operations — the paper's Find / Insert / Remove (§5.2, Alg. 2-3).
+
+Each op is applied atomically within a round (rounds linearize the per-shard
+op order; see DESIGN.md §2 "batched linearization"). The paper's CAS race
+outcomes are reproduced by the *order* of application; the cross-round races
+(background Split/Move/Switch, replicate delivery) are the real concurrency
+and follow the paper's counter/replicate protocol exactly:
+
+  * stCt is incremented before an update, endCt after it (§5.4);
+  * if the sublist is moving (head.newLoc != null propagated to items via
+    Line 189's newLoc inheritance), the endCt increment is deferred until the
+    replay acknowledgement (Lines 264-267) — that is what Move's termination
+    CAS observes;
+  * ops that hit a switched sublist (stCt < 0) are delegated (blue lines).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import messages as M
+from . import refs, registry as reg_ops
+from .traverse import S_DELEGATE, S_FOUND, S_OVERFLOW, search
+from .types import (DiLiConfig, OP_FIND, OP_INSERT, OP_NOP, OP_REMOVE,
+                    RES_FALSE, RES_PENDING, RES_TRUE, ShardState, ST_KEY)
+
+RES_OVERFLOW = -2   # traversal bound exceeded — tests assert never seen
+RES_POOLFULL = -3   # allocator exhausted — tests assert never seen
+
+
+class OpOut(NamedTuple):
+    state: ShardState
+    result: jnp.ndarray      # int32 RES_*
+    outbox: jnp.ndarray
+    count: jnp.ndarray
+
+
+def _alloc_node(state: ShardState):
+    """Pop the free list, else bump-allocate. Returns (state, idx, ok)."""
+    has_free = state.free_top > 0
+    free_idx = state.free_list[jnp.clip(state.free_top - 1, 0, None)]
+    bump_ok = state.alloc_top < state.pool.key.shape[0]
+    idx = jnp.where(has_free, free_idx, state.alloc_top)
+    ok = has_free | bump_ok
+    state = state._replace(
+        free_top=state.free_top - has_free.astype(jnp.int32),
+        alloc_top=state.alloc_top + ((~has_free) & bump_ok).astype(jnp.int32),
+    )
+    return state, jnp.where(ok, idx, 0), ok
+
+
+def _tick(state: ShardState):
+    ts = state.ts_clock
+    return state._replace(ts_clock=ts + 1), ts
+
+
+def apply_op(state: ShardState, me, row, outbox, count,
+             cfg: DiLiConfig) -> OpOut:
+    """Apply one MSG_OP row (fresh client op or delegated op).
+
+    Row fields: a=op kind, key, ref1=subhead hint (NULL => registry lookup),
+    sid=reply shard, ts/x4=client slot, x2=hops.
+    """
+    me = jnp.asarray(me, jnp.int32)
+    kind = row[M.F_A]
+    key = row[M.F_KEY]
+    sh_hint = M.i2ref(row[M.F_REF1])
+    reply_sid = row[M.F_SID]
+    slot = row[M.F_TS]
+    hops = row[M.F_X2]
+
+    # ------------------------------------------------ resolve the subhead
+    # Find lines 72-74: a null/stale hint forces a registry lookup.
+    need_lookup = refs.is_null(sh_hint)
+    entry = reg_ops.get_by_key(state.registry, key)
+    entry_sh = state.registry.subhead[jnp.clip(entry, 0, None)]
+    sh_ref = jnp.where(need_lookup, entry_sh, sh_hint)
+    no_route = need_lookup & (entry < 0)
+
+    owner = refs.ref_sid(sh_ref)
+    head_idx = refs.ref_idx(sh_ref)
+
+    # stale hint: the hinted subhead may itself have moved (stCt < 0)
+    head_ctr = state.pool.ctr[jnp.clip(head_idx, 0, state.pool.ctr.shape[0] - 1)]
+    head_moved = (owner == me) & (state.stct[head_ctr] < 0)
+    head_newloc = refs.unmarked(
+        state.pool.newloc[jnp.clip(head_idx, 0, state.pool.key.shape[0] - 1)])
+
+    deleg_now = (owner != me) | head_moved
+    deleg_ref = jnp.where(owner != me, refs.unmarked(sh_ref), head_newloc)
+
+    # ------------------------------------------------ traverse
+    do_search = (~no_route) & (~deleg_now) & (kind != OP_NOP)
+    s = search(state, jnp.where(do_search, head_idx, 0), key, me, cfg)
+    state = state._replace(
+        pool=state.pool._replace(nxt=jnp.where(do_search, s.nxt, state.pool.nxt)),
+        free_list=jnp.where(do_search, s.free_list, state.free_list),
+        free_top=jnp.where(do_search, s.free_top, state.free_top),
+    )
+
+    deleg_now = deleg_now | (do_search & (s.status == S_DELEGATE))
+    deleg_ref = jnp.where(do_search & (s.status == S_DELEGATE), s.deleg, deleg_ref)
+    overflow = do_search & (s.status == S_OVERFLOW)
+    found_ok = do_search & (s.status == S_FOUND)
+
+    left, right = s.left, s.right
+    right_key = state.pool.key[right]
+    key_present = found_ok & (right_key == key)
+
+    # ------------------------------------------------ FIND
+    find_res = jnp.where(key_present, RES_TRUE, RES_FALSE)
+
+    # ------------------------------------------------ INSERT (Alg. 3)
+    do_insert = found_ok & (kind == OP_INSERT) & (~key_present)
+    state, new_idx, alloc_ok = jax.lax.cond(
+        do_insert, _alloc_node, lambda st: (st, jnp.zeros((), jnp.int32),
+                                            jnp.asarray(True)), state)
+    state, new_ts = _tick(state)
+    ins_ok = do_insert & alloc_ok
+
+    left_ctr = state.pool.ctr[left]
+    left_newloc = state.pool.newloc[left]
+    moving = ~refs.is_null(left_newloc)
+
+    pool = state.pool
+    right_ref = refs.make_ref(me, right)
+    new_ref = refs.make_ref(me, new_idx)
+
+    def _set(col, idx, val, do):
+        return jnp.where(do, col.at[idx].set(val), col)
+
+    pool = pool._replace(
+        key=_set(pool.key, new_idx, key, ins_ok),
+        ts=_set(pool.ts, new_idx, new_ts, ins_ok),
+        sid=_set(pool.sid, new_idx, me, ins_ok),
+        ctr=_set(pool.ctr, new_idx, left_ctr, ins_ok),
+        # Line 189: the new item inherits leftNode.newLoc — non-null marks
+        # "this region is being moved", making the mover skip it (Line 207)
+        # while the replicate recreates it on the target.
+        newloc=_set(pool.newloc, new_idx, left_newloc, ins_ok),
+        # keymax doubles as the item payload (page slot) on non-sentinels
+        keymax=_set(pool.keymax, new_idx, row[M.F_VAL], ins_ok),
+    )
+    pool = pool._replace(nxt=_set(pool.nxt, new_idx, right_ref, ins_ok))
+    pool = pool._replace(nxt=_set(pool.nxt, left, new_ref, ins_ok))
+    state = state._replace(pool=pool)
+
+    # counters: stCt++ always; endCt++ only if no replicate (else deferred)
+    state = state._replace(
+        stct=jnp.where(ins_ok, state.stct.at[left_ctr].add(1), state.stct),
+        endct=jnp.where(ins_ok & ~moving,
+                        state.endct.at[left_ctr].add(1), state.endct),
+    )
+    rep_ins_row = M.make_row(
+        M.MSG_REP_INSERT, refs.ref_sid(left_newloc), me,
+        key=key, ref1=M.ref2i(refs.unmarked(left_newloc)),
+        x2=state.pool.sid[left], x3=state.pool.ts[left],
+        sid=me, ts=new_ts, x1=new_idx, x4=left_ctr, val=row[M.F_VAL])
+    outbox, count = M.push(outbox, count, rep_ins_row, ins_ok & moving)
+    ins_res = jnp.where(key_present, RES_FALSE,
+                        jnp.where(alloc_ok, RES_TRUE, RES_POOLFULL))
+
+    # ------------------------------------------------ REMOVE (Delete, Alg. 2)
+    do_remove = found_ok & (kind == OP_REMOVE) & key_present
+    node = right
+    node_ctr = state.pool.ctr[node]
+    node_newloc = state.pool.newloc[node]
+    node_moving = ~refs.is_null(node_newloc)
+
+    marked_nxt = refs.with_mark(state.pool.nxt[node])
+    state = state._replace(pool=state.pool._replace(
+        nxt=_set(state.pool.nxt, node, marked_nxt, do_remove)))
+    state = state._replace(
+        stct=jnp.where(do_remove, state.stct.at[node_ctr].add(1), state.stct),
+        endct=jnp.where(do_remove & ~node_moving,
+                        state.endct.at[node_ctr].add(1), state.endct),
+    )
+    rep_del_row = M.make_row(
+        M.MSG_REP_DELETE, refs.ref_sid(node_newloc), me,
+        key=key, ref1=M.ref2i(refs.unmarked(node_newloc)),
+        sid=state.pool.sid[node], ts=state.pool.ts[node],
+        x1=node, x2=1, x4=node_ctr)  # x2=1: ack carries the deferred endCt
+    outbox, count = M.push(outbox, count, rep_del_row, do_remove & node_moving)
+    rem_res = jnp.where(key_present, RES_TRUE, RES_FALSE)
+
+    # ------------------------------------------------ result / routing
+    result = jnp.where(kind == OP_FIND, find_res,
+                       jnp.where(kind == OP_INSERT, ins_res,
+                                 jnp.where(kind == OP_REMOVE, rem_res,
+                                           RES_FALSE)))
+    result = jnp.where(overflow, RES_OVERFLOW, result)
+    result = jnp.where(no_route, RES_FALSE, result)
+    result = jnp.where(deleg_now, RES_PENDING, result)
+
+    # delegate: forward the op with the resolved subhead ref (Thm 4 hops)
+    deleg_row = M.make_row(
+        M.MSG_OP, refs.ref_sid(deleg_ref), me,
+        a=kind, key=key, ref1=M.ref2i(deleg_ref),
+        sid=reply_sid, ts=slot, x2=hops + 1)
+    outbox, count = M.push(outbox, count, deleg_row,
+                           deleg_now & (kind != OP_NOP))
+
+    # completed op for a remote client: route the result home
+    res_row = M.make_row(M.MSG_RESULT, reply_sid, me, a=result, ts=slot)
+    outbox, count = M.push(
+        outbox, count, res_row,
+        (~deleg_now) & (kind != OP_NOP) & (reply_sid != me))
+
+    return OpOut(state=state, result=result, outbox=outbox, count=count)

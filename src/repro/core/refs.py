@@ -1,0 +1,77 @@
+"""Packed smart references — the paper's §4 'smart pointer', adapted to TPU.
+
+The paper packs {16-bit server id, 47-bit address, 1-bit deletion mark} into a
+single 64-bit word so one CAS atomically updates ownership, target and mark.
+JAX arrays are index-addressed, and the native TPU vector lane is 32 bits, so we
+pack into a ``uint32``::
+
+    bit 31      : mark (Harris deletion mark — lives on the *next* pointer)
+    bits 30..22 : shard id (9 bits, up to 512 shards = the 2-pod production mesh)
+    bits 21..0  : node index into the owner shard's node pool (4M nodes/shard)
+
+A single-word conditional store on this lane is the TPU-idiomatic equivalent of
+the paper's single-word CAS (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+REF_DTYPE = jnp.uint32
+
+IDX_BITS = 22
+SID_BITS = 9
+IDX_MASK = (1 << IDX_BITS) - 1            # 0x003FFFFF
+SID_MASK = ((1 << SID_BITS) - 1) << IDX_BITS
+MARK_BIT = 1 << 31
+
+# NULL is all-ones in the index field with shard 0 / no mark. Any real node
+# index must be < IDX_MASK.
+NULL_IDX = IDX_MASK
+NULL_REF = NULL_IDX  # python int; use null_ref() for a traced constant
+
+MAX_SHARDS = 1 << SID_BITS
+POOL_LIMIT = IDX_MASK  # exclusive upper bound on per-shard pool capacity
+
+
+def null_ref():
+    return jnp.uint32(NULL_REF)
+
+
+def make_ref(sid, idx, mark=False):
+    """Pack (shard id, index, mark) into a uint32 Ref."""
+    r = ((jnp.asarray(sid).astype(jnp.uint32) << IDX_BITS)
+         | jnp.asarray(idx).astype(jnp.uint32))
+    if isinstance(mark, bool):
+        return r | jnp.uint32(MARK_BIT) if mark else r
+    return jnp.where(mark, r | jnp.uint32(MARK_BIT), r)
+
+
+def ref_idx(ref):
+    """Index field (the masked pointer access '→' of the paper)."""
+    return (ref & jnp.uint32(IDX_MASK)).astype(jnp.int32)
+
+
+def ref_sid(ref):
+    """Owner shard id — the paper's ``X.id``."""
+    return ((ref & jnp.uint32(SID_MASK)) >> IDX_BITS).astype(jnp.int32)
+
+
+def ref_mark(ref):
+    """Deletion mark — the paper's ``X.mark``."""
+    return (ref & jnp.uint32(MARK_BIT)) != 0
+
+
+def with_mark(ref, mark=True):
+    if isinstance(mark, bool):
+        return ref | jnp.uint32(MARK_BIT) if mark else ref & jnp.uint32(~MARK_BIT & 0xFFFFFFFF)
+    return jnp.where(mark, ref | jnp.uint32(MARK_BIT),
+                     ref & jnp.uint32(~MARK_BIT & 0xFFFFFFFF))
+
+
+def unmarked(ref):
+    """Ref with the mark bit cleared (address+owner only)."""
+    return ref & jnp.uint32(~MARK_BIT & 0xFFFFFFFF)
+
+
+def is_null(ref):
+    return unmarked(ref) == jnp.uint32(NULL_REF)

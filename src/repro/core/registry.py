@@ -1,0 +1,98 @@
+"""Registry operations (paper Algorithm 6) in functional-JAX form.
+
+The paper keeps the registry as a sorted array updated with copy-on-write under
+a single writer (the background thread) and many lock-free readers. In JAX all
+updates are copy-on-write by construction, so ``add_entry`` / ``remove_entry``
+return new Registry pytrees; ``get_by_key`` is the wait-free binary search.
+
+Empty slots hold keymin == ST_KEY so that the live prefix [0, size) is sorted
+and padding sorts to the end — ``searchsorted`` stays correct without masking.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import refs
+from .types import Registry, ST_KEY
+
+
+def get_by_key(reg: Registry, key):
+    """Binary search: index of the entry whose (keymin, keymax] contains key.
+
+    Paper Algorithm 6 sends ``key <= keyMin`` left, so an entry covers keys
+    *strictly greater* than its keymin and up to (inclusive) its keymax —
+    after a Split at sItem, sItem.key itself stays in the left half
+    (left.keymax == right.keymin == sItem.key). Returns -1 if no entry covers
+    the key (paper returns null). Vectorizes over ``key`` of any shape.
+    """
+    # Live prefix is sorted by keymin; padding is ST_KEY (sorts last since real
+    # keys are < ST_KEY).
+    i = jnp.searchsorted(reg.keymin, key, side="left").astype(jnp.int32) - 1
+    i = jnp.clip(i, 0, reg.keymin.shape[0] - 1)
+    ok = (
+        (jnp.asarray(key) > reg.keymin[i])
+        & (jnp.asarray(key) <= reg.keymax[i])
+        & (i < reg.size)
+    )
+    return jnp.where(ok, i, -1)
+
+
+def add_entry(reg: Registry, keymin, keymax, subhead, subtail, ctr, offset) -> Registry:
+    """COW sorted insert of a new sublist entry (Algorithm 6 addEntry)."""
+    m = reg.keymin.shape[0]
+    pos = jnp.searchsorted(reg.keymin, keymin, side="left").astype(jnp.int32)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    src = jnp.where(idx < pos, idx, idx - 1)        # shift right from pos
+    take = jnp.clip(src, 0, m - 1)
+
+    def shift(col, newval):
+        shifted = jnp.where(idx < pos, col, col[take])
+        return jnp.where(idx == pos, jnp.asarray(newval, col.dtype), shifted)
+
+    return Registry(
+        keymin=shift(reg.keymin, keymin),
+        keymax=shift(reg.keymax, keymax),
+        subhead=shift(reg.subhead, subhead),
+        subtail=shift(reg.subtail, subtail),
+        ctr=shift(reg.ctr, ctr),
+        offset=shift(reg.offset, offset),
+        size=reg.size + 1,
+    )
+
+
+def remove_entry(reg: Registry, pos) -> Registry:
+    """COW delete of entry ``pos`` (used by Merge)."""
+    m = reg.keymin.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    take = jnp.clip(jnp.where(idx >= pos, idx + 1, idx), 0, m - 1)
+
+    def shift(col, pad):
+        out = jnp.where(idx >= pos, col[take], col)
+        return out.at[m - 1].set(jnp.asarray(pad, col.dtype))
+
+    return Registry(
+        keymin=shift(reg.keymin, ST_KEY),
+        keymax=shift(reg.keymax, ST_KEY),
+        subhead=shift(reg.subhead, refs.NULL_REF),
+        subtail=shift(reg.subtail, refs.NULL_REF),
+        ctr=shift(reg.ctr, 0),
+        offset=shift(reg.offset, 0),
+        size=reg.size - 1,
+    )
+
+
+def set_fields(reg: Registry, pos, *, keymax=None, subhead=None, subtail=None,
+               ctr=None, offset=None) -> Registry:
+    """Point updates to one entry (Split truncation, Switch subhead flip)."""
+    out = reg
+    if keymax is not None:
+        out = out._replace(keymax=out.keymax.at[pos].set(jnp.asarray(keymax, jnp.int32)))
+    if subhead is not None:
+        out = out._replace(subhead=out.subhead.at[pos].set(jnp.asarray(subhead, refs.REF_DTYPE)))
+    if subtail is not None:
+        out = out._replace(subtail=out.subtail.at[pos].set(jnp.asarray(subtail, refs.REF_DTYPE)))
+    if ctr is not None:
+        out = out._replace(ctr=out.ctr.at[pos].set(jnp.asarray(ctr, jnp.int32)))
+    if offset is not None:
+        out = out._replace(offset=out.offset.at[pos].set(jnp.asarray(offset, jnp.int32)))
+    return out

@@ -1,0 +1,109 @@
+"""One shard's round: process inbox, apply client ops, advance background op.
+
+The round is the unit of linearization (DESIGN.md §2). Handlers are
+dispatched per message kind with ``lax.switch`` — a single jit compilation
+serves every shard (``me`` is a traced argument).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import background as B
+from . import messages as M
+from . import ops as O
+from .types import DiLiConfig, RES_PENDING, ShardState
+
+
+class RoundOut(NamedTuple):
+    state: ShardState
+    bg: B.BgState
+    outbox: jnp.ndarray      # [cap, FIELDS]
+    out_count: jnp.ndarray
+    comp_slot: jnp.ndarray   # [K] client slots completed this round (-1 pad)
+    comp_val: jnp.ndarray    # [K]
+
+
+def _handle_op(state, bg, me, row, outbox, count, cfg):
+    out = O.apply_op(state, me, row, outbox, count, cfg)
+    reply_sid, slot = row[M.F_SID], row[M.F_TS]
+    local_done = (out.result != RES_PENDING) & (reply_sid == me) & \
+        (row[M.F_A] != 0)
+    cslot = jnp.where(local_done, slot, -1)
+    cval = jnp.where(local_done, out.result, 0)
+    return out.state, bg, out.outbox, out.count, cslot, cval
+
+
+def _handle_result(state, bg, me, row, outbox, count, cfg):
+    return state, bg, outbox, count, row[M.F_TS], row[M.F_A]
+
+
+def _wrap_bg(fn):
+    def h(state, bg, me, row, outbox, count, cfg):
+        state, bg, outbox, count = fn(state, bg, me, row, outbox, count, cfg)
+        neg = jnp.asarray(-1, jnp.int32)
+        return state, bg, outbox, count, neg, jnp.zeros((), jnp.int32)
+    return h
+
+
+def _noop(state, bg, me, row, outbox, count, cfg):
+    neg = jnp.asarray(-1, jnp.int32)
+    return state, bg, outbox, count, neg, jnp.zeros((), jnp.int32)
+
+
+_HANDLERS = {
+    M.MSG_OP: _handle_op,
+    M.MSG_RESULT: _handle_result,
+    M.MSG_REP_INSERT: _wrap_bg(B.h_rep_insert),
+    M.MSG_REP_DELETE: _wrap_bg(B.h_rep_delete),
+    M.MSG_ACK_INSERT: _wrap_bg(B.h_ack_insert),
+    M.MSG_ACK_DELETE: _wrap_bg(B.h_ack_delete),
+    M.MSG_MOVE_SH: _wrap_bg(B.h_move_sh),
+    M.MSG_MOVE_SH_ACK: _wrap_bg(B.h_move_sh_ack),
+    M.MSG_MOVE_ITEM: _wrap_bg(B.h_move_item),
+    M.MSG_MOVE_ACK: _wrap_bg(B.h_move_ack),
+    M.MSG_SWITCH_ST: _wrap_bg(B.h_switch_st),
+    M.MSG_SWITCH_ST_ACK: _wrap_bg(B.h_switch_st_ack),
+    M.MSG_REG_SPLIT: _wrap_bg(B.h_reg_split),
+    M.MSG_SWITCH_SERVER: _wrap_bg(B.h_switch_server),
+    M.MSG_REG_MERGED: _wrap_bg(B.h_reg_merged),
+}
+_N_KINDS = 16
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
+                cfg: DiLiConfig) -> RoundOut:
+    """``inbox``/``client``: [*, FIELDS] int32 rows, MSG_NONE-padded."""
+    me = jnp.asarray(me, jnp.int32)
+    rows = jnp.concatenate([inbox, client], axis=0)
+    outbox, count = M.empty_outbox(cfg.mailbox_cap)
+
+    branches = []
+    for kind in range(_N_KINDS):
+        fn = _HANDLERS.get(kind, _noop)
+
+        def mk(f):
+            def br(args):
+                st, b, row, ob, ct = args
+                return f(st, b, me, row, ob, ct, cfg)
+            return br
+
+        branches.append(mk(fn))
+
+    def step(carry, row):
+        st, b, ob, ct = carry
+        kind = jnp.clip(row[M.F_KIND], 0, _N_KINDS - 1)
+        st, b, ob, ct, cs, cv = jax.lax.switch(
+            kind, branches, (st, b, row, ob, ct))
+        return (st, b, ob, ct), (cs, cv)
+
+    (state, bg, outbox, count), (cslots, cvals) = jax.lax.scan(
+        step, (state, bg, outbox, count), rows)
+
+    state, bg, outbox, count = B.bg_step(state, bg, me, outbox, count, cfg)
+    return RoundOut(state=state, bg=bg, outbox=outbox, out_count=count,
+                    comp_slot=cslots, comp_val=cvals)

@@ -1,0 +1,257 @@
+"""Cluster simulator: N shards, reliable FIFO routing, round-based execution.
+
+This is the single-host execution backend for the DiLi runtime. Each round:
+
+  1. every shard consumes its inbox + a batch of fresh client ops
+     (``shard.shard_round`` — one jit compilation reused by all shards),
+  2. outboxes are routed host-side into next-round inboxes (per-(src,dst)
+     FIFO preserved; undeliverable overflow is backlogged, never dropped —
+     the reliable-channel condition of conditional lock-freedom).
+
+An optional ``delay_rng`` holds back whole (src,dst) channels for a round to
+exercise out-of-order-across-pairs delivery (replay retries must heal).
+
+The shard_map/TPU backend with ``all_to_all`` routing lives in
+``distributed.py``; it runs the same ``shard_round``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import background as B
+from . import messages as M
+from . import refs
+from .shard import shard_round
+from .types import (DiLiConfig, KEY_MAX, KEY_MIN, OP_FIND, OP_INSERT,
+                    OP_REMOVE, SH_KEY, ST_KEY, ShardState, init_shard)
+
+
+class Cluster:
+    def __init__(self, cfg: DiLiConfig, *, seed: int = 0,
+                 delay_prob: float = 0.0,
+                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
+        self.cfg = cfg
+        self.n = cfg.num_shards
+        # shard 0 bootstraps the full key range; the others hold registry
+        # replicas routing to it (the paper's lazily-replicated registry
+        # starts synchronized).
+        self.states: List[ShardState] = [
+            init_shard(cfg, s, bootstrap=(s == 0),
+                       key_lo=key_lo, key_hi=key_hi)
+            for s in range(self.n)
+        ]
+        from . import registry as reg_ops
+        for s in range(1, self.n):
+            st = self.states[s]
+            reg = reg_ops.add_entry(
+                st.registry, key_lo - 1, key_hi,
+                refs.make_ref(0, 0), refs.make_ref(0, 1), 0, 0)
+            self.states[s] = st._replace(registry=reg)
+        self.bgs: List[B.BgState] = [B.init_bg() for _ in range(self.n)]
+        self.in_cap = max(cfg.mailbox_cap * self.n, cfg.batch_size * 2)
+        self.inboxes = [np.zeros((0, M.FIELDS), np.int32)
+                        for _ in range(self.n)]
+        self.backlog = [np.zeros((0, M.FIELDS), np.int32)
+                        for _ in range(self.n)]
+        self.results: Dict[int, int] = {}
+        self._next_slot = 0
+        self._pending_ops: Dict[int, Tuple[int, int]] = {}
+        self.round_no = 0
+        self.delay_prob = delay_prob
+        self.rng = np.random.default_rng(seed)
+        self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0}
+
+    # ------------------------------------------------------------ client API
+    def submit(self, shard: int, kinds: Sequence[int],
+               keys: Sequence[int],
+               values: Optional[Sequence[int]] = None) -> List[int]:
+        """Enqueue fresh client ops at their assigned server ``shard``.
+
+        Returns op ids; results appear in ``self.results`` once linearized.
+        ``values`` ride with inserts (item payload, e.g. a KV-page slot).
+        """
+        ids = []
+        rows = []
+        if values is None:
+            values = [0] * len(list(keys))
+        for kind, key, val in zip(kinds, keys, values):
+            slot = self._next_slot
+            self._next_slot += 1
+            row = np.zeros((M.FIELDS,), np.int32)
+            row[M.F_KIND] = M.MSG_OP
+            row[M.F_DST] = shard
+            row[M.F_SRC] = shard
+            row[M.F_A] = int(kind)
+            row[M.F_KEY] = int(key)
+            row[M.F_REF1] = np.int64(refs.NULL_REF).astype(np.int32)
+            row[M.F_SID] = shard
+            row[M.F_TS] = slot
+            row[M.F_VAL] = int(val)
+            rows.append(row)
+            ids.append(slot)
+            self._pending_ops[slot] = (int(kind), int(key))
+        if rows:
+            self.backlog[shard] = np.concatenate(
+                [self.backlog[shard], np.stack(rows)], axis=0)
+        return ids
+
+    # ------------------------------------------------------------- execution
+    def step(self) -> int:
+        """One synchronized round across all shards. Returns #completed."""
+        cfg = self.cfg
+        outs = []
+        for s in range(self.n):
+            # feed: backlog first (FIFO), bounded by in_cap
+            feed = self.backlog[s][:self.in_cap]
+            self.backlog[s] = self.backlog[s][self.in_cap:]
+            inbox = np.zeros((self.in_cap, M.FIELDS), np.int32)
+            inbox[:feed.shape[0]] = feed
+            client = np.zeros((0, M.FIELDS), np.int32)
+            out = shard_round(self.states[s], self.bgs[s], s,
+                              jnp.asarray(inbox),
+                              jnp.asarray(client.reshape(0, M.FIELDS)),
+                              cfg)
+            outs.append(out)
+
+        ndone = 0
+        new_msgs: List[np.ndarray] = []
+        for s, out in enumerate(outs):
+            self.states[s] = out.state
+            self.bgs[s] = out.bg
+            cnt = int(out.out_count)
+            self.stats["max_outbox"] = max(self.stats["max_outbox"], cnt)
+            assert cnt <= cfg.mailbox_cap, "outbox overflow — raise cap"
+            ob = np.asarray(out.outbox)[:cnt]
+            if ob.size:
+                new_msgs.append(ob)
+                hops = ob[ob[:, M.F_KIND] == M.MSG_OP, M.F_X2]
+                if hops.size:
+                    self.stats["max_hops"] = max(self.stats["max_hops"],
+                                                 int(hops.max()))
+            cs = np.asarray(out.comp_slot)
+            cv = np.asarray(out.comp_val)
+            for slot, val in zip(cs[cs >= 0], cv[cs >= 0]):
+                self.results[int(slot)] = int(val)
+                self._pending_ops.pop(int(slot), None)
+                ndone += 1
+
+        # ------------------------------------------------ route (FIFO/pair)
+        if new_msgs:
+            allm = np.concatenate(new_msgs, axis=0)
+            for d in range(self.n):
+                mine = allm[allm[:, M.F_DST] == d]
+                if self.delay_prob > 0.0 and mine.size:
+                    # hold back whole (src,dst) channels — preserves pair
+                    # FIFO while exercising cross-pair reordering
+                    srcs = np.unique(mine[:, M.F_SRC])
+                    held = srcs[self.rng.random(srcs.shape) < self.delay_prob]
+                    hold_mask = np.isin(mine[:, M.F_SRC], held)
+                    later, now = mine[hold_mask], mine[~hold_mask]
+                    self.backlog[d] = np.concatenate(
+                        [self.backlog[d], now, later], axis=0)
+                else:
+                    self.backlog[d] = np.concatenate(
+                        [self.backlog[d], mine], axis=0)
+        self.round_no += 1
+        self.stats["rounds"] += 1
+        return ndone
+
+    def run(self, rounds: int) -> None:
+        for _ in range(rounds):
+            self.step()
+
+    def run_until_quiet(self, max_rounds: int = 200) -> None:
+        """Step until no messages are in flight and all bg ops are idle."""
+        for _ in range(max_rounds):
+            self.step()
+            busy = any(b.shape[0] for b in self.backlog)
+            busy = busy or any(int(bg.phase) != B.BG_IDLE for bg in self.bgs)
+            busy = busy or bool(self._pending_ops)
+            if not busy:
+                return
+        raise RuntimeError(
+            f"cluster did not quiesce: backlog="
+            f"{[b.shape[0] for b in self.backlog]} "
+            f"bg={[int(bg.phase) for bg in self.bgs]} "
+            f"pending={len(self._pending_ops)}")
+
+    # ----------------------------------------------------------- inspection
+    def shard_chain(self, s: int, head_idx: int, include_meta=False):
+        """Walk a chain from a subhead; returns live keys, or
+        (key, idx, value) triples with ``include_meta``."""
+        st = self.states[s]
+        nxt = np.asarray(st.pool.nxt)
+        key = np.asarray(st.pool.key)
+        vals = np.asarray(st.pool.keymax)
+        out = []
+        ref = int(nxt[head_idx])
+        for _ in range(int(self.cfg.max_scan) * 4):
+            idx = ref & refs.IDX_MASK
+            sid = (ref & refs.SID_MASK) >> refs.IDX_BITS
+            if idx == refs.NULL_IDX or sid != s:
+                break
+            k = int(key[idx])
+            marked = bool(int(nxt[idx]) & refs.MARK_BIT)
+            if k == ST_KEY:
+                break
+            if k != SH_KEY and not marked:
+                out.append((k, idx, int(vals[idx])) if include_meta else k)
+            ref = int(nxt[idx])
+        return out
+
+    def all_keys(self) -> List[int]:
+        """Global key set: union over every shard's owned sublists."""
+        keys: List[int] = []
+        for s in range(self.n):
+            st = self.states[s]
+            reg = st.registry
+            size = int(reg.size)
+            for e in range(size):
+                sh = int(np.asarray(reg.subhead)[e])
+                sid = (sh & refs.SID_MASK) >> refs.IDX_BITS
+                if sid != s:
+                    continue
+                head_idx = sh & refs.IDX_MASK
+                slot = int(np.asarray(st.pool.ctr)[head_idx])
+                if int(np.asarray(st.stct)[slot]) < 0:
+                    continue  # switched-away stale copy
+                keys.extend(self.shard_chain(s, head_idx))
+        return sorted(keys)
+
+    def sublists(self, s: int):
+        """(keymin, keymax, owner, size, head_idx, keymax_id) per entry."""
+        st = self.states[s]
+        reg = st.registry
+        out = []
+        for e in range(int(reg.size)):
+            sh = int(np.asarray(reg.subhead)[e])
+            sid = (sh & refs.SID_MASK) >> refs.IDX_BITS
+            head_idx = sh & refs.IDX_MASK
+            size = None
+            if sid == s:
+                size = len(self.shard_chain(s, head_idx))
+            out.append(dict(
+                keymin=int(np.asarray(reg.keymin)[e]),
+                keymax=int(np.asarray(reg.keymax)[e]),
+                owner=int(sid), size=size, head_idx=int(head_idx)))
+        return out
+
+    # ---------------------------------------------------------- bg commands
+    def split(self, s: int, entry_keymax: int, sitem_idx: int) -> None:
+        self.bgs[s] = B.queue_split(self.bgs[s], entry_keymax, sitem_idx)
+
+    def move(self, s: int, entry_keymax: int, target: int) -> None:
+        self.bgs[s] = B.queue_move(self.bgs[s], entry_keymax, target)
+
+    def merge(self, s: int, left_keymax: int, right_keymax: int) -> None:
+        self.bgs[s] = B.queue_merge(self.bgs[s], left_keymax, right_keymax)
+
+    def middle_item(self, s: int, head_idx: int) -> Optional[int]:
+        """Pool idx of the middle live item of a sublist (split point)."""
+        items = self.shard_chain(s, head_idx, include_meta=True)
+        if len(items) < 2:
+            return None
+        return items[len(items) // 2][1]

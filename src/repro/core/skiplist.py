@@ -1,0 +1,170 @@
+"""Lock-free-style skip list baseline (Fraser [11]) in functional JAX.
+
+The paper benchmarks DiLi against a lock-free skip list (Fig. 3a); this is
+that comparator under the same batched-linearization execution model as the
+DiLi core, so single-machine throughput comparisons are apples-to-apples:
+both implementations pay the same per-op JAX dispatch and differ only in
+traversal structure (O(log n) tower descent vs registry binary search +
+bounded scan).
+
+Deterministic tower heights come from a hash of the key (matching the
+standard p=1/2 geometric distribution in expectation), which keeps the
+structure reproducible across runs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+HEAD = 0          # sentinel node index (key = -inf)
+NIL = -1          # end-of-level
+
+
+class SkipList(NamedTuple):
+    key: jnp.ndarray      # int32[N]
+    nxt: jnp.ndarray      # int32[L, N]  next pointers per level
+    live: jnp.ndarray     # bool[N]
+    height: jnp.ndarray   # int32[N]
+    alloc_top: jnp.ndarray
+    free_list: jnp.ndarray
+    free_top: jnp.ndarray
+
+
+def _key_height(key, max_level: int):
+    """Deterministic geometric(1/2) height from a key hash."""
+    h = jnp.uint32(key) * jnp.uint32(0x9E3779B9)
+    h ^= h >> 16
+    h = h * jnp.uint32(0x85EBCA6B)
+    h ^= h >> 13
+    # count trailing ones => geometric
+    lvl = jnp.int32(1)
+    for i in range(max_level - 1):
+        lvl = lvl + ((h >> i) & 1).astype(jnp.int32) * (lvl == i + 1)
+    return jnp.clip(lvl, 1, max_level)
+
+
+def init(capacity: int, max_level: int) -> SkipList:
+    key = jnp.full((capacity,), -(2 ** 31), jnp.int32)
+    nxt = jnp.full((max_level, capacity), NIL, jnp.int32)
+    live = jnp.zeros((capacity,), bool).at[HEAD].set(True)
+    height = jnp.zeros((capacity,), jnp.int32).at[HEAD].set(max_level)
+    return SkipList(key=key, nxt=nxt, live=live, height=height,
+                    alloc_top=jnp.asarray(1, jnp.int32),
+                    free_list=jnp.full((capacity,), -1, jnp.int32),
+                    free_top=jnp.zeros((), jnp.int32))
+
+
+def _find_preds(sl: SkipList, key, max_level: int, max_steps: int):
+    """Descend the towers; returns preds[L] and the level-0 successor."""
+    def level_body(carry, lvl_rev):
+        node, steps = carry
+        lvl = max_level - 1 - lvl_rev
+
+        def cond(c):
+            node, steps = c
+            nx = sl.nxt[lvl, node]
+            ok = (nx != NIL)
+            nx_c = jnp.clip(nx, 0, sl.key.shape[0] - 1)
+            return ok & (sl.key[nx_c] < key) & (steps < max_steps)
+
+        def body(c):
+            node, steps = c
+            return sl.nxt[lvl, node], steps + 1
+
+        node, steps = jax.lax.while_loop(cond, body, (node, steps))
+        return (node, steps), node
+
+    (node, _), preds_rev = jax.lax.scan(
+        level_body, (jnp.asarray(HEAD, jnp.int32), jnp.zeros((), jnp.int32)),
+        jnp.arange(max_level))
+    preds = preds_rev[::-1]
+    succ = sl.nxt[0, node]
+    return preds, succ
+
+
+def find(sl: SkipList, key, max_level: int, max_steps: int = 1 << 30):
+    _, succ = _find_preds(sl, key, max_level, max_steps)
+    succ_c = jnp.clip(succ, 0, sl.key.shape[0] - 1)
+    return (succ != NIL) & (sl.key[succ_c] == key)
+
+
+def insert(sl: SkipList, key, max_level: int, max_steps: int = 1 << 30):
+    preds, succ = _find_preds(sl, key, max_level, max_steps)
+    succ_c = jnp.clip(succ, 0, sl.key.shape[0] - 1)
+    present = (succ != NIL) & (sl.key[succ_c] == key)
+
+    has_free = sl.free_top > 0
+    free_idx = sl.free_list[jnp.clip(sl.free_top - 1, 0, None)]
+    bump_ok = sl.alloc_top < sl.key.shape[0]
+    idx = jnp.where(has_free, free_idx, sl.alloc_top)
+    ok = (~present) & (has_free | bump_ok)
+
+    h = _key_height(key, max_level)
+    lvl_idx = jnp.arange(max_level)
+    in_tower = (lvl_idx < h) & ok
+    # splice: new.nxt[l] = preds[l].nxt[l]; preds[l].nxt[l] = idx
+    pred_next = sl.nxt[lvl_idx, preds]
+    nxt = sl.nxt
+    nxt = jnp.where(in_tower[:, None],
+                    nxt.at[lvl_idx, idx].set(pred_next), nxt)
+    nxt = jnp.where(in_tower[:, None],
+                    nxt.at[lvl_idx, preds].set(idx), nxt)
+
+    sl = sl._replace(
+        key=jnp.where(ok, sl.key.at[idx].set(key), sl.key),
+        live=jnp.where(ok, sl.live.at[idx].set(True), sl.live),
+        height=jnp.where(ok, sl.height.at[idx].set(h), sl.height),
+        nxt=nxt,
+        free_top=sl.free_top - (ok & has_free).astype(jnp.int32),
+        alloc_top=sl.alloc_top + (ok & ~has_free & bump_ok).astype(jnp.int32),
+    )
+    return sl, ok
+
+
+def remove(sl: SkipList, key, max_level: int, max_steps: int = 1 << 30):
+    preds, succ = _find_preds(sl, key, max_level, max_steps)
+    succ_c = jnp.clip(succ, 0, sl.key.shape[0] - 1)
+    present = (succ != NIL) & (sl.key[succ_c] == key)
+    idx = succ_c
+    h = sl.height[idx]
+    lvl_idx = jnp.arange(max_level)
+    in_tower = (lvl_idx < h) & present
+    # unsplice every level where pred points at idx
+    pred_next = sl.nxt[lvl_idx, preds]
+    tgt = sl.nxt[lvl_idx, idx]
+    do = in_tower & (pred_next == idx)
+    nxt = jnp.where(do[:, None], sl.nxt.at[lvl_idx, preds].set(tgt), sl.nxt)
+    pos = jnp.clip(sl.free_top, 0, sl.free_list.shape[0] - 1)
+    sl = sl._replace(
+        nxt=nxt,
+        live=jnp.where(present, sl.live.at[idx].set(False), sl.live),
+        key=jnp.where(present, sl.key.at[idx].set(-(2 ** 31)), sl.key),
+        free_list=jnp.where(present, sl.free_list.at[pos].set(idx),
+                            sl.free_list),
+        free_top=sl.free_top + present.astype(jnp.int32),
+    )
+    return sl, present
+
+
+def apply_batch(sl: SkipList, kinds, keys, max_level: int):
+    """Sequentially linearized batch, mirroring the DiLi round model."""
+    from .types import OP_FIND, OP_INSERT, OP_REMOVE
+
+    def step(sl, x):
+        kind, key = x
+        f = find(sl, key, max_level)
+        sl_i, r_i = insert(sl, key, max_level)
+        sl_r, r_r = remove(sl, key, max_level)
+        is_i = kind == OP_INSERT
+        is_r = kind == OP_REMOVE
+        sl = jax.tree_util.tree_map(
+            lambda a, b, c: jnp.where(is_i, b, jnp.where(is_r, c, a)),
+            sl, sl_i, sl_r)
+        res = jnp.where(kind == OP_FIND, f,
+                        jnp.where(is_i, r_i, r_r)).astype(jnp.int32)
+        return sl, res
+
+    return jax.lax.scan(step, sl, (jnp.asarray(kinds, jnp.int32),
+                                   jnp.asarray(keys, jnp.int32)))

@@ -1,0 +1,143 @@
+"""Distributed list traversal — the paper's Algorithm 2 ``Search``.
+
+Hybrid search: the registry binary search picked the subhead; here we do the
+bounded linear traversal of one (or more, when crossing subtails mid-split)
+sublists, Harris-style: marked nodes encountered are delinked on the way.
+
+Status codes returned:
+  * ``S_FOUND``    — right node located (first unmarked node with key' >= key
+                     inside the covering sublist, or that sublist's SubTail).
+  * ``S_DELEGATE`` — traversal left this shard's ownership: either the chain
+                     crossed to a node owned by another shard (curr.id != me,
+                     Line 41-42) or the sublist moved (stCt < 0 → head.newLoc,
+                     Lines 23-28/53-55). ``deleg`` carries the subhead Ref to
+                     continue from on the owner.
+  * ``S_OVERFLOW`` — exceeded cfg.max_scan steps. Cannot happen while the load
+                     balancer keeps sublists below the split threshold; tests
+                     assert it never fires.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import refs
+from .types import DiLiConfig, ShardState, SH_KEY, ST_KEY
+
+S_FOUND = 0
+S_DELEGATE = 1
+S_OVERFLOW = 2
+
+
+class SearchOut(NamedTuple):
+    status: jnp.ndarray   # int32
+    left: jnp.ndarray     # int32 pool index of left node (valid if FOUND)
+    right: jnp.ndarray    # int32 pool index of right node (valid if FOUND)
+    head: jnp.ndarray     # int32 pool index of covering sublist's SubHead
+    deleg: jnp.ndarray    # uint32 Ref to delegate to (valid if DELEGATE)
+    nxt: jnp.ndarray      # updated pool.nxt (delinks applied)
+    free_list: jnp.ndarray
+    free_top: jnp.ndarray
+
+
+def search(state: ShardState, head_idx, key, me, cfg: DiLiConfig) -> SearchOut:
+    """Traverse from subhead ``head_idx`` for ``key`` on shard ``me``.
+
+    Mutates (functionally) only pool.nxt (delinking) and the free list.
+    A delinked node's slot is recycled; acknowledgement writes to recycled
+    slots are guarded by the <sId, ts> identity check (see ops.py), the
+    TPU-round analogue of hazard-pointer safety.
+    """
+    pool = state.pool
+    nxt0 = pool.nxt
+    key = jnp.asarray(key, jnp.int32)
+    me = jnp.asarray(me, jnp.int32)
+    head_idx = jnp.asarray(head_idx, jnp.int32)
+
+    def moved(idx):
+        # blue-line check: stCt of the node's counter slot went negative
+        return state.stct[pool.ctr[idx]] < 0
+
+    # carry: (nxt, free_list, free_top, prev, curr_ref, head, status, deleg, steps)
+    def cond(c):
+        return (c[6] < 0) & (c[8] < cfg.max_scan)
+
+    def body(c):
+        nxt, flist, ftop, prev, curr_ref, head, status, deleg, steps = c
+        curr_sid = refs.ref_sid(curr_ref)
+        curr_idx = refs.ref_idx(curr_ref)
+
+        # --- crossed onto another shard's node (Line 41-42): delegate there.
+        remote = curr_sid != me
+        # --- node on a moved sublist (stCt < 0): delegate via head.newLoc.
+        safe_idx = jnp.where(remote, 0, curr_idx)
+        is_moved = (~remote) & moved(safe_idx)
+
+        curr_key = pool.key[safe_idx]
+        curr_nxt = nxt[safe_idx]
+        curr_marked = refs.ref_mark(curr_nxt)
+        is_sh = curr_key == SH_KEY
+        is_st = curr_key == ST_KEY
+
+        # entering a new sublist: its SubHead becomes the delegation anchor
+        head2 = jnp.where((~remote) & is_sh, safe_idx, head)
+
+        deleg_ref = jnp.where(remote, refs.unmarked(curr_ref),
+                              refs.unmarked(pool.newloc[head2]))
+        stop_deleg = remote | is_moved
+
+        # --- marked node (and not a sentinel): delink it (Harris helping).
+        # Exception (§5.4): items of a sublist being moved (newLoc set) stay
+        # linked — the mover still references them (its cursor) and the paper
+        # delinks them "once the cloned sublist becomes active", on the
+        # target. Recycling such a slot would dangle the move cursor.
+        do_delink = (~stop_deleg) & curr_marked & (~is_sh) & (~is_st) & \
+            refs.is_null(pool.newloc[safe_idx])
+        unlinked_to = refs.unmarked(curr_nxt)
+        nxt = jnp.where(do_delink, nxt.at[prev].set(unlinked_to), nxt)
+        # recycle the slot
+        pos = jnp.clip(ftop, 0, flist.shape[0] - 1)
+        flist = jnp.where(do_delink, flist.at[pos].set(curr_idx), flist)
+        ftop = ftop + do_delink.astype(jnp.int32)
+
+        # --- SubTail: stop here if key is covered (red lines 37-39), else
+        #     cross into the next sublist (red line 40).
+        st_stop = (~stop_deleg) & is_st & (key <= pool.keymax[safe_idx])
+        st_cross = (~stop_deleg) & is_st & (~st_stop)
+
+        # --- ordinary stop: first node with key' >= key.
+        ord_stop = (~stop_deleg) & (~do_delink) & (~is_st) & (~is_sh) & \
+            (curr_key >= key)
+
+        stop_found = st_stop | ord_stop
+        advance = (~stop_deleg) & (~do_delink) & (~stop_found)
+
+        prev2 = jnp.where(advance, safe_idx, prev)
+        next_ref = jnp.where(do_delink, unlinked_to, nxt[safe_idx])
+        curr_ref2 = jnp.where(advance | do_delink, next_ref, curr_ref)
+
+        status2 = jnp.where(stop_deleg, S_DELEGATE,
+                            jnp.where(stop_found, S_FOUND, status))
+        return (nxt, flist, ftop, prev2, curr_ref2, head2, status2,
+                jnp.where(stop_deleg, deleg_ref, deleg), steps + 1)
+
+    init = (nxt0, state.free_list, state.free_top,
+            head_idx, nxt0[head_idx], head_idx,
+            jnp.asarray(-1, jnp.int32), refs.null_ref(),
+            jnp.zeros((), jnp.int32))
+    nxt, flist, ftop, prev, curr_ref, head, status, deleg, _ = \
+        jax.lax.while_loop(cond, body, init)
+
+    status = jnp.where(status < 0, S_OVERFLOW, status)
+    return SearchOut(
+        status=status.astype(jnp.int32),
+        left=prev,
+        right=refs.ref_idx(curr_ref),
+        head=head,
+        deleg=deleg,
+        nxt=nxt,
+        free_list=flist,
+        free_top=ftop,
+    )

@@ -1,0 +1,172 @@
+"""State containers for DiLi (Algorithm 1 of the paper, array-of-structs form).
+
+Everything is a NamedTuple of JAX arrays so states are pytrees: jit-able,
+shard_map-able and checkpointable with the rest of the framework.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import refs
+
+# Sentinel keys. Real keys must lie strictly between them.
+SH_KEY = -(2**31)          # SubHead
+ST_KEY = 2**31 - 1         # SubTail
+KEY_MIN = SH_KEY + 1
+KEY_MAX = ST_KEY - 1
+NEG_INF_CT = np.int32(-(2**31))  # the paper's stCt := -infinity
+
+# Op kinds (client ops §5.2)
+OP_NOP = 0
+OP_FIND = 1
+OP_INSERT = 2
+OP_REMOVE = 3
+
+# Result codes
+RES_FALSE = 0
+RES_TRUE = 1
+RES_PENDING = -1      # not yet applied (e.g. delegated to another shard)
+
+
+class DiLiConfig(NamedTuple):
+    """Static capacities — all shapes derive from these (jit-static)."""
+    num_shards: int = 1
+    pool_capacity: int = 4096        # nodes per shard
+    max_sublists: int = 256          # registry entries (global)
+    max_ctrs: int = 256              # counter-slot pairs per shard
+    max_scan: int = 512              # traversal bound (>= split_threshold + slack)
+    batch_size: int = 64             # client ops per shard per round
+    mailbox_cap: int = 64            # delegation/replicate slots per shard-pair round
+    split_threshold: int = 125       # the paper's load-balancer threshold (§7.1)
+    move_batch: int = 8              # MoveItem messages in flight per round
+    quarantine_rounds: int = 4       # rounds before a switched chain is freed
+    max_retries: int = 64            # replay requeue bound (tests assert << this)
+
+
+class Pool(NamedTuple):
+    """Per-shard node pool — the paper's ``struct Item`` fields, columnar.
+
+    ``nxt`` carries the deletion mark of the *owning* node in its mark bit,
+    exactly like Harris / the paper (mark lives on the next pointer).
+    """
+    key: jnp.ndarray      # int32[N]
+    nxt: jnp.ndarray      # uint32[N] packed Ref (mark|sid|idx)
+    ts: jnp.ndarray       # int32[N] logical timestamp at creation (Line 189)
+    sid: jnp.ndarray      # int32[N] origin server id — <sId, ts> identity (§5.4)
+    ctr: jnp.ndarray      # int32[N] counter-slot this node charges (stCt/endCt)
+    newloc: jnp.ndarray   # uint32[N] Ref of the moved copy (NULL unless moving)
+    keymax: jnp.ndarray   # int32[N] subtail keyMax (red lines 37-45); 0 otherwise
+
+
+class Registry(NamedTuple):
+    """The lazily-replicated sorted index (§5.1 / Algorithm 6).
+
+    Entries sorted by keymin; entry i covers [keymin[i], keymax[i]).
+    JAX immutability makes every update copy-on-write by construction.
+    """
+    keymin: jnp.ndarray   # int32[M]
+    keymax: jnp.ndarray   # int32[M]
+    subhead: jnp.ndarray  # uint32[M] packed Ref (owner shard in sid bits)
+    subtail: jnp.ndarray  # uint32[M]
+    ctr: jnp.ndarray      # int32[M] counter slot on the owner shard
+    offset: jnp.ndarray   # int32[M] the paper's sublist offset (§5.3)
+    size: jnp.ndarray     # int32[] live entry count
+
+
+class ShardState(NamedTuple):
+    """Everything one 'server' (device) owns."""
+    pool: Pool
+    stct: jnp.ndarray       # int32[C] start counters
+    endct: jnp.ndarray      # int32[C] end counters
+    alloc_top: jnp.ndarray  # int32[] bump allocator head for pool
+    free_list: jnp.ndarray  # int32[N] stack of freed node slots
+    free_top: jnp.ndarray   # int32[] stack height
+    ctr_top: jnp.ndarray    # int32[] bump allocator for counter slots
+    ts_clock: jnp.ndarray   # int32[] logical clock (the paper's ts.fetch_add)
+    registry: Registry      # this shard's (possibly stale) replica
+
+
+class OpBatch(NamedTuple):
+    """A round's client operations for one shard."""
+    kind: jnp.ndarray     # int32[B] OP_*
+    key: jnp.ndarray      # int32[B]
+
+
+def empty_registry(cfg: DiLiConfig) -> Registry:
+    m = cfg.max_sublists
+    return Registry(
+        keymin=jnp.full((m,), ST_KEY, jnp.int32),
+        keymax=jnp.full((m,), ST_KEY, jnp.int32),
+        subhead=jnp.full((m,), refs.NULL_REF, refs.REF_DTYPE),
+        subtail=jnp.full((m,), refs.NULL_REF, refs.REF_DTYPE),
+        ctr=jnp.zeros((m,), jnp.int32),
+        offset=jnp.zeros((m,), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def empty_pool(cfg: DiLiConfig) -> Pool:
+    n = cfg.pool_capacity
+    assert n < refs.POOL_LIMIT, "pool exceeds 22-bit index space"
+    return Pool(
+        key=jnp.zeros((n,), jnp.int32),
+        nxt=jnp.full((n,), refs.NULL_REF, refs.REF_DTYPE),
+        ts=jnp.zeros((n,), jnp.int32),
+        sid=jnp.zeros((n,), jnp.int32),
+        ctr=jnp.zeros((n,), jnp.int32),
+        newloc=jnp.full((n,), refs.NULL_REF, refs.REF_DTYPE),
+        keymax=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def init_shard(cfg: DiLiConfig, sid: int, *, bootstrap: bool = False,
+               key_lo: int = KEY_MIN, key_hi: int = KEY_MAX) -> ShardState:
+    """Fresh shard. If ``bootstrap``, seed one sublist (key_lo-1, key_hi] here.
+
+    The bootstrap sublist is SubHead -> SubTail with counter slot 0, mirroring
+    the paper's initial single-sublist list. Registry ranges are half-open
+    (keymin, keymax] per Algorithm 6, so the stored keymin is key_lo - 1.
+    """
+    pool = empty_pool(cfg)
+    reg = empty_registry(cfg)
+    alloc_top = jnp.zeros((), jnp.int32)
+    ctr_top = jnp.zeros((), jnp.int32)
+
+    if bootstrap:
+        # node 0 = SH, node 1 = ST
+        sh_ref = refs.make_ref(sid, 0)
+        st_ref = refs.make_ref(sid, 1)
+        pool = pool._replace(
+            key=pool.key.at[0].set(SH_KEY).at[1].set(ST_KEY),
+            nxt=pool.nxt.at[0].set(st_ref),
+            keymax=pool.keymax.at[1].set(key_hi),
+            ctr=pool.ctr.at[0].set(0).at[1].set(0),
+            ts=pool.ts.at[0].set(0).at[1].set(1),
+            sid=pool.sid.at[0].set(sid).at[1].set(sid),
+        )
+        reg = reg._replace(
+            keymin=reg.keymin.at[0].set(key_lo - 1),
+            keymax=reg.keymax.at[0].set(key_hi),
+            subhead=reg.subhead.at[0].set(sh_ref),
+            subtail=reg.subtail.at[0].set(st_ref),
+            ctr=reg.ctr.at[0].set(0),
+            offset=reg.offset.at[0].set(0),
+            size=jnp.ones((), jnp.int32),
+        )
+        alloc_top = jnp.asarray(2, jnp.int32)
+        ctr_top = jnp.asarray(1, jnp.int32)
+
+    return ShardState(
+        pool=pool,
+        stct=jnp.zeros((cfg.max_ctrs,), jnp.int32),
+        endct=jnp.zeros((cfg.max_ctrs,), jnp.int32),
+        alloc_top=alloc_top,
+        free_list=jnp.full((cfg.pool_capacity,), -1, jnp.int32),
+        free_top=jnp.zeros((), jnp.int32),
+        ctr_top=ctr_top,
+        ts_clock=jnp.asarray(2, jnp.int32),
+        registry=reg,
+    )

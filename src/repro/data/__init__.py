@@ -1,0 +1,1 @@
+from . import synthetic, ycsb  # noqa: F401

@@ -1,0 +1,47 @@
+"""YCSB-style zipfian op-stream generator (paper §7.2).
+
+Workloads: a load phase of N inserts, then a mixed phase with the paper's
+read proportions (10% / 50% / 90%), writes split evenly between inserts and
+removes, keys drawn zipfian — matching the evaluation protocol of the paper.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
+
+
+def zipf_keys(rng: np.random.Generator, n: int, key_space: int,
+              theta: float = 0.99) -> np.ndarray:
+    """Zipfian over [1, key_space] via the standard YCSB skew parameter."""
+    # numpy's zipf is unbounded; rejection-sample into the key space
+    out = np.empty(n, np.int64)
+    filled = 0
+    while filled < n:
+        cand = rng.zipf(1.0 + (1.0 - theta) + 1e-3, size=2 * (n - filled))
+        cand = cand[cand <= key_space]
+        take = min(cand.size, n - filled)
+        out[filled:filled + take] = cand[:take]
+        filled += take
+    return out.astype(np.int32)
+
+
+def load_phase(n_keys: int, key_space: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    keys = rng.permutation(key_space)[:n_keys] + 1
+    kinds = np.full(n_keys, OP_INSERT, np.int32)
+    return kinds, keys.astype(np.int32)
+
+
+def mixed_phase(n_ops: int, key_space: int, read_frac: float,
+                seed: int = 0):
+    rng = np.random.default_rng(seed + 1)
+    keys = zipf_keys(rng, n_ops, key_space)
+    r = rng.random(n_ops)
+    w = (1.0 - read_frac) / 2.0
+    kinds = np.where(r < read_frac, OP_FIND,
+                     np.where(r < read_frac + w, OP_INSERT,
+                              OP_REMOVE)).astype(np.int32)
+    return kinds, keys

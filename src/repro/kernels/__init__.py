@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see ref.py)."""
+from . import ops, ref  # noqa: F401

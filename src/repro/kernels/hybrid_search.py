@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: DiLi hybrid search (registry binary search + bounded
+sublist scan) for batched key lookups — the paper's §4 "hybrid search",
+restructured for the TPU memory hierarchy.
+
+Hardware adaptation (DESIGN.md §2): the C++ DiLi chases ``next`` pointers —
+a latency-bound random walk that is hostile to the TPU's vector unit. The
+paper itself notes (§8) that the chunked-sublist optimization of Braginsky &
+Petrank "is also applicable to the sublists of DiLi". We apply it: each
+sublist's keys live in a contiguous, sorted, fixed-capacity block (the load
+balancer's split threshold bounds occupancy), so the hybrid search becomes
+
+    1. vectorized binary search over the registry's keymin column (VMEM),
+    2. one VMEM row gather + a vectorized compare over the sublist block,
+
+which is exactly the paper's "logarithmic index + bounded linear scan", with
+the linear scan now a single VPU sweep instead of ~125 dependent loads.
+
+Layout:
+  * ``keymin``  int32[M]      — registry, padding rows = INT32_MAX
+  * ``blocks``  int32[M, C]   — per-sublist sorted keys, padding = INT32_MAX
+  * ``queries`` int32[B]      — keys to look up
+Returns:
+  * ``slot``  int32[B] — M*C-flattened position of the match (or insertion
+                         point) — this is the "page slot" the serving layer
+                         addresses
+  * ``found`` bool[B]
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(keymin_ref, blocks_ref, q_ref, slot_ref, found_ref, *,
+            levels: int):
+    q = q_ref[...]                       # [TQ]
+    keymin = keymin_ref[...]             # [M]
+    m = keymin.shape[0]
+
+    # --- registry binary search: entry covers keys > keymin[i] (Alg. 6)
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, m - 1, jnp.int32)
+    for _ in range(levels):
+        mid = (lo + hi + 1) // 2
+        go = keymin[mid] < q             # vectorized VMEM gather
+        lo = jnp.where(go, mid, lo)
+        hi = jnp.where(go, hi, mid - 1)
+    entry = lo                           # [TQ]
+
+    # --- bounded "linear traversal": one row gather + vector compare
+    rows = blocks_ref[...][entry]        # [TQ, C]
+    eq = rows == q[:, None]
+    ge = rows >= q[:, None]
+    pos = jnp.argmax(ge, axis=1).astype(jnp.int32)   # insertion point
+    found = jnp.any(eq, axis=1)
+    slot_ref[...] = entry * rows.shape[1] + pos
+    found_ref[...] = found
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "interpret"))
+def hybrid_search(keymin, blocks, queries, *, tile_q: int = 128,
+                  interpret: bool = True):
+    """Batched DiLi lookup. See module docstring for layout contracts."""
+    b = queries.shape[0]
+    m, c = blocks.shape
+    assert b % tile_q == 0, (b, tile_q)
+    levels = max(1, math.ceil(math.log2(max(m, 2))))
+
+    grid = (b // tile_q,)
+    return pl.pallas_call(
+        functools.partial(_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),          # registry: resident
+            pl.BlockSpec((m, c), lambda i: (0, 0)),      # blocks: resident
+            pl.BlockSpec((tile_q,), lambda i: (i,)),     # query tile
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q,), lambda i: (i,)),
+            pl.BlockSpec((tile_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(keymin, blocks, queries)

@@ -1,0 +1,38 @@
+"""Public jit'd entry points for the kernels package.
+
+``interpret`` defaults to True on CPU (this container) and False when a real
+TPU backend is present — the kernels are written for TPU BlockSpec tiling
+and validated against ``ref.py`` in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref as ref_ops
+from .hybrid_search import hybrid_search as _hybrid_search
+from .paged_attention import paged_attention as _paged_attention
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hybrid_search(keymin, blocks, queries, *, tile_q: int = 128,
+                  interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _hybrid_search(keymin, blocks, queries, tile_q=tile_q,
+                          interpret=interpret)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                    page_size: int, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                            page_size=page_size, interpret=interpret)
+
+
+# re-exported oracles
+hybrid_search_ref = ref_ops.hybrid_search_ref
+paged_attention_ref = ref_ops.paged_attention_ref

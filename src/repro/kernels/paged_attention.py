@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: paged decode attention over a DiLi page table.
+
+The serving layer stores KV pages in per-device pools indexed by a DiLi
+registry (DESIGN.md §3.1); a decode step gathers each sequence's pages via
+the page table produced by ``hybrid_search`` and attends over them. This is
+the compute hot-spot of the decode path (memory-bandwidth-bound at batch
+decode), so it gets a flash-decode style kernel:
+
+  grid = (batch, pages_per_seq)  — pages innermost, sequential on TPU, so a
+  VMEM scratch accumulator carries the running (max, sum, weighted-V) across
+  a sequence's pages; the page table and sequence lengths ride in scalar
+  prefetch so each page's BlockSpec index_map can do the indirection
+  (HBM -> VMEM copy of exactly one page per step, no host gather).
+
+GQA: query heads are grouped onto KV heads inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, seq_len_ref,      # scalar prefetch
+            q_ref, k_ref, v_ref,              # VMEM tiles
+            o_ref,                            # output tile
+            m_scr, l_scr, acc_scr,            # VMEM scratch
+            *, page_size: int, groups: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    num_pages = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0]                # [H, D]
+    k = k_ref[0]                # [S, KH, D]
+    v = v_ref[0]                # [S, KH, D]
+    h, d = q.shape
+    s, kh, _ = k.shape
+
+    qg = q.reshape(kh, groups, d)
+    # scores[kh, g, s]
+    scores = jnp.einsum("kgd,skd->kgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (d ** -0.5)
+
+    # mask positions beyond this sequence's length
+    base = p * page_size
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, s), 2)
+    valid = pos < seq_len_ref[b]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_scr[...]                       # [KH, G]
+    m_cur = jnp.max(scores, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(scores - m_new[..., None])          # [KH, G, S]
+    l_new = l_scr[...] * alpha + jnp.sum(pexp, axis=-1)
+    # acc[kh, g, d]
+    acc_new = acc_scr[...] * alpha[..., None] + \
+        jnp.einsum("kgs,skd->kgd", pexp, v,
+                   preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(p == num_pages - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).reshape(h, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                    page_size: int, interpret: bool = True):
+    """Decode attention.
+
+    q:          [B, H, D]
+    k_pages:    [P, S, KH, D]   (P = pool pages, S = page_size)
+    v_pages:    [P, S, KH, D]
+    page_table: [B, PP] int32   (DiLi slot per logical page; unused slots
+                                 may repeat a valid page — masked by length)
+    seq_lens:   [B] int32
+    returns     [B, H, D]
+    """
+    b, h, d = q.shape
+    _, s, kh, _ = k_pages.shape
+    assert s == page_size
+    pp = page_table.shape[1]
+    groups = h // kh
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, pp),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, p, pt, sl: (i, 0, 0)),
+            pl.BlockSpec((1, s, kh, d),
+                         lambda i, p, pt, sl: (pt[i, p], 0, 0, 0)),
+            pl.BlockSpec((1, s, kh, d),
+                         lambda i, p, pt, sl: (pt[i, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i, p, pt, sl: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kh, groups), jnp.float32),
+            pltpu.VMEM((kh, groups), jnp.float32),
+            pltpu.VMEM((kh, groups, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, groups=groups),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)

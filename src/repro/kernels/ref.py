@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every kernel in this package (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hybrid_search_ref(keymin, blocks, queries):
+    """Reference for kernels.hybrid_search: searchsorted + row scan."""
+    m, c = blocks.shape
+    # entry covers keys > keymin[i] — first i with keymin >= q, minus 1
+    entry = jnp.searchsorted(keymin, queries, side="left").astype(jnp.int32) - 1
+    entry = jnp.clip(entry, 0, m - 1)
+    rows = blocks[entry]                       # [B, C]
+    eq = rows == queries[:, None]
+    ge = rows >= queries[:, None]
+    pos = jnp.argmax(ge, axis=1).astype(jnp.int32)
+    found = jnp.any(eq, axis=1)
+    return entry * c + pos, found
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens, *,
+                        page_size: int):
+    """Reference paged decode attention: dense gather + masked softmax."""
+    b, h, d = q.shape
+    _, s, kh, _ = k_pages.shape
+    pp = page_table.shape[1]
+    groups = h // kh
+
+    k = k_pages[page_table].reshape(b, pp * s, kh, d)
+    v = v_pages[page_table].reshape(b, pp * s, kh, d)
+    qg = q.reshape(b, kh, groups, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,blkd->bkgl", qg, k.astype(jnp.float32))
+    scores = scores * (d ** -0.5)
+    pos = jnp.arange(pp * s)[None, None, None, :]
+    valid = pos < seq_lens[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

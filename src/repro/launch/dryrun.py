@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first init, and the production meshes below need 512 placeholder
+# host devices (2 pods x 16 x 16).
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import math            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config          # noqa: E402
+from repro.launch import roofline as R                  # noqa: E402
+from repro.launch.inputs import (activation_roles,      # noqa: E402
+                                 input_specs)
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.models import transformer as T               # noqa: E402
+from repro.models.config import SHAPES, shape_by_name   # noqa: E402
+from repro.optim import AdamWConfig                     # noqa: E402
+from repro.runtime import actctx                        # noqa: E402
+from repro.runtime.train import build_train_step        # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagates, collectives are supported, the program fits) and extracts the
+roofline terms (launch/roofline.py) from the compiled artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+  python -m repro.launch.dryrun --arch dili-service
+"""
+
+
+def cells_for(cfg):
+    """The shape cells an arch runs (long_500k only for sub-quadratic)."""
+    out = []
+    for cell in SHAPES:
+        if cell.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # full-attention archs skip 524k ctx (DESIGN.md §5)
+        out.append(cell)
+    return out
+
+
+def _compile_cell(cfg, cell, mesh):
+    """Lower+compile one cell's step for ``cfg``. Returns compiled exec."""
+    kind, args, shardings = input_specs(cfg, cell, mesh)
+    actctx.set_roles(**activation_roles(cfg, cell, mesh))
+    if kind == "train":
+        opt_cfg = AdamWConfig()
+        step, _ = build_train_step(cfg, opt_cfg, mesh, donate=True)
+        pshard, oshard, _ = shardings
+        fn = jax.jit(step, in_shardings=shardings,
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+    else:
+        decode = kind == "decode"
+        _, _, cshard, _ = shardings
+
+        def serve_step(params, batch, cache, cache_len):
+            return T.forward_serve(params, cfg, batch, cache, cache_len,
+                                   decode=decode)
+
+        fn = jax.jit(serve_step, in_shardings=shardings,
+                     out_shardings=(None, cshard), donate_argnums=(2,))
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return kind, compiled
+
+
+def _cost_triple(compiled, hlo_text=None):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = R.collective_bytes(text)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(sum(coll.values())), coll)
+
+
+def probe_costs(cfg, cell, mesh):
+    """Per-device (flops, bytes, coll_bytes) extrapolated to full depth.
+
+    XLA's cost_analysis counts a While body once regardless of trip count,
+    so the scanned full-depth program under-reports. Probes compile the
+    same cell *unrolled* at tiny depths and extrapolate linearly:
+      total = c(L0) + (depth - L0)/(L1 - L0) * (c(L1) - c(L0)).
+    """
+    if cfg.family == "hybrid":
+        p = max(cfg.hybrid_period, 1)
+        l0, l1 = p, 2 * p
+        groups = max(1, cfg.n_layers // p)
+        trailing = cfg.n_layers - groups * p
+        pc = cfg.replace(n_layers=l0, scan_layers=False)
+        _, c0 = _compile_cell(pc, cell, mesh)
+        pc = cfg.replace(n_layers=l1, scan_layers=False)
+        _, c1 = _compile_cell(pc, cell, mesh)
+        pc = cfg.replace(n_layers=l0 + 1, scan_layers=False)
+        _, cm = _compile_cell(pc, cell, mesh)
+        f0, b0, co0, _ = _cost_triple(c0)
+        f1, b1, co1, _ = _cost_triple(c1)
+        fm, bm, com, _ = _cost_triple(cm)
+
+        def tot(x0, x1, xm):
+            group = x1 - x0
+            mamba = xm - x0
+            return x0 + (groups - 1) * group + trailing * mamba
+
+        return tot(f0, f1, fm), tot(b0, b1, bm), tot(co0, co1, com)
+
+    l0, l1 = 1, 2
+    pc = cfg.replace(n_layers=l0, scan_layers=False)
+    _, c0 = _compile_cell(pc, cell, mesh)
+    pc = cfg.replace(n_layers=l1, scan_layers=False)
+    _, c1 = _compile_cell(pc, cell, mesh)
+    f0, b0, co0, _ = _cost_triple(c0)
+    f1, b1, co1, _ = _cost_triple(c1)
+    n = cfg.n_layers
+
+    def tot(x0, x1):
+        return x0 + (n - l0) * (x1 - x0)
+
+    return tot(f0, f1), tot(b0, b1), tot(co0, co1)
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool,
+             verbose: bool = True, probes: bool = True,
+             model_size: int = 16, overrides: dict | None = None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = shape_by_name(cell_name)
+    mesh = make_production_mesh(multi_pod=multi_pod, model_size=model_size)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    kind, compiled = _compile_cell(cfg, cell, mesh)
+    t1 = time.time()
+
+    hlo_text = compiled.as_text()
+    res = R.analyze(compiled, n_devices=n_dev, cfg=cfg, cell=cell,
+                    hlo_text=hlo_text)
+    mesh_name = ("2x" if multi_pod else "") + \
+        f"{256 // model_size}x{model_size}"
+    res.update(mesh=mesh_name, kind=kind,
+               compile_seconds=round(t1 - t0, 1))
+    if overrides:
+        res["overrides"] = {k: str(v) for k, v in overrides.items()}
+
+    if probes:
+        pf, pb, pc_ = probe_costs(cfg, cell, mesh)
+        res["flops_per_device"] = pf
+        res["bytes_per_device"] = pb
+        res["collective_bytes_per_device"] = pc_
+        terms = {"compute": pf / R.PEAK_FLOPS, "memory": pb / R.HBM_BW,
+                 "collective": pc_ / R.ICI_BW}
+        res["terms_seconds"] = terms
+        res["dominant"] = max(terms, key=terms.get)
+        mf_dev = res["model_flops_global"] / n_dev
+        res["useful_flops_ratio"] = mf_dev / pf if pf else 0.0
+        bound = max(terms.values())
+        res["roofline_mfu_bound"] = \
+            (mf_dev / R.PEAK_FLOPS) / bound if bound else 0.0
+        res["probe_extrapolated"] = True
+    if verbose:
+        mem = res["memory_analysis"]
+        print(f"[{arch} × {cell.name} × {res['mesh']}] kind={kind} "
+              f"compile={res['compile_seconds']}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  flops/dev={res['flops_per_device']:.3e} "
+              f"bytes/dev={res['bytes_per_device']:.3e} "
+              f"coll/dev={res['collective_bytes_per_device']:.3e}")
+        t = res["terms_seconds"]
+        print(f"  terms(s): compute={t['compute']:.4e} "
+              f"memory={t['memory']:.4e} collective={t['collective']:.4e} "
+              f"-> dominant={res['dominant']}")
+        print(f"  MODEL_FLOPS={res['model_flops_global']:.3e} "
+              f"useful/HLO={res['useful_flops_ratio']:.3f} "
+              f"roofline_MFU_bound={res['roofline_mfu_bound']:.3f}")
+    actctx.set_roles()
+    return res
+
+
+def run_dili_service(*, multi_pod: bool, verbose: bool = True):
+    """Dry-run the paper's own architecture: the DiLi service round."""
+    from repro.core import messages as M
+    from repro.core.distributed import make_dili_round, service_input_specs
+    from repro.core.types import DiLiConfig
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n = mesh.devices.size
+    cfg = DiLiConfig(num_shards=n, pool_capacity=1 << 16, max_sublists=512,
+                     max_ctrs=512, max_scan=2048, batch_size=64,
+                     mailbox_cap=192, move_batch=16)
+    cap_pair = 4
+    rnd = make_dili_round(mesh, cfg, cap_pair=cap_pair)
+    args = service_input_specs(cfg, n, n * cap_pair)
+    t0 = time.time()
+    with mesh:
+        lowered = rnd.lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+    hlo_text = compiled.as_text()
+    coll = R.collective_bytes(hlo_text)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    res = {
+        "arch": "dili-service", "cell": f"round_b{cfg.batch_size}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n, "kind": "service_round",
+        "compile_seconds": round(t1 - t0, 1),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "collective_bytes_per_device": float(sum(coll.values())),
+    }
+    if verbose:
+        print(f"[dili-service × {res['mesh']}] "
+              f"compile={res['compile_seconds']}s "
+              f"coll/dev={res['collective_bytes_per_device']:.3e} {coll}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id, or 'dili-service', or omit with --all")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--model-size", type=int, default=16)
+    ap.add_argument("--override", default="",
+                    help="comma k=v ArchConfig overrides")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    jobs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for cell in cells_for(get_config(a)):
+                for mp in meshes:
+                    jobs.append((a, cell.name, mp))
+        for mp in meshes:
+            jobs.append(("dili-service", None, mp))
+    else:
+        assert args.arch
+        if args.arch == "dili-service":
+            jobs = [("dili-service", None, mp) for mp in meshes]
+        elif args.shape:
+            jobs = [(args.arch, args.shape, mp) for mp in meshes]
+        else:
+            jobs = [(args.arch, c.name, mp) for mp in meshes
+                    for c in cells_for(get_config(args.arch))]
+
+    overrides = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        overrides[k] = eval(v)  # noqa: S307 - trusted CLI
+
+    results, failures = [], []
+    for arch, shape, mp in jobs:
+        try:
+            if arch == "dili-service":
+                res = run_dili_service(multi_pod=mp)
+            else:
+                res = run_cell(arch, shape, multi_pod=mp,
+                               model_size=args.model_size,
+                               overrides=overrides)
+            results.append(res)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append({"arch": arch, "cell": shape,
+                             "mesh": "2x16x16" if mp else "16x16",
+                             "error": f"{type(e).__name__}: {e}"})
+
+    print(f"\n=== dry-run: {len(results)} ok, {len(failures)} failed ===")
+    for f_ in failures:
+        print("FAILED:", f_)
+    return 0 if not failures else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,107 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins + shardings for every
+(arch × shape) cell — weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig, ShapeCell
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import sharding as S
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_sds(cfg: ArchConfig, cell: ShapeCell, *, decode: bool,
+              dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, s = cell.global_batch, cell.seq_len
+    t = 1 if decode else s
+    if cell.kind == "train":
+        if cfg.modality == "audio_stub":
+            return {"frame_embeds": _sds((b, s, cfg.d_model), dtype),
+                    "targets": _sds((b, s), jnp.int32)}
+        if cfg.modality == "vision_stub":
+            li = min(s // 2, 2048)
+            return {"patch_embeds": _sds((b, li, cfg.d_model), dtype),
+                    "tokens": _sds((b, s - li), jnp.int32),
+                    "targets": _sds((b, s), jnp.int32)}
+        return {"tokens": _sds((b, s), jnp.int32),
+                "targets": _sds((b, s), jnp.int32)}
+    # serving
+    if cfg.modality == "audio_stub":
+        return {"frame_embeds": _sds((b, t, cfg.d_model), dtype)}
+    if cfg.modality == "vision_stub" and not decode:
+        li = min(t // 2, 2048)
+        return {"patch_embeds": _sds((b, li, cfg.d_model), dtype),
+                "tokens": _sds((b, t - li), jnp.int32)}
+    return {"tokens": _sds((b, t), jnp.int32)}
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh, *,
+                dtype=jnp.bfloat16,
+                opt_cfg: AdamWConfig = AdamWConfig()):
+    """Returns (kind, args_sds, in_shardings) for the cell's step function.
+
+    kind: 'train' -> (params, opt_state, batch)
+          'prefill'/'decode' -> (params, batch, cache, cache_len)
+    """
+    params = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
+    pshard = S.param_shardings(params, mesh)
+
+    seq_axis = cell.global_batch < _dp_size(mesh)  # long-context: shard seq
+    if cell.kind == "train":
+        opt = jax.eval_shape(lambda p: adamw_init(p), params)
+        oshard = {"mu": pshard, "nu": pshard,
+                  "step": NamedSharding(mesh, P())}
+        batch = batch_sds(cfg, cell, decode=False, dtype=dtype)
+        bshard = S.batch_shardings(batch, mesh)
+        return "train", (params, opt, batch), (pshard, oshard, bshard)
+
+    decode = cell.kind == "decode"
+    batch = batch_sds(cfg, cell, decode=decode, dtype=dtype)
+    if seq_axis:
+        bshard = jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh, P()), batch)
+    else:
+        bshard = S.batch_shardings(batch, mesh)
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, cell.global_batch, cell.seq_len,
+                             dtype=dtype))
+    cshard = S.cache_shardings(cache, mesh, seq_axis=seq_axis)
+    clen = _sds((cell.global_batch,), jnp.int32)
+    clen_shard = NamedSharding(mesh, P())
+    return cell.kind, (params, batch, cache, clen), \
+        (pshard, bshard, cshard, clen_shard)
+
+
+def activation_roles(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    """Role -> sharding bindings for repro.runtime.actctx."""
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    roles = {}
+    if cell.kind in ("train", "prefill") and cfg.seq_parallel:
+        # sequence parallelism for the inter-layer hidden state
+        roles["hidden"] = NamedSharding(mesh, P(dp, "model", None))
+    elif cell.kind in ("train", "prefill"):
+        roles["hidden"] = NamedSharding(mesh, P(dp, None, None))
+    if cfg.family == "moe":
+        roles["moe_dispatch"] = NamedSharding(
+            mesh, P(dp, "model", None, None))
+        if cfg.seq_parallel:
+            # boundary pin needed only when tokens arrive seq-sharded
+            roles["moe_predispatch"] = NamedSharding(
+                mesh, P(dp, None, None, None))
+    return roles

@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing never touches jax
+device state — the dry-run must set XLA_FLAGS before any jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, model_size: int = 16):
+    """256 chips per pod; multi_pod adds a 2-pod leading axis.
+
+    ``model_size`` re-slices the same physical chips into a different
+    logical (data, model) split — the §Perf hillclimb lever: the hardware
+    mesh is fixed, the axis assignment is a sharding choice.
+    """
+    assert 256 % model_size == 0
+    data = 256 // model_size
+    shape = (2, data, model_size) if multi_pod else (data, model_size)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has, as a 1-D data mesh (examples/tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,91 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import collections       # noqa: E402
+import re                # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import get_config                  # noqa: E402
+from repro.launch import roofline as R                # noqa: E402
+from repro.launch.dryrun import (_compile_cell,       # noqa: E402
+                                 probe_costs)
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.models.config import shape_by_name         # noqa: E402
+
+"""Perf probe: per-collective breakdown for one (arch, shape, mesh) cell.
+
+Prints the top collective ops by total bytes with their shapes and source
+op names — the 'profile' of the dry-run-only workflow (DESIGN.md §7).
+"""
+
+_LINE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r".*?metadata=\{op_name=\"([^\"]*)\"", re.I)
+
+
+def breakdown(hlo_text, top=15):
+    agg = collections.Counter()
+    meta = {}
+    for m in _LINE.finditer(hlo_text):
+        shape, kind, op = m.group(1), m.group(2), m.group(3)
+        nbytes = R._shape_bytes(shape)
+        key = (kind, shape.split("{")[0][:60], op[:90])
+        agg[key] += nbytes
+        meta[key] = meta.get(key, 0) + 1
+    rows = agg.most_common(top)
+    return rows, meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="probe depth (unrolled)")
+    ap.add_argument("--model-size", type=int, default=16,
+                    help="logical model-axis size (256/model = data)")
+    ap.add_argument("--override", default="",
+                    help="comma k=v ArchConfig overrides, e.g. "
+                         "attn_q_chunk=1024,remat=False")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    over = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        over[k] = eval(v)  # noqa: S307 - trusted CLI
+    cfg = cfg.replace(n_layers=args.layers, scan_layers=False, **over)
+    cell = shape_by_name(args.shape)
+    mesh = make_production_mesh(multi_pod=args.multi_pod,
+                                model_size=args.model_size)
+
+    kind, compiled = _compile_cell(cfg, cell, mesh)
+    text = compiled.as_text()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    print(f"probe {args.arch} x {args.shape} L={args.layers} kind={kind} "
+          f"overrides={over}")
+    print(f"  flops/dev={float(cost.get('flops', 0)):.4e}  "
+          f"bytes/dev={float(cost.get('bytes accessed', 0)):.4e}")
+    try:
+        ma = compiled.memory_analysis()
+        print(f"  temp={ma.temp_size_in_bytes/1e9:.2f}GB "
+              f"args={ma.argument_size_in_bytes/1e9:.2f}GB")
+    except Exception:
+        pass
+    rows, counts = breakdown(text)
+    total = sum(R.collective_bytes(text).values())
+    print(f"  collective total/dev: {total:.4e} bytes")
+    for (ck, shape, op), nbytes in rows:
+        print(f"   {nbytes/1e6:10.1f}MB x{counts[(ck, shape, op)]:3d} "
+              f"{ck:18s} {shape:45s} {op}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI_link_bw
+
+cost_analysis() on a SPMD-partitioned executable reports the *per-device*
+module, so no division by chip count is applied to its numbers; the
+MODEL_FLOPS utility baseline is divided by the device count explicitly.
+Collective bytes are not in cost_analysis — they are summed from the
+partitioned HLO text over all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute output shapes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tf32": 4, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^a-z-]", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes of every collective op in (partitioned) HLO text."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2).lower()
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def model_flops(cfg, cell) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params)."""
+    n = active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def active_params(cfg) -> float:
+    """Active parameter count (MoE counts top_k experts per token)."""
+    d, v, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    hd, h, kh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        di = s.expand * d
+        dt_rank = s.dt_rank or (d + 15) // 16
+        per = d * 2 * di + di * (dt_rank + 2 * s.state) + dt_rank * di \
+            + di * d
+        return emb + L * per
+    attn = d * (h * hd) + 2 * d * (kh * hd) + (h * hd) * d
+    if cfg.family == "moe":
+        ffn = 3 * d * cfg.moe.d_ff_expert * cfg.moe.top_k + d * cfg.moe.n_experts
+        return emb + L * (attn + ffn)
+    ffn = 3 * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * d
+        nh = di // s.head_dim
+        per = d * (2 * di + 2 * s.state + nh) + di * d
+        groups = max(1, L // max(cfg.hybrid_period, 1))
+        return emb + L * per + (attn + ffn)  # shared block counted once
+    return emb + L * (attn + ffn)
+
+
+def analyze(compiled, *, n_devices: int, cfg, cell,
+            hlo_text: Optional[str] = None) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    coll_dev = float(sum(coll.values()))
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, cell)
+    mf_dev = mf / n_devices
+    useful_ratio = mf_dev / flops_dev if flops_dev else 0.0
+    bound = max(terms.values())
+    mfu_bound = (mf_dev / PEAK_FLOPS) / bound if bound else 0.0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    return {
+        "arch": cfg.name, "cell": cell.name, "devices": n_devices,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": coll,
+        "terms_seconds": terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_mfu_bound": mfu_bound,
+        "memory_analysis": mem,
+    }

@@ -1,0 +1,1 @@
+from . import config, layers, attention, moe, ssm, transformer  # noqa: F401

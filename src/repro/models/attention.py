@@ -1,0 +1,164 @@
+"""GQA attention: q-chunked (flash-style) training path + cached decode.
+
+The training path chunks queries and scans, keeping the live score tile at
+[B, H, Cq, S] instead of [B, H, S, S] — the standard memory/roofline
+trade-off knob (cfg.attn_q_chunk).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def gqa_scores_ein(q, k):
+    """q: [B, T, KH, G, D], k: [B, S, KH, D] -> [B, KH, G, T, S]."""
+    return jnp.einsum("btkgd,bskd->bkgts", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def causal_attention(q, k, v, q_offset: int = 0, q_chunk: int = 512):
+    """Causal GQA attention.
+
+    q: [B, T, H, D]; k/v: [B, S, KH, D]; positions of q are
+    q_offset + [0..T). Returns [B, T, H, D].
+    """
+    b, t, h, d = q.shape
+    _, s, kh, _ = k.shape
+    g = h // kh
+    qg = q.reshape(b, t, kh, g, d)
+    scale = d ** -0.5
+
+    q_chunk = min(q_chunk, t)
+    assert t % q_chunk == 0
+    nchunks = t // q_chunk
+
+    def chunk_body(carry, idx):
+        start = idx * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(qg, start, q_chunk, axis=1)
+        scores = gqa_scores_ein(qc, k) * scale          # [B,KH,G,Cq,S]
+        qpos = q_offset + start + jnp.arange(q_chunk)
+        kpos = jnp.arange(s)
+        mask = kpos[None, :] <= qpos[:, None]           # [Cq, S]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        oc = jnp.einsum("bkgts,bskd->btkgd", w.astype(v.dtype), v)
+        return carry, oc.reshape(b, q_chunk, h, d)
+
+    if nchunks == 1:
+        _, out = chunk_body(None, jnp.asarray(0))
+        return out
+    _, outs = jax.lax.scan(chunk_body, None, jnp.arange(nchunks))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, t, h, d)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q [B, 1, H, D]; caches [B, S, KH, D]."""
+    b, _, h, d = q.shape
+    _, s, kh, _ = k_cache.shape
+    g = h // kh
+    qg = q.reshape(b, 1, kh, g, d)
+    scores = gqa_scores_ein(qg, k_cache) * (d ** -0.5)  # [B,KH,G,1,S]
+    pos = jnp.arange(s)
+    valid = pos[None] < cache_len[:, None]              # [B, S]
+    scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+def _quant_kv(x):
+    """int8-quantize [B,T,KH,D] with per-(token, head) scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) *
+            scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def attention_block(params, x, cfg, *, positions, kv_cache=None,
+                    cache_len=None, decode=False):
+    """Full attention sub-layer: qkv proj + rope + attn + out proj.
+
+    kv_cache: None (training) or dict(k=[B,S,KH,D], v=[B,S,KH,D]) plus
+    optional int8 scales (k_scale/v_scale, §Perf cell B).
+    Returns (out, new_kv_cache).
+    """
+    b, t, _ = x.shape
+    hd, h, kh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, t, h, hd)
+    k = k.reshape(b, t, kh, hd)
+    v = v.reshape(b, t, kh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        quant = "k_scale" in kv_cache
+        if decode:
+            # insert the new token at cache_len (per batch row).
+            # §Perf B1 (refuted): a batched scatter (.at[b, len].set) looks
+            # cheaper but does NOT partition under SPMD when the batch dim
+            # is sharded — XLA falls back to involuntary full
+            # rematerialization of the cache (+60% HBM bytes measured).
+            # The masked-select form partitions elementwise on every dim.
+            def put(cache, new):
+                idx = jnp.reshape(cache_len,
+                                  (-1,) + (1,) * (cache.ndim - 1))
+                pos = jnp.reshape(jnp.arange(cache.shape[1]),
+                                  (1, -1) + (1,) * (cache.ndim - 2))
+                return jnp.where(pos == idx, new.astype(cache.dtype), cache)
+
+            if quant:
+                kq, ks = _quant_kv(k)
+                vq, vs = _quant_kv(v)
+                new_cache = {"k": put(kv_cache["k"], kq),
+                             "v": put(kv_cache["v"], vq),
+                             "k_scale": put(kv_cache["k_scale"], ks),
+                             "v_scale": put(kv_cache["v_scale"], vs)}
+                kf = _dequant_kv(new_cache["k"], new_cache["k_scale"],
+                                 x.dtype)
+                vf = _dequant_kv(new_cache["v"], new_cache["v_scale"],
+                                 x.dtype)
+            else:
+                new_cache = {"k": put(kv_cache["k"], k),
+                             "v": put(kv_cache["v"], v)}
+                kf, vf = new_cache["k"], new_cache["v"]
+            out = decode_attention(q, kf, vf, cache_len + 1)
+        else:  # prefill: write the whole prefix
+            def put_prefix(cache, new):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    cache, new.astype(cache.dtype), 0, axis=1)
+
+            if quant:
+                kq, ks = _quant_kv(k)
+                vq, vs = _quant_kv(v)
+                new_cache = {"k": put_prefix(kv_cache["k"], kq),
+                             "v": put_prefix(kv_cache["v"], vq),
+                             "k_scale": put_prefix(kv_cache["k_scale"], ks),
+                             "v_scale": put_prefix(kv_cache["v_scale"], vs)}
+            else:
+                new_cache = {"k": put_prefix(kv_cache["k"], k),
+                             "v": put_prefix(kv_cache["v"], v)}
+            out = causal_attention(q, k, v, q_chunk=cfg.attn_q_chunk)
+    else:
+        out = causal_attention(q, k, v, q_chunk=cfg.attn_q_chunk)
+        new_cache = None
+
+    out = out.reshape(b, t, h * hd) @ params["wo"]
+    return out, new_cache

@@ -1,0 +1,223 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD
+(zamba2), with chunked scans for training and O(1) recurrent decode.
+
+Training scans are chunked (cfg.ssm_chunk): an outer ``lax.scan`` carries the
+[B, ...| state] across chunks (rematerialized), an inner scan runs the
+recurrence — bounding backward-pass state materialization to one chunk.
+Channel dimensions are embarrassingly parallel and shard over the ``model``
+axis; the carried state is tiny (B × d_inner × N), which is what makes
+SSM/hybrid archs the best case for the paper's live migration (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import init_dense
+
+
+# ------------------------------------------------------------------ Mamba1
+
+def init_mamba1_params(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = s.dt_rank or int(np.ceil(d / 16))
+    ks = jax.random.split(key, 8)
+    a_init = jnp.tile(jnp.log(jnp.arange(1, s.state + 1, dtype=jnp.float32)),
+                      (di, 1))
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": init_dense(ks[1], (s.conv_width, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_bc": init_dense(ks[2], (di, dt_rank + 2 * s.state), dtype=dtype),
+        "dt_proj": init_dense(ks[3], (dt_rank, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "a_log": a_init.astype(jnp.float32),       # [di, N]
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x: [B, T, C]; w: [W, C] depthwise. Returns (y, new_state[W-1])."""
+    wdt = x.dtype
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), wdt)
+    else:
+        pad = conv_state.astype(wdt)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    return y + b, new_state
+
+
+def mamba1_scan(dt, a_log, bmat, cmat, x, h0, chunk: int):
+    """Selective scan.
+
+    dt: [B,T,C] (softplus'd), bmat/cmat: [B,T,N], x: [B,T,C], h0: [B,C,N].
+    Returns (y [B,T,C], hT).
+    """
+    bsz, t, c = x.shape
+    n = bmat.shape[-1]
+    a = -jnp.exp(a_log)                               # [C, N]
+
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+
+    def inner(h, xs):
+        dt_t, b_t, c_t, x_t = xs                      # [B,C],[B,N],[B,N],[B,C]
+        da = jnp.exp(dt_t[..., None] * a)             # [B,C,N]
+        h = h * da + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, c_t)
+        return h, y
+
+    def outer(h, xs):
+        dt_c, b_c, c_c, x_c = xs                      # [chunk, B, ...]
+        h, y = jax.lax.scan(inner, h, (dt_c, b_c, c_c, x_c))
+        return h, y
+
+    tmaj = lambda z: jnp.moveaxis(z, 1, 0).reshape(
+        t // chunk, chunk, *z.shape[0:1], *z.shape[2:])
+    outer = jax.checkpoint(outer)
+    hT, y = jax.lax.scan(outer, h0, (tmaj(dt), tmaj(bmat), tmaj(cmat),
+                                     tmaj(x)))
+    y = jnp.moveaxis(y.reshape(t, bsz, c), 0, 1)
+    return y, hT
+
+
+def mamba1_block(params, x, cfg, *, state=None, decode=False):
+    """x: [B, T, D]. state: dict(conv, ssm) or None. -> (out, new_state)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = s.expand * d
+    dt_rank = s.dt_rank or int(np.ceil(d / 16))
+
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                 # [B,T,di]
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ params["x_bc"]                        # [B,T,r+2N]
+    dt_in, bmat, cmat = jnp.split(
+        proj, [dt_rank, dt_rank + s.state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"] +
+                         params["dt_bias"]).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    xf = xs.astype(jnp.float32)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((b, di, s.state), jnp.float32))
+    if decode:
+        a = -jnp.exp(params["a_log"])
+        da = jnp.exp(dt[:, 0, :, None] * a)
+        h = h0 * da + (dt[:, 0] * xf[:, 0])[..., None] * bmat[:, 0][:, None]
+        y = jnp.einsum("bcn,bn->bc", h, cmat[:, 0])[:, None]
+        hT = h
+    else:
+        y, hT = mamba1_scan(dt, params["a_log"], bmat, cmat, xf, h0,
+                            cfg.ssm_chunk)
+    y = y + params["d_skip"] * xf
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    new_state = {"conv": new_conv, "ssm": hT}
+    return out, new_state
+
+
+# ------------------------------------------------------------- Mamba2 / SSD
+
+def init_mamba2_params(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * di + 2 * s.state + nh),
+                              dtype=dtype),
+        "conv_w": init_dense(ks[1], (s.conv_width, di + 2 * s.state),
+                             dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * s.state,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": init_dense(ks[2], (di, d), dtype=dtype),
+    }
+
+
+def mamba2_scan(dt, a_log, bmat, cmat, x, h0, chunk: int):
+    """SSD recurrence with scalar-per-head decay.
+
+    dt: [B,T,H] softplus'd; bmat/cmat: [B,T,N]; x: [B,T,H,P]; h0: [B,H,P,N].
+    """
+    bsz, t, nh, p = x.shape
+    a = -jnp.exp(a_log)                               # [H]
+
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+
+    def inner(h, xs):
+        dt_t, b_t, c_t, x_t = xs                      # [B,H],[B,N],[B,N],[B,H,P]
+        da = jnp.exp(dt_t * a)[..., None, None]       # [B,H,1,1]
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], b_t)
+        h = h * da + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    def outer(h, xs):
+        h, y = jax.lax.scan(inner, h, xs)
+        return h, y
+
+    tm = lambda z: jnp.moveaxis(z, 1, 0).reshape(
+        t // chunk, chunk, *z.shape[0:1], *z.shape[2:])
+    outer = jax.checkpoint(outer)
+    hT, y = jax.lax.scan(outer, h0, (tm(dt), tm(bmat), tm(cmat), tm(x)))
+    y = jnp.moveaxis(y.reshape(t, bsz, nh, p), 0, 1)
+    return y, hT
+
+
+def mamba2_block(params, x, cfg, *, state=None, decode=False):
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = s.expand * d
+    nh = di // s.head_dim
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt_in = jnp.split(proj, [di, 2 * di + 2 * s.state], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + s.state], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"])
+    xh = xs.reshape(b, t, nh, s.head_dim).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((b, nh, s.head_dim, s.state), jnp.float32))
+    if decode:
+        a = -jnp.exp(params["a_log"])
+        da = jnp.exp(dt[:, 0] * a)[..., None, None]
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, 0] * dt[:, 0, :, None],
+                         bmat[:, 0])
+        h = h0 * da + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, cmat[:, 0])[:, None]
+        hT = h
+    else:
+        y, hT = mamba2_scan(dt, params["a_log"], bmat, cmat, xh, h0,
+                            cfg.ssm_chunk)
+    y = y + params["d_skip"][:, None] * xh[:, :t]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    # gated RMSNorm (Mamba2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+    y = y * params["norm_scale"]
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv, "ssm": hT}

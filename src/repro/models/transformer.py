@@ -1,0 +1,464 @@
+"""Top-level model: composes attention / MoE / SSM blocks per ArchConfig.
+
+One code path serves every assigned architecture:
+
+  dense / vlm / audio : [RMSNorm -> GQA attn] + [RMSNorm -> SwiGLU]
+  moe                 : [RMSNorm -> GQA attn] + [RMSNorm -> MoE FFN]
+  ssm                 : [RMSNorm -> Mamba1]
+  hybrid (zamba2)     : groups of ``hybrid_period`` Mamba2 blocks followed by
+                        one *shared* attention+MLP block (single param set
+                        reused per application, as in Zamba)
+
+Layers are stacked and scanned (``cfg.scan_layers``) with rematerialization
+(``cfg.remat``) so the lowered HLO stays O(1) in depth — required for the
+512-device dry-run of 80-94 layer models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.actctx import constrain
+
+from .attention import attention_block
+from .config import ArchConfig
+from .layers import cross_entropy, init_dense, rms_norm, swiglu
+from .moe import init_moe_params, moe_ffn
+from .ssm import (init_mamba1_params, init_mamba2_params, mamba1_block,
+                  mamba2_block)
+
+
+# ================================================================== params
+
+def _init_attn(key, cfg: ArchConfig, dtype):
+    hd, h, kh, d = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], (d, h * hd), dtype=dtype),
+        "wk": init_dense(ks[1], (d, kh * hd), dtype=dtype),
+        "wv": init_dense(ks[2], (d, kh * hd), dtype=dtype),
+        "wo": init_dense(ks[3], (h * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kh * hd,), dtype)
+        p["bv"] = jnp.zeros((kh * hd,), dtype)
+    return p
+
+
+def _init_mlp(key, cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], (d, f), dtype=dtype),
+        "w_up": init_dense(ks[1], (d, f), dtype=dtype),
+        "w_down": init_dense(ks[2], (f, d), dtype=dtype),
+    }
+
+
+def _init_block(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.family == "ssm":
+        return {"ln1": jnp.ones((d,), dtype),
+                "mamba": init_mamba1_params(ks[0], cfg, dtype)}
+    if cfg.family == "hybrid":
+        return {"ln1": jnp.ones((d,), dtype),
+                "mamba": init_mamba2_params(ks[0], cfg, dtype)}
+    blk = {"ln1": jnp.ones((d,), dtype),
+           "attn": _init_attn(ks[0], cfg, dtype),
+           "ln2": jnp.ones((d,), dtype)}
+    if cfg.family == "moe":
+        blk["moe"] = init_moe_params(ks[1], cfg, dtype)
+    else:
+        blk["mlp"] = _init_mlp(ks[1], cfg, dtype)
+    return blk
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    n_stack = _n_stacked(cfg)
+    blocks = jax.vmap(
+        lambda k: _init_block(k, cfg, dtype))(jax.random.split(ks[0], n_stack))
+    params = {
+        # d**-0.5 keeps tied-head logits O(1) at init
+        "embed": init_dense(ks[1], (cfg.vocab, cfg.d_model),
+                            scale=cfg.d_model ** -0.5, dtype=dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(ks[2], (cfg.d_model, cfg.vocab),
+                                       dtype=dtype)
+    if cfg.family == "hybrid":
+        params["shared"] = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": _init_attn(ks[3], cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": _init_mlp(ks[4], cfg, dtype),
+        }
+    return params
+
+
+def _n_stacked(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers  # mamba blocks (shared attn is separate)
+    return cfg.n_layers
+
+
+def _n_groups(cfg: ArchConfig) -> int:
+    """Hybrid: number of shared-attention applications."""
+    return max(1, cfg.n_layers // max(cfg.hybrid_period, 1))
+
+
+# ================================================================ forward
+
+def _dense_block(blk, h, cfg, positions, kv=None, cache_len=None,
+                 decode=False):
+    x, new_kv = attention_block(
+        blk["attn"], rms_norm(h, blk["ln1"], cfg.norm_eps), cfg,
+        positions=positions, kv_cache=kv, cache_len=cache_len, decode=decode)
+    h = h + x
+    hn = rms_norm(h, blk["ln2"], cfg.norm_eps)
+    if "moe" in blk:
+        x, aux = moe_ffn(blk["moe"], hn, cfg)
+    else:
+        x = swiglu(hn, blk["mlp"]["w_gate"], blk["mlp"]["w_up"],
+                   blk["mlp"]["w_down"])
+        aux = {}
+    return h + x, new_kv, aux
+
+
+def _ssm_block(blk, h, cfg, state=None, decode=False):
+    fn = mamba1_block if cfg.ssm.version == 1 else mamba2_block
+    x, new_state = fn(blk["mamba"], rms_norm(h, blk["ln1"], cfg.norm_eps),
+                      cfg, state=state, decode=decode)
+    return h + x, new_state
+
+
+def _embed_input(params, cfg: ArchConfig, batch):
+    """Returns (h [B,S,D], targets [B,S], loss_mask [B,S])."""
+    if cfg.modality == "audio_stub":
+        h = batch["frame_embeds"]
+        return h, batch["targets"], jnp.ones(batch["targets"].shape, bool)
+    if cfg.modality == "vision_stub":
+        tok_emb = params["embed"][batch["tokens"]]
+        h = jnp.concatenate([batch["patch_embeds"].astype(tok_emb.dtype),
+                             tok_emb], axis=1)
+        li = batch["patch_embeds"].shape[1]
+        tgt = batch["targets"]
+        mask = jnp.arange(tgt.shape[1])[None, :] >= li
+        return h, tgt, mask
+    h = params["embed"][batch["tokens"]]
+    return h, batch["targets"], jnp.ones(batch["targets"].shape, bool)
+
+
+def _backbone_train(params, cfg: ArchConfig, h, positions):
+    """Run all blocks (training path, no caches). Returns (h, aux)."""
+    blocks = params["blocks"]
+    aux0 = {"moe_aux": jnp.zeros((), jnp.float32),
+            "moe_z": jnp.zeros((), jnp.float32)}
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def body(carry, blk):
+            h, aux = carry
+            h, _, a = _dense_block(blk, h, cfg, positions)
+            h = constrain(h, "hidden")
+            aux = {k: aux[k] + a.get(k, 0.0) for k in aux}
+            return (h, aux), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            (h, aux), _ = jax.lax.scan(body, (h, aux0), blocks)
+        else:
+            aux = aux0
+            for i in range(cfg.n_layers):
+                blk = jax.tree_util.tree_map(lambda x: x[i], blocks)
+                (h, aux), _ = body((h, aux), blk)
+        return h, aux
+
+    if cfg.family == "ssm":
+        def body(h, blk):
+            h, _ = _ssm_block(blk, h, cfg)
+            h = constrain(h, "hidden")
+            return h, None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, blocks)
+        else:
+            for i in range(cfg.n_layers):
+                blk = jax.tree_util.tree_map(lambda x: x[i], blocks)
+                h, _ = body(h, blk)
+        return h, aux0
+
+    # hybrid (zamba2): groups of mamba blocks + one shared attn block
+    period = max(cfg.hybrid_period, 1)
+    groups = _n_groups(cfg)
+    used = groups * period
+    gblocks = jax.tree_util.tree_map(
+        lambda x: x[:used].reshape(groups, period, *x.shape[1:]), blocks)
+    shared = params["shared"]
+
+    def group_body(h, gblk):
+        def m_body(h, blk):
+            h, _ = _ssm_block(blk, h, cfg)
+            return h, None
+
+        h, _ = jax.lax.scan(m_body, h, gblk)
+        x, _ = attention_block(
+            shared["attn"], rms_norm(h, shared["ln1"], cfg.norm_eps), cfg,
+            positions=positions)
+        h = h + x
+        x = swiglu(rms_norm(h, shared["ln2"], cfg.norm_eps),
+                   shared["mlp"]["w_gate"], shared["mlp"]["w_up"],
+                   shared["mlp"]["w_down"])
+        return constrain(h + x, "hidden"), None
+
+    group_body = jax.checkpoint(group_body) if cfg.remat else group_body
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(group_body, h, gblocks)
+    else:
+        for g in range(groups):
+            gb = jax.tree_util.tree_map(lambda x: x[g], gblocks)
+            h, _ = group_body(h, gb)
+    # trailing mamba blocks beyond the last full group
+    for i in range(used, cfg.n_layers):
+        blk = jax.tree_util.tree_map(lambda x: x[i], blocks)
+        h, _ = _ssm_block(blk, h, cfg)
+    return h, aux0
+
+
+def _lm_logits(params, cfg, h):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return h @ head
+
+
+def _chunked_loss(params, cfg: ArchConfig, h, targets, mask):
+    """CE computed over sequence chunks to bound the [.., V] logit tile."""
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+
+    def body(acc, idx):
+        hs = jax.lax.dynamic_slice_in_dim(h, idx * c, c, axis=1)
+        ts = jax.lax.dynamic_slice_in_dim(targets, idx * c, c, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, idx * c, c, axis=1)
+        logits = _lm_logits(params, cfg, hs)
+        ls = cross_entropy(logits, ts)
+        return (acc[0] + jnp.sum(ls * ms), acc[1] + jnp.sum(ms)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(s // c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward_train(params, cfg: ArchConfig, batch):
+    """Training forward: returns (loss, metrics)."""
+    h, targets, mask = _embed_input(params, cfg, batch)
+    h = constrain(h, "hidden")
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, aux = _backbone_train(params, cfg, h, positions)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    loss = _chunked_loss(params, cfg, h, targets, mask)
+    total = loss + 0.01 * aux["moe_aux"] + 1e-3 * aux["moe_z"]
+    return total, {"ce_loss": loss, **aux}
+
+
+# ============================================================ serving paths
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Decode caches: KV for attention layers, conv+ssm for SSM layers.
+
+    With ``cfg.kv_quant`` the KV tensors are int8 with per-(token, kv-head)
+    fp16 scales — 2x less HBM traffic on the decode-dominating term
+    (§Perf cell B).
+    """
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        n = cfg.n_layers
+        if cfg.kv_quant:
+            return {"k": jnp.zeros((n, batch, max_seq, kh, hd), jnp.int8),
+                    "v": jnp.zeros((n, batch, max_seq, kh, hd), jnp.int8),
+                    "k_scale": jnp.zeros((n, batch, max_seq, kh),
+                                         jnp.float16),
+                    "v_scale": jnp.zeros((n, batch, max_seq, kh),
+                                         jnp.float16)}
+        return {"k": jnp.zeros((n, batch, max_seq, kh, hd), dtype),
+                "v": jnp.zeros((n, batch, max_seq, kh, hd), dtype)}
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    n = cfg.n_layers
+    if cfg.family == "ssm":
+        return {
+            "conv": jnp.zeros((n, batch, s.conv_width - 1, di), dtype),
+            "ssm": jnp.zeros((n, batch, di, s.state), jnp.float32),
+        }
+    # hybrid: mamba states for all blocks + KV for the shared-attn groups
+    nh = di // s.head_dim
+    g = _n_groups(cfg)
+    return {
+        "conv": jnp.zeros((n, batch, s.conv_width - 1, di + 2 * s.state),
+                          dtype),
+        "ssm": jnp.zeros((n, batch, nh, s.head_dim, s.state), jnp.float32),
+        "k": jnp.zeros((g, batch, max_seq, kh, hd), dtype),
+        "v": jnp.zeros((g, batch, max_seq, kh, hd), dtype),
+    }
+
+
+def _attn_families_step(params, cfg, h, positions, cache, cache_len, decode):
+    blocks = params["blocks"]
+
+    def body(carry, xs):
+        h, = carry
+        blk, kv = xs
+        h, new_kv, _ = _dense_block(blk, h, cfg, positions, kv=kv,
+                                    cache_len=cache_len, decode=decode)
+        return (h,), new_kv
+
+    if cfg.scan_layers:
+        (h,), new_cache = jax.lax.scan(body, (h,), (blocks, cache))
+        return h, new_cache
+    outs = []
+    for i in range(cfg.n_layers):
+        blk = jax.tree_util.tree_map(lambda x: x[i], blocks)
+        kv = jax.tree_util.tree_map(lambda x: x[i], cache)
+        (h,), kv_i = body((h,), (blk, kv))
+        outs.append(kv_i)
+    return h, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+
+def _ssm_families_step(params, cfg, h, cache, decode):
+    blocks = params["blocks"]
+
+    def body(carry, xs):
+        h, = carry
+        blk, conv, ssm_st = xs
+        h, st = _ssm_block(blk, h, cfg,
+                           state={"conv": conv, "ssm": ssm_st},
+                           decode=decode)
+        return (h,), (st["conv"], st["ssm"])
+
+    if cfg.scan_layers:
+        (h,), (convs, ssms) = jax.lax.scan(
+            body, (h,), (blocks, cache["conv"], cache["ssm"]))
+        return h, {"conv": convs, "ssm": ssms}
+    convs, ssms = [], []
+    for i in range(cfg.n_layers):
+        blk = jax.tree_util.tree_map(lambda x: x[i], blocks)
+        (h,), (c_i, s_i) = body((h,), (blk, cache["conv"][i],
+                                       cache["ssm"][i]))
+        convs.append(c_i)
+        ssms.append(s_i)
+    return h, {"conv": jnp.stack(convs), "ssm": jnp.stack(ssms)}
+
+
+def _hybrid_step(params, cfg, h, positions, cache, cache_len, decode):
+    period = max(cfg.hybrid_period, 1)
+    groups = _n_groups(cfg)
+    used = groups * period
+    blocks = params["blocks"]
+    gblocks = jax.tree_util.tree_map(
+        lambda x: x[:used].reshape(groups, period, *x.shape[1:]), blocks)
+    gconv = cache["conv"][:used].reshape(groups, period,
+                                         *cache["conv"].shape[1:])
+    gssm = cache["ssm"][:used].reshape(groups, period,
+                                       *cache["ssm"].shape[1:])
+    shared = params["shared"]
+
+    def group_body(carry, xs):
+        h, = carry
+        gblk, conv_g, ssm_g, kc, vc = xs
+
+        def m_body(carry2, xs2):
+            h2, = carry2
+            blk, conv, sst = xs2
+            h2, st = _ssm_block(blk, h2, cfg,
+                                state={"conv": conv, "ssm": sst},
+                                decode=decode)
+            return (h2,), (st["conv"], st["ssm"])
+
+        (h,), (conv_n, ssm_n) = jax.lax.scan(m_body, (h,),
+                                             (gblk, conv_g, ssm_g))
+        x, new_kv = attention_block(
+            shared["attn"], rms_norm(h, shared["ln1"], cfg.norm_eps), cfg,
+            positions=positions, kv_cache={"k": kc, "v": vc},
+            cache_len=cache_len, decode=decode)
+        h = h + x
+        x = swiglu(rms_norm(h, shared["ln2"], cfg.norm_eps),
+                   shared["mlp"]["w_gate"], shared["mlp"]["w_up"],
+                   shared["mlp"]["w_down"])
+        return (h + x,), (conv_n, ssm_n, new_kv["k"], new_kv["v"])
+
+    if cfg.scan_layers:
+        (h,), (conv_n, ssm_n, ks, vs) = jax.lax.scan(
+            group_body, (h,), (gblocks, gconv, gssm, cache["k"], cache["v"]))
+    else:
+        cn, sn, kl, vl = [], [], [], []
+        for g in range(groups):
+            gb = jax.tree_util.tree_map(lambda x: x[g], gblocks)
+            (h,), (c_g, s_g, k_g, v_g) = group_body(
+                (h,), (gb, gconv[g], gssm[g], cache["k"][g], cache["v"][g]))
+            cn.append(c_g)
+            sn.append(s_g)
+            kl.append(k_g)
+            vl.append(v_g)
+        conv_n = jnp.stack(cn)
+        ssm_n = jnp.stack(sn)
+        ks = jnp.stack(kl)
+        vs = jnp.stack(vl)
+
+    new_cache = dict(cache)
+    conv_flat = conv_n.reshape(used, *cache["conv"].shape[1:])
+    ssm_flat = ssm_n.reshape(used, *cache["ssm"].shape[1:])
+    for i in range(used, cfg.n_layers):  # trailing blocks, unrolled
+        blk = jax.tree_util.tree_map(lambda x: x[i], blocks)
+        h, st = _ssm_block(
+            blk, h, cfg,
+            state={"conv": cache["conv"][i], "ssm": cache["ssm"][i]},
+            decode=decode)
+        conv_flat = jnp.concatenate([conv_flat, st["conv"][None]], 0)
+        ssm_flat = jnp.concatenate([ssm_flat, st["ssm"][None]], 0)
+    new_cache["conv"] = conv_flat
+    new_cache["ssm"] = ssm_flat
+    new_cache["k"] = ks
+    new_cache["v"] = vs
+    return h, new_cache
+
+
+def forward_serve(params, cfg: ArchConfig, batch, cache, cache_len, *,
+                  decode: bool):
+    """Prefill (decode=False) or single-token decode (decode=True).
+
+    Returns (logits of last position [B, V], new_cache).
+    """
+    if cfg.modality == "audio_stub":
+        h = batch["frame_embeds"]
+    elif cfg.modality == "vision_stub" and not decode:
+        tok = params["embed"][batch["tokens"]]
+        h = jnp.concatenate(
+            [batch["patch_embeds"].astype(tok.dtype), tok], axis=1)
+    else:
+        h = params["embed"][batch["tokens"]]
+    b, t, _ = h.shape
+    if decode:
+        positions = cache_len[:, None]
+    else:
+        positions = jnp.arange(t)[None, :]
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        h, new_cache = _attn_families_step(params, cfg, h, positions, cache,
+                                           cache_len, decode)
+    elif cfg.family == "ssm":
+        h, new_cache = _ssm_families_step(params, cfg, h, cache, decode)
+    else:
+        h, new_cache = _hybrid_step(params, cfg, h, positions, cache,
+                                    cache_len, decode)
+
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = _lm_logits(params, cfg, h)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,47 @@
+"""Int8 gradient compression with error feedback.
+
+For cross-pod (DCN-ish) gradient reduction: quantize per-tensor to int8 with
+a shared fp32 scale before the all-reduce, keep the quantization residual
+locally and fold it into the next step's gradient (error feedback), which
+keeps SGD convergence unbiased in expectation. 4x less inter-pod traffic on
+the collective-bound term of the roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x, residual=None):
+    """Returns (q_int8, scale, new_residual)."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, xf - deq
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residuals=None):
+    if residuals is None:
+        residuals = jax.tree_util.tree_map(lambda x: None, grads,
+                                           is_leaf=lambda _: True)
+    qs, scales, res = {}, {}, {}
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    rflat = jax.tree_util.tree_leaves(residuals) if residuals else \
+        [None] * len(flat)
+    out = [int8_compress(g, r) for g, r in zip(flat, rflat)]
+    q = treedef.unflatten([o[0] for o in out])
+    s = treedef.unflatten([o[1] for o in out])
+    r = treedef.unflatten([o[2] for o in out])
+    return q, s, r
+
+
+def decompress_tree(q, s):
+    return jax.tree_util.tree_map(int8_decompress, q, s)

@@ -1,0 +1,3 @@
+# Submodules import models; keep this __init__ lazy to avoid import cycles
+# (models.transformer -> runtime.actctx).
+from . import actctx  # noqa: F401

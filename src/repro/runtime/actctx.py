@@ -1,0 +1,38 @@
+"""Activation-sharding context: model code asks for constraints by *role*,
+the launcher binds roles to mesh-specific shardings before lowering.
+
+Keeps model code mesh-agnostic while letting the dry-run/trainer pin the
+partitioning that matters for memory (sequence-parallel hidden states
+between layers, MoE dispatch buffers, logits).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+
+_CTX: Dict[str, Optional[object]] = {}
+
+
+def set_roles(**roles) -> None:
+    _CTX.clear()
+    _CTX.update(roles)
+
+
+@contextmanager
+def roles(**kw):
+    old = dict(_CTX)
+    _CTX.update(kw)
+    try:
+        yield
+    finally:
+        _CTX.clear()
+        _CTX.update(old)
+
+
+def constrain(x, role: str):
+    s = _CTX.get(role)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,175 @@
+"""Logical-axis sharding rules: param/opt/batch PartitionSpecs per mesh.
+
+Strategy (DESIGN.md §6):
+  * FSDP over ``data``: every weight matrix shards its d_model-sized axis
+    over the data axis for storage; XLA inserts all-gathers on use and
+    reduce-scatters on the gradient.
+  * TP over ``model``: heads / ffn / vocab / experts axes.
+  * ``pod`` (multi-pod mesh) is pure DP: batch shards over it; parameters
+    are replicated across pods; gradient all-reduce crosses pods once.
+
+Rules are matched on flattened param paths — the registry below covers every
+family's parameter names; anything unmatched is replicated (asserted small).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (path regex, candidate spec builders) — d = data axis, m = model axis.
+# Candidates are tried in order; the first whose assigned dims all divide
+# the axis sizes wins (e.g. 40-expert MoE cannot shard experts 16-way, so
+# EP falls back to sharding the expert FFN dim instead).
+# Specs are given per *trailing* dims (ignoring a leading layer-stack dim,
+# which is always unsharded).
+_RULES: Tuple[Tuple[str, Tuple[Tuple[Optional[str], ...], ...]], ...] = (
+    # embeddings / lm head: vocab over model, d_model over data
+    (r"embed$", (("m", "d"),)),
+    (r"lm_head$", (("d", "m"),)),
+    # attention
+    (r"attn/w[qkv]$", (("d", "m"),)),
+    (r"attn/wo$", (("m", "d"),)),
+    (r"attn/b[qkv]$", (("m",), (None,))),
+    # dense mlp
+    (r"mlp/w_(gate|up)$", (("d", "m"),)),
+    (r"mlp/w_down$", (("m", "d"),)),
+    # moe: experts over model (EP); fallback = TP inside each expert
+    (r"moe/router$", (("d", None),)),
+    (r"moe/w_(gate|up)$", (("m", "d", None), (None, "d", "m"))),
+    (r"moe/w_down$", (("m", None, "d"), (None, "m", "d"))),
+    # mamba: channel dims over model
+    (r"mamba/in_proj$", (("d", "m"),)),
+    (r"mamba/out_proj$", (("m", "d"),)),
+    (r"mamba/x_bc$", (("m", None),)),
+    (r"mamba/dt_proj$", ((None, "m"),)),
+    (r"mamba/conv_w$", ((None, "m"),)),
+    (r"mamba/(conv_b|dt_bias|a_log|d_skip|norm_scale)$", (("m",), (None,))),
+    # norms: replicated
+    (r"(ln1|ln2|final_norm|norm_scale)$", ((None,),)),
+)
+
+
+def _leaf_path(path) -> str:
+    return "/".join(str(p).strip("[].'") for p in path)
+
+
+def spec_for(path: str, shape, *, data_axis, model_axis,
+             axis_sizes) -> P:
+    ndim = len(shape)
+    for pat, candidates in _RULES:
+        if not re.search(pat, path):
+            continue
+        for axes in candidates:
+            spec = [None] * ndim
+            trail = len(axes)
+            off = ndim - trail
+            use = axes[-ndim:] if off < 0 else axes
+            off = max(off, 0)
+            ok = True
+            for i, a in enumerate(use):
+                name = data_axis if a == "d" else (
+                    model_axis if a == "m" else None)
+                if name is None:
+                    continue
+                if shape[off + i] % axis_sizes.get(name, 1) != 0:
+                    ok = False
+                    break
+                spec[off + i] = name
+            if ok:
+                return P(*spec)
+        return P()  # no candidate divides: replicate
+    return P()  # replicate
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec pytree for a param/opt-state tree."""
+    names = mesh.axis_names
+    data_axis = "data" if "data" in names else None
+    model_axis = "model" if "model" in names else None
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        p = _leaf_path(path)
+        spec = spec_for(p, tuple(np.shape(leaf)), data_axis=data_axis,
+                        model_axis=model_axis, axis_sizes=axis_sizes)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch dim over (pod, data) jointly."""
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def batch_shardings(batch, mesh: Mesh):
+    bs = batch_spec(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, bs), batch)
+
+
+def cache_specs(cache, mesh: Mesh, *, seq_axis: bool = False):
+    """Decode-cache specs, keyed by cache entry name.
+
+      k/v  : [L, B, S, KH, D] — batch over DP, KV heads over model; with
+             ``seq_axis=True`` (long-context, batch=1) the sequence dim
+             shards over ``data`` instead (context parallelism).
+      conv : [L, B, W-1, C]   — channels over model.
+      ssm  : [L, B, C, N] or [L, B, H, P, N] — channels/heads over model.
+    """
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+        "model", 1)
+
+    def one(path, x):
+        name = _leaf_path(path).split("/")[-1]
+        nd = np.ndim(x)
+        bdim = None if seq_axis else dp
+        if name in ("k", "v"):
+            # KV heads over model when divisible, else sequence over model
+            # (GQA archs with few KV heads); long-context additionally
+            # shards the sequence over data (seq_axis).
+            kh = x.shape[3]
+            sdim = dp if seq_axis else None
+            if kh % model_size == 0:
+                return P(None, bdim, sdim, "model", None)
+            if seq_axis:
+                return P(None, bdim, ("data", "model")
+                         if "data" in mesh.axis_names else "model",
+                         None, None)
+            return P(None, bdim, "model", None, None)
+        if name in ("k_scale", "v_scale"):   # [L, B, S, KH]
+            kh = x.shape[3]
+            if kh % model_size == 0:
+                return P(None, bdim, dp if seq_axis else None, "model")
+            return P(None, bdim, "model", None)
+        if name == "conv":
+            return P(None, bdim, None, "model")
+        if name == "ssm":
+            if nd == 5:                      # [L, B, H, P, N]
+                return P(None, bdim, "model", None, None)
+            return P(None, bdim, "model", None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def cache_shardings(cache, mesh: Mesh, *, seq_axis: bool = False):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        cache_specs(cache, mesh, seq_axis=seq_axis))

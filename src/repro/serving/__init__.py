@@ -1,0 +1,2 @@
+from .paged import PagedKVManager, paged_decode_step  # noqa: F401
+from .engine import ServingEngine  # noqa: F401

@@ -1,0 +1,102 @@
+"""Batched serving engine: admission, prefill, paged decode, live rebalance.
+
+The engine ties the pieces together: requests are admitted into a decode
+batch; prefill fills contiguous caches which are scattered into DiLi-indexed
+pages; decode steps run the paged path; the load balancer may Split/Move the
+page-index between steps — decode keeps running on the refreshed snapshot
+(the paper's asynchronous re-partitioning, at the serving layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.balancer import Balancer
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from .paged import PagedKVManager, paged_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    prompt: np.ndarray           # [S] int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
+                 num_pages: int = 256, max_batch: int = 8,
+                 dili_shards: int = 1, dtype=jnp.float32,
+                 use_kernel: bool = False):
+        self.cfg, self.params = cfg, params
+        self.kv = PagedKVManager(cfg, num_pages=num_pages,
+                                 page_size=page_size,
+                                 dili_shards=dili_shards, dtype=dtype)
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.use_kernel = use_kernel
+        self.active: List[Request] = []
+        self.balancer = Balancer(self.kv.dili, split_threshold=64)
+        self._decode = jax.jit(
+            lambda p, t, kp, vp, pt, sl: paged_decode_step(
+                p, cfg, t, kp, vp, pt, sl, page_size=page_size,
+                use_kernel=use_kernel))
+
+    # --------------------------------------------------------------- admit
+    def admit(self, req: Request) -> None:
+        assert len(self.active) < self.max_batch
+        s = len(req.prompt)
+        n_pages = (s + req.max_new + self.page_size - 1) // self.page_size
+        for p in range(n_pages):
+            self.kv.alloc_page(req.seq_id, p)
+        # prefill with a contiguous cache, then scatter into pages
+        cache = T.init_cache(self.cfg, 1,
+                             n_pages * self.page_size, dtype=self.kv.dtype)
+        toks = jnp.asarray(req.prompt[None, :])
+        logits, cache = T.forward_serve(
+            self.params, self.cfg, {"tokens": toks}, cache,
+            jnp.zeros((1,), jnp.int32), decode=False)
+        self.kv.write_prefill(
+            {"k": cache["k"][:, :1], "v": cache["v"][:, :1]},
+            [req.seq_id], [s])
+        req.out.append(int(jnp.argmax(logits[0])))
+        self.active.append(req)
+
+    # --------------------------------------------------------------- decode
+    def step(self, *, rebalance: bool = False) -> None:
+        live = [r for r in self.active if not r.done]
+        if not live:
+            return
+        if rebalance:
+            self.balancer.step()
+            self.kv.dili.run_until_quiet(600)
+            self.kv.refresh_table()
+        b = len(live)
+        pp = max((len(r.prompt) + r.max_new + self.page_size - 1)
+                 // self.page_size for r in live)
+        page_table = self.kv.page_table([r.seq_id for r in live], pp)
+        seq_lens = jnp.asarray(
+            [len(r.prompt) + len(r.out) - 1 for r in live], jnp.int32)
+        tokens = jnp.asarray([[r.out[-1]] for r in live], jnp.int32)
+
+        # flatten layer-stacked pages for the jitted step
+        logits, kp, vp = self._decode(
+            self.params, tokens, self.kv.k_pages, self.kv.v_pages,
+            page_table, seq_lens)
+        self.kv.k_pages, self.kv.v_pages = kp, vp
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i, r in enumerate(live):
+            r.out.append(int(nxt[i]))
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.kv.free_seq(r.seq_id,
+                                 (len(r.prompt) + r.max_new +
+                                  self.page_size - 1) // self.page_size)
+        self.active = [r for r in self.active if not r.done]

@@ -1,0 +1,177 @@
+"""Paged KV cache with a DiLi page table (DESIGN.md §3.1).
+
+The page table is a DiLi instance: key = (seq_id << PAGE_BITS) | page_idx,
+value = physical page slot. This buys the serving layer exactly what the
+paper promises a database: the (seq,page) -> slot index is *dynamically
+re-partitionable* (Split hot key ranges) and *live-migratable* (Move a
+sublist of pages to another server while decode steps keep running —
+temporary replication covers the in-flight page allocations).
+
+The decode hot path is jitted and consumes an array *snapshot* of the table
+(page_table[b, p]) refreshed from DiLi state between steps; lookups inside
+the step are O(1) gathers (or the hybrid_search kernel when the table is
+consulted by key).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sim import Cluster
+from repro.core.types import DiLiConfig, OP_INSERT, OP_REMOVE
+from repro.kernels import ops as K
+from repro.models import transformer as T
+from repro.models.attention import decode_attention
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, rms_norm, swiglu
+
+PAGE_BITS = 12                      # up to 4096 pages per sequence
+MAX_SEQS = 1 << 17
+
+
+def page_key(seq_id: int, page: int) -> int:
+    return (seq_id << PAGE_BITS) | page
+
+
+class PagedKVManager:
+    """Host-side page allocation backed by a DiLi cluster."""
+
+    def __init__(self, cfg: ArchConfig, *, num_pages: int, page_size: int,
+                 dili_shards: int = 1, dtype=jnp.float32):
+        self.cfg = cfg
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.dtype = dtype
+        kh, hd, nl = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+        self.k_pages = jnp.zeros((nl, num_pages, page_size, kh, hd), dtype)
+        self.v_pages = jnp.zeros((nl, num_pages, page_size, kh, hd), dtype)
+        self.free_slots: List[int] = list(range(num_pages - 1, -1, -1))
+        dcfg = DiLiConfig(num_shards=dili_shards,
+                          pool_capacity=max(4 * num_pages, 1024),
+                          max_sublists=64, max_ctrs=64,
+                          max_scan=max(4 * num_pages, 1024),
+                          batch_size=32, mailbox_cap=256, move_batch=16)
+        self.dili = Cluster(dcfg)
+        self._table: Dict[int, int] = {}   # key -> slot (snapshot cache)
+
+    # ------------------------------------------------------------ alloc/free
+    def alloc_page(self, seq_id: int, page: int) -> int:
+        assert self.free_slots, "page pool exhausted"
+        slot = self.free_slots.pop()
+        key = page_key(seq_id, page)
+        self.dili.submit(0, [OP_INSERT], [key], [slot])
+        self.dili.run_until_quiet()
+        self._table[key] = slot
+        return slot
+
+    def free_seq(self, seq_id: int, num_pages: int) -> None:
+        keys = [page_key(seq_id, p) for p in range(num_pages)]
+        self.dili.submit(0, [OP_REMOVE] * len(keys), keys)
+        self.dili.run_until_quiet()
+        for k in keys:
+            slot = self._table.pop(k, None)
+            if slot is not None:
+                self.free_slots.append(slot)
+
+    # -------------------------------------------------------------- lookups
+    def refresh_table(self) -> None:
+        """Re-snapshot key->slot from the DiLi chains (after Split/Move)."""
+        table: Dict[int, int] = {}
+        for s in range(self.dili.n):
+            for e in self.dili.sublists(s):
+                if e["owner"] != s:
+                    continue
+                for k, _idx, val in self.dili.shard_chain(
+                        s, e["head_idx"], include_meta=True):
+                    table[k] = val
+        self._table = table
+
+    def page_table(self, seq_ids: List[int], pages_per_seq: int
+                   ) -> jnp.ndarray:
+        rows = []
+        for sid in seq_ids:
+            row = [self._table.get(page_key(sid, p), 0)
+                   for p in range(pages_per_seq)]
+            rows.append(row)
+        return jnp.asarray(np.asarray(rows, np.int32))
+
+    # ------------------------------------------------------------ KV writes
+    def write_prefill(self, layer_caches, seq_ids: List[int],
+                      seq_lens: List[int]) -> None:
+        """Scatter contiguous prefill caches [L,B,S,KH,D] into pages."""
+        ps = self.page_size
+        k_pages, v_pages = self.k_pages, self.v_pages
+        kc, vc = layer_caches["k"], layer_caches["v"]
+        for b, sid in enumerate(seq_ids):
+            n_pages = (seq_lens[b] + ps - 1) // ps
+            for p in range(n_pages):
+                slot = self._table[page_key(sid, p)]
+                k_blk = kc[:, b, p * ps:(p + 1) * ps]
+                v_blk = vc[:, b, p * ps:(p + 1) * ps]
+                k_pages = k_pages.at[:, slot, :k_blk.shape[1]].set(
+                    k_blk.astype(self.dtype))
+                v_pages = v_pages.at[:, slot, :v_blk.shape[1]].set(
+                    v_blk.astype(self.dtype))
+        self.k_pages, self.v_pages = k_pages, v_pages
+
+
+def paged_decode_step(params, cfg: ArchConfig, tokens, k_pages, v_pages,
+                      page_table, seq_lens, *, page_size: int,
+                      use_kernel: bool = True):
+    """One decode step for dense-family models over paged KV.
+
+    tokens: [B, 1]; page_table: [B, PP]; seq_lens: [B] (tokens already in
+    cache). Returns (logits [B, V], k_pages, v_pages) with the new token's
+    KV scattered into its page.
+    """
+    h = params["embed"][tokens]
+    b = tokens.shape[0]
+    positions = seq_lens[:, None]
+    blocks = params["blocks"]
+
+    def body(carry, xs):
+        h, = carry
+        blk, kp, vp = xs
+        x = rms_norm(h, blk["ln1"], cfg.norm_eps)
+        hd, nh, kh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        q = x @ blk["attn"]["wq"]
+        k = x @ blk["attn"]["wk"]
+        v = x @ blk["attn"]["wv"]
+        if cfg.qkv_bias:
+            q = q + blk["attn"]["bq"]
+            k = k + blk["attn"]["bk"]
+            v = v + blk["attn"]["bv"]
+        q = apply_rope(q.reshape(b, 1, nh, hd), positions, cfg.rope_theta)
+        k = apply_rope(k.reshape(b, 1, kh, hd), positions, cfg.rope_theta)
+        v = v.reshape(b, 1, kh, hd)
+
+        # scatter the new token's K/V into its page slot
+        slot = page_table[jnp.arange(b), seq_lens // page_size]
+        off = seq_lens % page_size
+        kp = kp.at[slot, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[slot, off].set(v[:, 0].astype(vp.dtype))
+
+        if use_kernel:
+            attn = K.paged_attention(q[:, 0], kp, vp, page_table,
+                                     seq_lens + 1, page_size=page_size)
+            attn = attn[:, None]
+        else:
+            kc = kp[page_table].reshape(b, -1, kh, hd)
+            vc = vp[page_table].reshape(b, -1, kh, hd)
+            attn = decode_attention(q, kc, vc, seq_lens + 1)
+        x = attn.reshape(b, 1, nh * hd) @ blk["attn"]["wo"]
+        h = h + x
+        hn = rms_norm(h, blk["ln2"], cfg.norm_eps)
+        x = swiglu(hn, blk["mlp"]["w_gate"], blk["mlp"]["w_up"],
+                   blk["mlp"]["w_down"])
+        return (h + x,), (kp, vp)
+
+    (h,), (k_pages, v_pages) = jax.lax.scan(
+        body, (h,), (blocks, k_pages, v_pages))
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (h @ head)[:, 0]
+    return logits, k_pages, v_pages

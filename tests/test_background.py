@@ -1,0 +1,213 @@
+"""Split / Move / Switch under concurrent client load, vs the oracle."""
+import numpy as np
+import pytest
+
+from repro.core import background as B
+from repro.core.oracle import OracleList
+from repro.core.sim import Cluster
+from repro.core.types import (DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE)
+
+
+def mkcfg(**kw):
+    base = dict(num_shards=2, pool_capacity=2048, max_sublists=32,
+                max_ctrs=32, max_scan=2048, batch_size=32, mailbox_cap=256,
+                move_batch=8)
+    base.update(kw)
+    return DiLiConfig(**base)
+
+
+def submit_and_expect(cl, oracle, shard, kinds, keys):
+    ids = cl.submit(shard, kinds, keys)
+    exp = oracle.apply_batch(kinds, keys)
+    return list(zip(ids, exp))
+
+
+def check(cl, expected):
+    for op_id, exp in expected:
+        assert op_id in cl.results, f"op {op_id} never completed"
+        got = cl.results[op_id]
+        assert got in (0, 1), f"op {op_id} error code {got}"
+        assert bool(got) == exp, f"op {op_id}: got {got}, want {exp}"
+
+
+def test_split_preserves_semantics():
+    cfg = mkcfg(num_shards=1)
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    keys = list(range(10, 110, 2))
+    exp = submit_and_expect(cl, oracle, 0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet()
+    check(cl, exp)
+
+    subs = cl.sublists(0)
+    assert len(subs) == 1
+    mid = cl.middle_item(0, subs[0]["head_idx"])
+    cl.split(0, subs[0]["keymax"], mid)
+    cl.run_until_quiet()
+
+    subs = cl.sublists(0)
+    assert len(subs) == 2, subs
+    assert subs[0]["keymax"] == subs[1]["keymin"]
+    assert subs[0]["size"] + subs[1]["size"] == len(keys)
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+    # ops keep working across the split boundary
+    kinds = [OP_FIND, OP_INSERT, OP_REMOVE, OP_FIND, OP_INSERT]
+    ks = [10, 11, 10, 10, 10]
+    exp = submit_and_expect(cl, oracle, 0, kinds, ks)
+    cl.run_until_quiet()
+    check(cl, exp)
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+def test_split_during_concurrent_ops():
+    cfg = mkcfg(num_shards=1)
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    rng = np.random.default_rng(0)
+    keys = sorted(rng.choice(np.arange(1, 1000), 80, replace=False).tolist())
+    exp = submit_and_expect(cl, oracle, 0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet()
+    check(cl, exp)
+
+    subs = cl.sublists(0)
+    mid = cl.middle_item(0, subs[0]["head_idx"])
+    cl.split(0, subs[0]["keymax"], mid)
+    # interleave client ops with the split's rounds
+    all_exp = []
+    for _ in range(6):
+        kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], 10).tolist()
+        ks = rng.integers(1, 1000, 10).tolist()
+        all_exp += submit_and_expect(cl, oracle, 0, kinds, ks)
+        cl.step()
+    cl.run_until_quiet()
+    check(cl, all_exp)
+    assert cl.all_keys() == sorted(oracle.snapshot())
+    assert len(cl.sublists(0)) == 2
+
+
+def test_move_quiet():
+    """Move a sublist with no concurrent load; ownership transfers."""
+    cfg = mkcfg()
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    keys = list(range(5, 65, 3))
+    exp = submit_and_expect(cl, oracle, 0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet()
+    check(cl, exp)
+
+    subs = cl.sublists(0)
+    cl.move(0, subs[0]["keymax"], target=1)
+    cl.run_until_quiet(400)
+
+    # ownership switched to shard 1, registry replicated on both shards
+    for s in range(2):
+        subs = cl.sublists(s)
+        assert len(subs) == 1
+        assert subs[0]["owner"] == 1, subs
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+    # ops from either assigned server still linearize correctly
+    kinds = [OP_FIND, OP_REMOVE, OP_INSERT, OP_FIND]
+    ks = [5, 5, 5, 5]
+    exp = submit_and_expect(cl, oracle, 0, kinds, ks)
+    cl.run_until_quiet()
+    check(cl, exp)
+    exp = submit_and_expect(cl, oracle, 1, [OP_FIND], [8])
+    cl.run_until_quiet()
+    check(cl, exp)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_move_under_write_load(seed):
+    """Client updates race the Move; temporary replication + replay must
+    reconstruct an identical live clone (paper Thm 10)."""
+    cfg = mkcfg()
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    rng = np.random.default_rng(seed)
+    keys = sorted(rng.choice(np.arange(1, 500), 60, replace=False).tolist())
+    exp = submit_and_expect(cl, oracle, 0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet()
+    check(cl, exp)
+
+    subs = cl.sublists(0)
+    cl.move(0, subs[0]["keymax"], target=1)
+    all_exp = []
+    for i in range(12):
+        kinds = rng.choice([OP_INSERT, OP_REMOVE, OP_FIND], 8,
+                           p=[0.45, 0.45, 0.1]).tolist()
+        ks = rng.integers(1, 500, 8).tolist()
+        # alternate the assigned server to exercise delegation
+        all_exp += submit_and_expect(cl, oracle, i % 2, kinds, ks)
+        cl.step()
+    cl.run_until_quiet(600)
+    check(cl, all_exp)
+    assert cl.all_keys() == sorted(oracle.snapshot())
+    # the move completed: shard 1 owns the sublist everywhere
+    for s in range(2):
+        assert all(e["owner"] == 1 for e in cl.sublists(s))
+    assert cl.stats["max_hops"] <= 4, cl.stats
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_move_with_channel_delays(seed):
+    """Cross-pair reordering: replicates may arrive before the items they
+    reference — the replay retry loop must heal (bounded retries)."""
+    cfg = mkcfg()
+    cl = Cluster(cfg, delay_prob=0.35, seed=seed)
+    oracle = OracleList()
+    rng = np.random.default_rng(seed + 100)
+    keys = sorted(rng.choice(np.arange(1, 300), 40, replace=False).tolist())
+    exp = submit_and_expect(cl, oracle, 0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet(400)
+    check(cl, exp)
+
+    subs = cl.sublists(0)
+    cl.move(0, subs[0]["keymax"], target=1)
+    all_exp = []
+    for i in range(16):
+        kinds = rng.choice([OP_INSERT, OP_REMOVE], 6).tolist()
+        ks = rng.integers(1, 300, 6).tolist()
+        all_exp += submit_and_expect(cl, oracle, i % 2, kinds, ks)
+        cl.step()
+    cl.run_until_quiet(800)
+    check(cl, all_exp)
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+def test_split_then_move_each_half():
+    cfg = mkcfg(num_shards=3)
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    keys = list(range(2, 202, 4))
+    exp = submit_and_expect(cl, oracle, 0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet()
+    check(cl, exp)
+
+    subs = cl.sublists(0)
+    mid = cl.middle_item(0, subs[0]["head_idx"])
+    cl.split(0, subs[0]["keymax"], mid)
+    cl.run_until_quiet()
+    subs = cl.sublists(0)
+    assert len(subs) == 2
+
+    cl.move(0, subs[0]["keymax"], target=1)
+    cl.run_until_quiet(400)
+    cl.move(0, subs[1]["keymax"], target=2)
+    cl.run_until_quiet(400)
+
+    owners = sorted(e["owner"] for e in cl.sublists(0))
+    assert owners == [1, 2]
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+    # traffic from every assigned server, spanning both moved sublists
+    all_exp = []
+    rng = np.random.default_rng(7)
+    for s in range(3):
+        kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], 12).tolist()
+        ks = rng.integers(1, 220, 12).tolist()
+        all_exp += submit_and_expect(cl, oracle, s, kinds, ks)
+    cl.run_until_quiet(400)
+    check(cl, all_exp)
+    assert cl.all_keys() == sorted(oracle.snapshot())

@@ -1,0 +1,114 @@
+"""Single-shard client-op semantics vs the sequential oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import messages as M
+from repro.core import refs
+from repro.core.oracle import OracleList
+from repro.core.ops import apply_op
+from repro.core.types import (DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE,
+                              RES_FALSE, RES_TRUE, ST_KEY, SH_KEY, init_shard)
+
+CFG = DiLiConfig(num_shards=1, pool_capacity=1024, max_sublists=16,
+                 max_ctrs=16, max_scan=1024, batch_size=32, mailbox_cap=64)
+
+
+def apply_batch(state, kinds, keys, me=0, cfg=CFG):
+    """Sequentially apply a batch of fresh client ops on one shard."""
+    outbox, count = M.empty_outbox(cfg.mailbox_cap)
+
+    def step(carry, x):
+        st, ob, ct = carry
+        kind, key = x
+        row = M.make_row(M.MSG_OP, me, me, a=kind, key=key,
+                         ref1=M.ref2i(refs.null_ref()), sid=me, ts=0)
+        out = apply_op(st, me, row, ob, ct, cfg)
+        return (out.state, out.outbox, out.count), out.result
+
+    (state, outbox, count), results = jax.lax.scan(
+        step, (state, outbox, count),
+        (jnp.asarray(kinds, jnp.int32), jnp.asarray(keys, jnp.int32)))
+    return state, np.asarray(results), outbox, count
+
+
+def snapshot_keys(state, me=0, max_steps=4096):
+    """Walk the whole chain, returning live (unmarked, non-sentinel) keys."""
+    nxt = np.asarray(state.pool.nxt)
+    key = np.asarray(state.pool.key)
+    reg = state.registry
+    size = int(reg.size)
+    assert size >= 1
+    head = int(refs.ref_idx(reg.subhead[0]))
+    out = []
+    curr = int(nxt[head]) & refs.IDX_MASK
+    curr_ref = int(nxt[head])
+    for _ in range(max_steps):
+        idx = curr_ref & refs.IDX_MASK
+        if idx == refs.NULL_IDX:
+            break
+        k = int(key[idx])
+        marked = bool(int(nxt[idx]) & refs.MARK_BIT)
+        if k == ST_KEY:
+            nref = int(nxt[idx]) & ~refs.MARK_BIT & 0xFFFFFFFF
+            if (nref & refs.IDX_MASK) == refs.NULL_IDX:
+                break
+            curr_ref = int(nxt[idx])
+            continue
+        if k != SH_KEY and not marked:
+            out.append(k)
+        curr_ref = int(nxt[idx])
+    return out
+
+
+def test_insert_find_remove_basic():
+    state = init_shard(CFG, 0, bootstrap=True)
+    kinds = [OP_INSERT, OP_INSERT, OP_INSERT, OP_FIND, OP_FIND,
+             OP_REMOVE, OP_FIND, OP_INSERT, OP_REMOVE, OP_REMOVE]
+    keys = [10, 5, 20, 5, 7, 5, 5, 5, 5, 99]
+    state, res, outbox, count = apply_batch(state, kinds, keys)
+    oracle = OracleList()
+    exp = oracle.apply_batch(kinds, keys)
+    assert [bool(r) for r in res] == exp
+    assert int(count) == 0  # single shard, no sublist moving => no messages
+    assert snapshot_keys(state) == sorted(oracle.snapshot())
+
+
+def test_duplicate_inserts_and_reinserts():
+    state = init_shard(CFG, 0, bootstrap=True)
+    kinds = [OP_INSERT] * 4 + [OP_REMOVE, OP_INSERT, OP_FIND]
+    keys = [42, 42, 41, 43, 42, 42, 42]
+    state, res, _, _ = apply_batch(state, kinds, keys)
+    assert [bool(r) for r in res] == [True, False, True, True,
+                                      True, True, True]
+    assert snapshot_keys(state) == [41, 42, 43]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_stream_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    state = init_shard(CFG, 0, bootstrap=True)
+    oracle = OracleList()
+    n = 200
+    kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE],
+                       size=n, p=[0.3, 0.4, 0.3]).astype(np.int32)
+    keys = rng.integers(1, 40, size=n).astype(np.int32)  # small key space
+    state, res, _, _ = apply_batch(state, kinds, keys)
+    exp = oracle.apply_batch(kinds, keys)
+    assert [bool(r) for r in res] == exp
+    assert snapshot_keys(state) == sorted(oracle.snapshot())
+
+
+def test_free_list_reuse():
+    state = init_shard(CFG, 0, bootstrap=True)
+    # fill, delete, re-insert: pool should recycle delinked slots
+    kinds = [OP_INSERT] * 8 + [OP_REMOVE] * 8 + [OP_FIND] * 8 + [OP_INSERT] * 8
+    keys = list(range(1, 9)) * 4
+    state, res, _, _ = apply_batch(state, kinds, keys)
+    assert all(bool(r) for r in res[:16])
+    assert not any(bool(r) for r in res[16:24])  # finds after removes
+    assert all(bool(r) for r in res[24:])
+    # alloc_top bounded: the finds delinked, the re-inserts recycled
+    assert int(state.alloc_top) <= 2 + 8 + 8
+    assert snapshot_keys(state) == list(range(1, 9))

@@ -1,0 +1,94 @@
+"""Kernel sweeps: Pallas (interpret mode) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as K
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+def make_registry(rng, m, c, coverage=0.7):
+    """Random sorted registry + per-sublist sorted key blocks."""
+    bounds = np.sort(rng.choice(np.arange(0, 10_000, 7), m, replace=False))
+    bounds[0] = -1
+    keymin = bounds.astype(np.int32)
+    blocks = np.full((m, c), INT_MAX, np.int32)
+    for i in range(m):
+        lo = int(bounds[i]) + 1
+        hi = int(bounds[i + 1]) if i + 1 < m else lo + 500
+        span = np.arange(lo, max(hi, lo + 1))
+        take = rng.permutation(span)[:int(c * coverage)]
+        take = np.sort(take)
+        blocks[i, :take.size] = take
+    return jnp.asarray(keymin), jnp.asarray(blocks)
+
+
+@pytest.mark.parametrize("m,c,b", [(8, 32, 128), (32, 128, 256),
+                                   (128, 128, 128), (64, 256, 512)])
+def test_hybrid_search_matches_ref(m, c, b):
+    rng = np.random.default_rng(m * 1000 + c)
+    keymin, blocks = make_registry(rng, m, c)
+    # half the queries are present keys, half are misses
+    present = np.asarray(blocks).ravel()
+    present = present[present != INT_MAX]
+    q_hit = rng.choice(present, b // 2)
+    q_miss = rng.integers(0, 10_500, b // 2)
+    queries = jnp.asarray(np.concatenate([q_hit, q_miss]).astype(np.int32))
+
+    slot, found = K.hybrid_search(keymin, blocks, queries, tile_q=b // 2)
+    slot_r, found_r = K.hybrid_search_ref(keymin, blocks, queries)
+    np.testing.assert_array_equal(np.asarray(found), np.asarray(found_r))
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(slot_r))
+    # every hit's slot actually holds the queried key
+    hits = np.asarray(found)
+    flat = np.asarray(blocks).ravel()
+    np.testing.assert_array_equal(flat[np.asarray(slot)[hits]],
+                                  np.asarray(queries)[hits])
+
+
+@pytest.mark.parametrize("b,h,kh,d,pages,ps", [
+    (4, 8, 2, 64, 8, 16),
+    (2, 16, 16, 128, 4, 32),   # MHA
+    (8, 4, 1, 64, 16, 8),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_ref(b, h, kh, d, pages, ps, dtype):
+    rng = np.random.default_rng(b * 100 + h)
+    pool = pages * 3
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    k_pages = jnp.asarray(rng.standard_normal((pool, ps, kh, d)) * 0.3, dtype)
+    v_pages = jnp.asarray(rng.standard_normal((pool, ps, kh, d)) * 0.3, dtype)
+    page_table = jnp.asarray(
+        rng.integers(0, pool, (b, pages)).astype(np.int32))
+    seq_lens = jnp.asarray(
+        rng.integers(1, pages * ps + 1, (b,)).astype(np.int32))
+
+    out = K.paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                            page_size=ps)
+    ref = K.paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
+                                page_size=ps)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=atol, rtol=2e-2)
+
+
+def test_paged_attention_ignores_padding_pages():
+    """Slots past seq_len must not affect the output."""
+    rng = np.random.default_rng(0)
+    b, h, kh, d, pages, ps = 2, 4, 2, 32, 4, 8
+    pool = 12
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((pool, ps, kh, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((pool, ps, kh, d)), jnp.float32)
+    seq = jnp.asarray([9, 17], jnp.int32)
+    pt1 = jnp.asarray(rng.integers(0, pool, (b, pages)).astype(np.int32))
+    # scramble only the fully-masked tail pages
+    pt2 = np.asarray(pt1).copy()
+    pt2[0, 2:] = (pt2[0, 2:] + 5) % pool
+    pt2[1, 3:] = (pt2[1, 3:] + 3) % pool
+    o1 = K.paged_attention(q, kp, vp, pt1, seq, page_size=ps)
+    o2 = K.paged_attention(q, kp, vp, jnp.asarray(pt2), seq, page_size=ps)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

@@ -1,0 +1,178 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+P1  Linearizability: any op stream + any Split/Move schedule + any channel
+    delay pattern => results identical to the sequential oracle and the
+    final key set is exact.
+P2  Replay permutation invariance (paper Thm 10): the move-destination list
+    is independent of replicate delivery interleaving (exercised via
+    channel holds).
+P3  Registry: get_by_key returns the covering entry for any sorted layout.
+P4  Counters: after quiescence every live sublist has stCt - endCt ==
+    offset (the Move-termination precondition is observable).
+P5  Hybrid-search kernel == oracle on arbitrary registry layouts.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import refs
+from repro.core import registry as reg_ops
+from repro.core.oracle import OracleList
+from repro.core.sim import Cluster
+from repro.core.types import (DiLiConfig, KEY_MAX, OP_FIND, OP_INSERT,
+                              OP_REMOVE, ST_KEY, init_shard)
+
+CFG = DiLiConfig(num_shards=2, pool_capacity=4096, max_sublists=32,
+                 max_ctrs=32, max_scan=4096, batch_size=16,
+                 mailbox_cap=256, move_batch=8)
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(
+    seed=st.integers(0, 10_000),
+    ops=st.lists(
+        st.tuples(st.sampled_from([OP_FIND, OP_INSERT, OP_REMOVE]),
+                  st.integers(1, 120)),
+        min_size=10, max_size=120),
+    move_at=st.integers(0, 6),
+    split_at=st.integers(0, 6),
+    delay=st.floats(0.0, 0.5),
+)
+def test_linearizable_under_background_ops(seed, ops, move_at, split_at,
+                                           delay):
+    """P1 + P2: random streams, random bg schedule, random channel holds."""
+    cl = Cluster(CFG, seed=seed, delay_prob=delay)
+    oracle = OracleList()
+    # seed the list so splits/moves have substance
+    base = list(range(10, 110, 7))
+    ids = cl.submit(0, [OP_INSERT] * len(base), base)
+    oracle.apply_batch([OP_INSERT] * len(base), base)
+    cl.run_until_quiet(400)
+
+    expected = {}
+    chunks = [ops[i:i + 8] for i in range(0, len(ops), 8)]
+    for i, chunk in enumerate(chunks):
+        if i == split_at:
+            subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+            if subs:
+                mid = cl.middle_item(0, subs[0]["head_idx"])
+                if mid is not None:
+                    cl.split(0, subs[0]["keymax"], mid)
+        if i == move_at:
+            subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+            if subs:
+                cl.move(0, subs[-1]["keymax"], 1)
+        kinds = [k for k, _ in chunk]
+        keys = [x for _, x in chunk]
+        got = cl.submit(i % 2, kinds, keys)
+        exp = oracle.apply_batch(kinds, keys)
+        expected.update(dict(zip(got, exp)))
+        cl.step()
+    cl.run_until_quiet(1500)
+
+    for op_id, exp in expected.items():
+        assert bool(cl.results[op_id]) == exp
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bounds=st.lists(st.integers(0, 10_000), min_size=1, max_size=20,
+                    unique=True),
+    queries=st.lists(st.integers(-5, 10_005), min_size=1, max_size=30),
+)
+def test_registry_cover_matches_bisect(bounds, queries):
+    """P3: get_by_key agrees with a plain python interval scan."""
+    bs = sorted(bounds)
+    cfg = DiLiConfig(max_sublists=32)
+    state = init_shard(cfg, 0, bootstrap=True)
+    reg = state.registry
+    # build entries (b[i], b[i+1]] from the bootstrap (SH_KEY, KEY_MAX]
+    lo = None
+    spans = []
+    prev = None
+    for b in bs:
+        if prev is not None and b > prev:
+            spans.append((prev, b))
+        prev = b
+    reg = reg._replace(size=jnp.zeros((), jnp.int32),
+                       keymin=jnp.full_like(reg.keymin, ST_KEY),
+                       keymax=jnp.full_like(reg.keymax, ST_KEY))
+    for a, b in spans:
+        reg = reg_ops.add_entry(reg, a, b, refs.make_ref(0, 0),
+                                refs.make_ref(0, 1), 0, 0)
+    got = np.asarray(reg_ops.get_by_key(reg, jnp.asarray(queries)))
+    for q, g in zip(queries, got):
+        want = -1
+        for i, (a, b) in enumerate(spans):
+            if a < q <= b:
+                want = i
+                break
+        assert g == want, (q, spans, got)
+
+
+def test_counters_balanced_after_quiescence():
+    """P4: stCt - endCt == offset for every live sublist at rest."""
+    cl = Cluster(CFG)
+    rng = np.random.default_rng(0)
+    keys = rng.permutation(np.arange(1, 400))[:120]
+    cl.submit(0, [OP_INSERT] * len(keys), keys.tolist())
+    cl.run_until_quiet(400)
+    subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+    mid = cl.middle_item(0, subs[0]["head_idx"])
+    cl.split(0, subs[0]["keymax"], mid)
+    cl.run_until_quiet(400)
+    cl.move(0, sorted(cl.sublists(0), key=lambda e: e["keymin"])[0]["keymax"],
+            1)
+    mixed = rng.choice([OP_INSERT, OP_REMOVE], 40).tolist()
+    ks = rng.integers(1, 400, 40).tolist()
+    cl.submit(1, mixed, ks)
+    cl.run_until_quiet(800)
+
+    for s in range(cl.n):
+        stc = np.asarray(cl.states[s].stct)
+        enc = np.asarray(cl.states[s].endct)
+        reg = cl.states[s].registry
+        for e in range(int(reg.size)):
+            sh = int(np.asarray(reg.subhead)[e])
+            if (sh & refs.SID_MASK) >> refs.IDX_BITS != s:
+                continue
+            slot = int(np.asarray(reg.ctr)[e])
+            off = int(np.asarray(reg.offset)[e])
+            if stc[slot] < 0:
+                continue  # switched-away
+            assert stc[slot] - enc[slot] == off, (s, e, slot)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([4, 16, 64]),
+    c=st.sampled_from([32, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_hybrid_search_kernel_property(m, c, seed):
+    """P5: kernel == oracle for random layouts, queries hit slots exactly."""
+    from repro.kernels import ops as K
+    rng = np.random.default_rng(seed)
+    bounds = np.sort(rng.choice(np.arange(0, 5000), m, replace=False))
+    bounds[0] = -1
+    keymin = jnp.asarray(bounds.astype(np.int32))
+    blocks = np.full((m, c), np.iinfo(np.int32).max, np.int32)
+    for i in range(m):
+        lo = int(bounds[i]) + 1
+        hi = int(bounds[i + 1]) if i + 1 < m else lo + 200
+        fill = rng.integers(0, c)
+        if hi > lo and fill:
+            vals = rng.choice(np.arange(lo, hi + 200), fill, replace=False)
+            vals = np.sort(vals)[:fill]
+            blocks[i, :len(vals)] = vals
+    blocks = jnp.asarray(blocks)
+    q = jnp.asarray(rng.integers(0, 5400, 128).astype(np.int32))
+    slot, found = K.hybrid_search(keymin, blocks, q, tile_q=128)
+    slot_r, found_r = K.hybrid_search_ref(keymin, blocks, q)
+    np.testing.assert_array_equal(np.asarray(found), np.asarray(found_r))
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(slot_r))

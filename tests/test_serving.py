@@ -1,0 +1,133 @@
+"""Serving: paged decode over a DiLi page table == contiguous decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paged import PagedKVManager, paged_decode_step
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("qwen2_5_3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, params
+
+
+def _greedy_contiguous(cfg, params, prompt, n_new):
+    b, s = 1, len(prompt)
+    cache = T.init_cache(cfg, b, 256, dtype=jnp.float32)
+    toks = jnp.asarray(np.asarray(prompt)[None, :])
+    logits, cache = T.forward_serve(params, cfg, {"tokens": toks}, cache,
+                                    jnp.zeros((b,), jnp.int32), decode=False)
+    out = [int(jnp.argmax(logits[0]))]
+    cache_len = jnp.asarray([s], jnp.int32)
+    for _ in range(n_new - 1):
+        logits, cache = T.forward_serve(
+            params, cfg, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)},
+            cache, cache_len, decode=True)
+        out.append(int(jnp.argmax(logits[0])))
+        cache_len = cache_len + 1
+    return out
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_paged_engine_matches_contiguous(model, use_kernel):
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 12).astype(np.int32),
+               rng.integers(0, cfg.vocab, 7).astype(np.int32)]
+    n_new = 6
+
+    ref = [_greedy_contiguous(cfg, params, p, n_new) for p in prompts]
+
+    eng = ServingEngine(cfg, params, page_size=8, num_pages=64,
+                        use_kernel=use_kernel)
+    for i, p in enumerate(prompts):
+        eng.admit(Request(seq_id=i, prompt=p, max_new=n_new))
+    for _ in range(n_new):
+        eng.step()
+    got = {}
+    for r in [*eng.active]:
+        got[r.seq_id] = r.out
+    # engine drops finished requests from active; recover via closure
+    assert not eng.active  # all done
+    # rerun to capture outputs
+    eng2 = ServingEngine(cfg, params, page_size=8, num_pages=64,
+                         use_kernel=use_kernel)
+    reqs = [Request(seq_id=i, prompt=p, max_new=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng2.admit(r)
+    for _ in range(n_new):
+        eng2.step()
+    for i, r in enumerate(reqs):
+        assert r.out[:n_new] == ref[i][:n_new], (i, r.out, ref[i])
+
+
+def test_paged_engine_with_live_rebalance(model):
+    """Split/Move the page index between decode steps: outputs unchanged."""
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, 10).astype(np.int32)
+               for _ in range(3)]
+    n_new = 5
+    ref = [_greedy_contiguous(cfg, params, p, n_new) for p in prompts]
+
+    eng = ServingEngine(cfg, params, page_size=8, num_pages=64,
+                        dili_shards=2)
+    reqs = [Request(seq_id=i, prompt=p, max_new=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.admit(r)
+    for step in range(n_new):
+        # force a move of the whole page-index sublist mid-decode
+        if step == 1:
+            subs = eng.kv.dili.sublists(0)
+            owned = [e for e in subs if e["owner"] == 0]
+            if owned:
+                eng.kv.dili.move(0, owned[0]["keymax"], 1)
+        eng.step(rebalance=True)
+    for i, r in enumerate(reqs):
+        assert r.out[:n_new] == ref[i][:n_new], (i, r.out, ref[i])
+    # the index did move
+    owners = {e["owner"] for s in range(2) for e in eng.kv.dili.sublists(s)}
+    assert 1 in owners
+
+
+def test_int8_kv_cache_numerics(model):
+    """kv_quant decode matches full-precision logits within int8 tolerance
+    and greedy tokens agree (§Perf cell B optimization)."""
+    import jax.numpy as jnp
+    cfg, params = model
+    qcfg = cfg.replace(kv_quant=True)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+
+    def run(c):
+        cache = T.init_cache(c, 1, 64, dtype=jnp.float32)
+        toks = jnp.asarray(prompt[None, :])
+        logits, cache = T.forward_serve(params, c, {"tokens": toks}, cache,
+                                        jnp.zeros((1,), jnp.int32),
+                                        decode=False)
+        outs = [logits]
+        cache_len = jnp.asarray([len(prompt)], jnp.int32)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(4):
+            logits, cache = T.forward_serve(params, c, {"tokens": tok},
+                                            cache, cache_len, decode=True)
+            outs.append(logits)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            cache_len = cache_len + 1
+        return outs
+
+    ref = run(cfg)
+    qnt = run(qcfg)
+    for a, b in zip(ref, qnt):
+        # same greedy decision, logits close
+        assert int(jnp.argmax(a[0])) == int(jnp.argmax(b[0]))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=0.15, rtol=0.1)

@@ -1,0 +1,46 @@
+"""Skip-list baseline vs the oracle (it feeds the Fig. 3a benchmark)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import skiplist as SL
+from repro.core.oracle import OracleList
+from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
+
+LEVELS = 8
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_skiplist_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    sl = SL.init(capacity=2048, max_level=LEVELS)
+    oracle = OracleList()
+    n = 400
+    kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], n,
+                       p=[0.2, 0.5, 0.3]).astype(np.int32)
+    keys = rng.integers(1, 200, n).astype(np.int32)
+    batch = jax.jit(lambda s, k, x: SL.apply_batch(s, k, x, LEVELS))
+    sl, res = batch(sl, kinds, keys)
+    exp = oracle.apply_batch(kinds, keys)
+    assert [bool(r) for r in np.asarray(res)] == exp
+    # level-0 chain equals the oracle's sorted key set
+    nxt = np.asarray(sl.nxt)
+    key = np.asarray(sl.key)
+    out, node = [], int(nxt[0, SL.HEAD])
+    while node != SL.NIL:
+        out.append(int(key[node]))
+        node = int(nxt[0, node])
+    assert out == sorted(oracle.snapshot())
+
+
+def test_skiplist_reuse_slots():
+    sl = SL.init(capacity=64, max_level=LEVELS)
+    batch = jax.jit(lambda s, k, x: SL.apply_batch(s, k, x, LEVELS))
+    ins = [OP_INSERT] * 30
+    rem = [OP_REMOVE] * 30
+    ks = list(range(1, 31))
+    sl, r1 = batch(sl, ins, ks)
+    sl, r2 = batch(sl, rem, ks)
+    sl, r3 = batch(sl, ins, ks)
+    assert all(np.asarray(r1)) and all(np.asarray(r2)) and all(np.asarray(r3))
+    assert int(sl.alloc_top) <= 31  # slots recycled
