@@ -3,7 +3,9 @@
 Each device of the (flattened) mesh is one DiLi shard ("server"). A round is:
 
   1. ``shard_round`` locally (same jitted body as the simulator — identical
-     semantics by construction),
+     semantics by construction; ``cfg.find_fastpath`` therefore applies here
+     too: eligible reads are answered by the vectorized pre-pass on-device,
+     never entering the collective fabric),
   2. bucket the outbox by destination shard,
   3. one ``all_to_all`` — the paper's RPC fabric. ≤2 collective hops per
      client op (≤3 during a Switch) is exactly Theorem 4's delegation bound.

@@ -1,0 +1,126 @@
+"""Batched FIND fast-path: answer a round's pure reads in one vectorized
+pass (DESIGN.md §4).
+
+The serial round answers every op through a per-row ``lax.while_loop``
+pointer chase, so read-heavy rounds pay O(sum of path lengths) *sequential*
+steps. This module is the §4 hybrid search applied to the round itself:
+
+  1. one vectorized registry binary search over all op keys
+     (``registry.get_by_key`` — the same logarithmic index the Pallas
+     kernel ``kernels/hybrid_search.py`` runs in VMEM),
+  2. one bounded lock-step gather-walk over ``pool.key``/``pool.nxt``
+     (``traverse.probe_batch`` — the kernel's bounded block sweep against
+     the linked pool),
+
+so the round's reads cost O(fast_scan_bound) vector steps total instead of
+O(ops x path) serial ones. The load balancer's split threshold bounds the
+sweep exactly as it bounds the kernel's block occupancy, which is what
+makes the Pallas kernel a drop-in for stage 2 on TPU.
+
+Correctness (the commute argument, DESIGN.md §4): within a round only
+MSG_OP handlers run between rows, and an insert/remove changes the
+membership of *its own key only* — so a FIND with no same-key mutation in
+the round reads the same answer at round start as at its serial position.
+Everything that could break that reasoning is bounced to the serial path
+*by construction*:
+
+  * rounds carrying any replicate/move/switch message (membership of a key
+    can change physically without a same-round client op) — all finds bounce;
+  * finds whose key collides with a same-round insert/remove;
+  * finds for remote clients (the serial path would emit a MSG_RESULT whose
+    outbox position must be preserved for per-channel FIFO determinism);
+  * finds that delegate, route nowhere, or whose walk touches a marked,
+    moving (newLoc != null) or switched (stCt < 0) node, crosses to another
+    shard, or exceeds ``cfg.fast_scan_bound``.
+
+A bounced find goes through the exact serial ``ops.apply_op`` — semantics
+are unchanged by construction, which ``tests/test_fastpath.py`` checks
+differentially (fastpath on vs. off, op-for-op).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import messages as M
+from .ops import resolve_route
+from .traverse import probe_batch
+from .types import (DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE, RES_FALSE,
+                    RES_TRUE, ShardState)
+
+# message kinds that cannot invalidate a round-start read: padding, result
+# routing (no state writes) and client ops (same-key collisions are checked
+# per find).
+_BENIGN_KINDS = (M.MSG_NONE, M.MSG_RESULT, M.MSG_OP)
+
+
+class FastOut(NamedTuple):
+    elig: jnp.ndarray   # bool[R] — row answered here; serial scan skips it
+    res: jnp.ndarray    # int32[R] RES_TRUE/RES_FALSE (valid where elig)
+
+
+def find_fastpath(state: ShardState, rows, me, cfg: DiLiConfig) -> FastOut:
+    """Classify + answer the round's eligible FIND rows. ``rows`` is the
+    round's full [R, FIELDS] inbox+client block; never mutates state."""
+    me = jnp.asarray(me, jnp.int32)
+    kind = rows[:, M.F_KIND]
+    op = rows[:, M.F_A]
+    key = rows[:, M.F_KEY]
+
+    is_op = kind == M.MSG_OP
+    benign = jnp.zeros(kind.shape, bool)
+    for k in _BENIGN_KINDS:
+        benign = benign | (kind == k)
+    round_ok = jnp.all(benign)
+
+    is_find = is_op & (op == OP_FIND)
+    is_mut = is_op & ((op == OP_INSERT) | (op == OP_REMOVE))
+    local_client = rows[:, M.F_SID] == me
+
+    # the pre-pass sweeps every lane whether one find is eligible or all
+    # are, so it only pays off with enough candidates; below the cut (and
+    # on drain / write-only / bg-message rounds) skip it wholesale.
+    precand = round_ok & is_find & local_client
+    gate = jnp.sum(precand) >= max(1, cfg.fast_min_batch)
+    bound = min(cfg.fast_scan_bound, cfg.max_scan)
+    n = key.shape[0]
+
+    def run(_):
+        # a find commutes with every other row of the round unless a
+        # mutation targets the same key (conservatively: at any row
+        # position). Sort-based membership test — O(R log R), not R^2;
+        # padding lanes hold INT32_MAX, which no valid key equals (a
+        # false positive there only bounces, never corrupts).
+        mut_keys = jnp.where(is_mut, key, jnp.iinfo(jnp.int32).max)
+        smut = jnp.sort(mut_keys)
+        pos = jnp.clip(jnp.searchsorted(smut, key), 0, n - 1)
+        collides = smut[pos] == key
+
+        rt = resolve_route(state, key, M.i2ref(rows[:, M.F_REF1]), me)
+        routed = (~rt.no_route) & (rt.owner == me) & (~rt.head_moved)
+        cand = precand & (~collides) & routed
+
+        # compact candidates into k lanes before sweeping: inboxes are
+        # sized for worst-case all-to-all fan-in (R can be 64x the client
+        # batch) and the sweep costs per *lane*, not per candidate. k
+        # covers a full client batch plus slack; overflow lanes just
+        # bounce to the serial path (cand & ok stays False for them).
+        k = min(n, max(2 * cfg.batch_size, 64))
+        sel = jnp.argsort((~cand).astype(jnp.int32) * n
+                          + jnp.arange(n, dtype=jnp.int32))[:k]
+        ok_k, present_k = probe_batch(state, rt.head_idx[sel], key[sel],
+                                      me, bound)
+        z = jnp.zeros((n,), bool)
+        ok = z.at[sel].set(ok_k)
+        present = z.at[sel].set(present_k)
+        return cand & ok, present
+
+    def skip(_):
+        z = jnp.zeros((n,), bool)
+        return z, z
+
+    elig, present = jax.lax.cond(gate, run, skip, None)
+    res = jnp.where(present, RES_TRUE, RES_FALSE).astype(jnp.int32)
+    return FastOut(elig=elig, res=res)

@@ -37,6 +37,43 @@ class OpOut(NamedTuple):
     count: jnp.ndarray
 
 
+class Route(NamedTuple):
+    """Resolved subhead for an op (Find lines 72-74). Vectorizes over keys."""
+    sh_ref: jnp.ndarray      # uint32 subhead Ref (hint, or registry entry)
+    owner: jnp.ndarray       # int32 shard id owning the subhead
+    head_idx: jnp.ndarray    # int32 pool index of the subhead on ``owner``
+    head_moved: jnp.ndarray  # bool — subhead's sublist switched away (stCt<0)
+    head_newloc: jnp.ndarray # uint32 forwarding Ref when head_moved
+    no_route: jnp.ndarray    # bool — registry has no covering entry
+
+
+def resolve_route(state: ShardState, key, sh_hint, me) -> Route:
+    """Resolve the subhead an op must start from, shared by the serial
+    ``apply_op`` path and the batched FIND fast-path (DESIGN.md §4).
+
+    A null/stale hint forces a registry lookup; a hinted subhead that has
+    itself moved (stCt < 0) forwards via its newLoc. All lanes vectorize:
+    ``key``/``sh_hint`` may be scalars or equally-shaped arrays.
+    """
+    me = jnp.asarray(me, jnp.int32)
+    need_lookup = refs.is_null(sh_hint)
+    entry = reg_ops.get_by_key(state.registry, key)
+    entry_sh = state.registry.subhead[jnp.clip(entry, 0, None)]
+    sh_ref = jnp.where(need_lookup, entry_sh, sh_hint)
+    no_route = need_lookup & (entry < 0)
+
+    owner = refs.ref_sid(sh_ref)
+    head_idx = refs.ref_idx(sh_ref)
+
+    head_ctr = state.pool.ctr[jnp.clip(head_idx, 0, state.pool.ctr.shape[0] - 1)]
+    head_moved = (owner == me) & (state.stct[head_ctr] < 0)
+    head_newloc = refs.unmarked(
+        state.pool.newloc[jnp.clip(head_idx, 0, state.pool.key.shape[0] - 1)])
+    return Route(sh_ref=sh_ref, owner=owner, head_idx=head_idx,
+                 head_moved=head_moved, head_newloc=head_newloc,
+                 no_route=no_route)
+
+
 def _alloc_node(state: ShardState):
     """Pop the free list, else bump-allocate. Returns (state, idx, ok)."""
     has_free = state.free_top > 0
@@ -72,24 +109,12 @@ def apply_op(state: ShardState, me, row, outbox, count,
     hops = row[M.F_X2]
 
     # ------------------------------------------------ resolve the subhead
-    # Find lines 72-74: a null/stale hint forces a registry lookup.
-    need_lookup = refs.is_null(sh_hint)
-    entry = reg_ops.get_by_key(state.registry, key)
-    entry_sh = state.registry.subhead[jnp.clip(entry, 0, None)]
-    sh_ref = jnp.where(need_lookup, entry_sh, sh_hint)
-    no_route = need_lookup & (entry < 0)
+    rt = resolve_route(state, key, sh_hint, me)
+    sh_ref, owner, head_idx = rt.sh_ref, rt.owner, rt.head_idx
+    no_route = rt.no_route
 
-    owner = refs.ref_sid(sh_ref)
-    head_idx = refs.ref_idx(sh_ref)
-
-    # stale hint: the hinted subhead may itself have moved (stCt < 0)
-    head_ctr = state.pool.ctr[jnp.clip(head_idx, 0, state.pool.ctr.shape[0] - 1)]
-    head_moved = (owner == me) & (state.stct[head_ctr] < 0)
-    head_newloc = refs.unmarked(
-        state.pool.newloc[jnp.clip(head_idx, 0, state.pool.key.shape[0] - 1)])
-
-    deleg_now = (owner != me) | head_moved
-    deleg_ref = jnp.where(owner != me, refs.unmarked(sh_ref), head_newloc)
+    deleg_now = (owner != me) | rt.head_moved
+    deleg_ref = jnp.where(owner != me, refs.unmarked(sh_ref), rt.head_newloc)
 
     # ------------------------------------------------ traverse
     do_search = (~no_route) & (~deleg_now) & (kind != OP_NOP)
@@ -107,7 +132,12 @@ def apply_op(state: ShardState, me, row, outbox, count,
 
     left, right = s.left, s.right
     right_key = state.pool.key[right]
-    key_present = found_ok & (right_key == key)
+    # a marked right is NOT present: the search cannot delink items of a
+    # moving sublist (newLoc != null), so a deleted-while-moving node may
+    # still be returned — treat it as absent. An insert then places the new
+    # (unmarked) node before it, so first-unmarked-wins order is preserved.
+    right_marked = refs.ref_mark(state.pool.nxt[right])
+    key_present = found_ok & (right_key == key) & (~right_marked)
 
     # ------------------------------------------------ FIND
     find_res = jnp.where(key_present, RES_TRUE, RES_FALSE)
@@ -144,7 +174,10 @@ def apply_op(state: ShardState, me, row, outbox, count,
         keymax=_set(pool.keymax, new_idx, row[M.F_VAL], ins_ok),
     )
     pool = pool._replace(nxt=_set(pool.nxt, new_idx, right_ref, ins_ok))
-    pool = pool._replace(nxt=_set(pool.nxt, left, new_ref, ins_ok))
+    # preserve left's own deletion mark when relinking (left can be a marked
+    # moving item the search could not delink — replay's Line 260 rule)
+    left_mark = pool.nxt[left] & jnp.uint32(refs.MARK_BIT)
+    pool = pool._replace(nxt=_set(pool.nxt, left, new_ref | left_mark, ins_ok))
     state = state._replace(pool=pool)
 
     # counters: stCt++ always; endCt++ only if no replicate (else deferred)

@@ -3,6 +3,12 @@
 The round is the unit of linearization (DESIGN.md §2). Handlers are
 dispatched per message kind with ``lax.switch`` — a single jit compilation
 serves every shard (``me`` is a traced argument).
+
+With ``cfg.find_fastpath`` (DESIGN.md §4) a vectorized pre-pass answers the
+round's eligible FIND rows before the serial scan; those rows dispatch to
+the no-op branch (their per-op ``while_loop`` pointer chase is skipped) and
+their completions are patched in from the pre-pass. Ineligible finds flow
+through the serial path untouched.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import background as B
+from . import fastpath as F
 from . import messages as M
 from . import ops as O
 from .types import DiLiConfig, RES_PENDING, ShardState
@@ -25,6 +32,7 @@ class RoundOut(NamedTuple):
     out_count: jnp.ndarray
     comp_slot: jnp.ndarray   # [K] client slots completed this round (-1 pad)
     comp_val: jnp.ndarray    # [K]
+    fast_hits: jnp.ndarray   # int32 — finds answered by the fast-path
 
 
 def _handle_op(state, bg, me, row, outbox, count, cfg):
@@ -80,7 +88,28 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
     """``inbox``/``client``: [*, FIELDS] int32 rows, MSG_NONE-padded."""
     me = jnp.asarray(me, jnp.int32)
     rows = jnp.concatenate([inbox, client], axis=0)
+    n_rows = rows.shape[0]
     outbox, count = M.empty_outbox(cfg.mailbox_cap)
+
+    if cfg.find_fastpath:
+        fast = F.find_fastpath(state, rows, me, cfg)
+    else:
+        fast = F.FastOut(elig=jnp.zeros((n_rows,), bool),
+                         res=jnp.zeros((n_rows,), jnp.int32))
+
+    # Stable-partition the rows the serial pass must execute to the front,
+    # so it runs a *dynamic* trip count: padding costs nothing (rounds are
+    # usually mostly MSG_NONE), and fast-path-answered finds never enter
+    # the loop at all — they neither mutate state nor emit messages, so
+    # removing them leaves the remaining rows' serial order (and with it
+    # per-(src,dst) FIFO) intact. The composite key skip*n + i is unique,
+    # so the sort is order-preserving on the kept rows.
+    skip = (rows[:, M.F_KIND] == M.MSG_NONE) | fast.elig
+    order = jnp.argsort(skip.astype(jnp.int32) * n_rows
+                        + jnp.arange(n_rows, dtype=jnp.int32))
+    rows = rows[order]
+    elig = fast.elig[order]
+    n_live = jnp.sum(~skip)
 
     branches = []
     for kind in range(_N_KINDS):
@@ -94,16 +123,27 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
 
         branches.append(mk(fn))
 
-    def step(carry, row):
-        st, b, ob, ct = carry
+    def cond(c):
+        return c[0] < n_live
+
+    def body(c):
+        i, st, b, ob, ct, cslots, cvals = c
+        row = rows[i]
         kind = jnp.clip(row[M.F_KIND], 0, _N_KINDS - 1)
         st, b, ob, ct, cs, cv = jax.lax.switch(
             kind, branches, (st, b, row, ob, ct))
-        return (st, b, ob, ct), (cs, cv)
+        return (i + 1, st, b, ob, ct,
+                cslots.at[i].set(cs), cvals.at[i].set(cv))
 
-    (state, bg, outbox, count), (cslots, cvals) = jax.lax.scan(
-        step, (state, bg, outbox, count), rows)
+    # completions start pre-filled with the fast-path answers (those rows
+    # sit past n_live); the serial loop overwrites its own rows' slots.
+    init = (jnp.zeros((), jnp.int32), state, bg, outbox, count,
+            jnp.where(elig, rows[:, M.F_TS], -1).astype(jnp.int32),
+            jnp.where(elig, fast.res[order], 0).astype(jnp.int32))
+    _, state, bg, outbox, count, cslots, cvals = jax.lax.while_loop(
+        cond, body, init)
 
     state, bg, outbox, count = B.bg_step(state, bg, me, outbox, count, cfg)
     return RoundOut(state=state, bg=bg, outbox=outbox, out_count=count,
-                    comp_slot=cslots, comp_val=cvals)
+                    comp_slot=cslots, comp_val=cvals,
+                    fast_hits=jnp.sum(fast.elig).astype(jnp.int32))

@@ -62,7 +62,8 @@ class Cluster:
         self.round_no = 0
         self.delay_prob = delay_prob
         self.rng = np.random.default_rng(seed)
-        self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0}
+        self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
+                      "fast_hits": 0}
 
     # ------------------------------------------------------------ client API
     def submit(self, shard: int, kinds: Sequence[int],
@@ -121,6 +122,7 @@ class Cluster:
         for s, out in enumerate(outs):
             self.states[s] = out.state
             self.bgs[s] = out.bg
+            self.stats["fast_hits"] += int(out.fast_hits)
             cnt = int(out.out_count)
             self.stats["max_outbox"] = max(self.stats["max_outbox"], cnt)
             assert cnt <= cfg.mailbox_cap, "outbox overflow — raise cap"

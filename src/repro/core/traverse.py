@@ -31,6 +31,69 @@ S_DELEGATE = 1
 S_OVERFLOW = 2
 
 
+def probe_batch(state: ShardState, head_idx, key, me, bound: int):
+    """Read-only batched traversal for the FIND fast-path (DESIGN.md §4).
+
+    Walks every query's sublist chain simultaneously: one ``fori_loop`` of
+    ``bound`` steps where each step advances all B cursors with vectorized
+    pool gathers — the lock-step analogue of ``kernels/hybrid_search.py``'s
+    bounded block sweep, run against the linked pool instead of packed
+    blocks. Never mutates state (no Harris delinking, no counters).
+
+    A lane is *clean* only while its walk touches exclusively local,
+    unmarked, non-moving (newLoc == null), non-switched (stCt >= 0) nodes
+    and terminates within ``bound`` steps. Anything else — a delegation
+    boundary, a moved sublist, a marked node that the serial path would
+    delink — makes the lane ineligible; the caller bounces it to the exact
+    serial ``search``.
+
+    Returns (ok[B] bool, present[B] bool): ``ok`` lanes terminated cleanly
+    and ``present`` is their membership answer.
+    """
+    pool = state.pool
+    n = pool.key.shape[0]
+    key = jnp.asarray(key, jnp.int32)
+    me = jnp.asarray(me, jnp.int32)
+    head_idx = jnp.clip(jnp.asarray(head_idx, jnp.int32), 0, n - 1)
+
+    def body(_, c):
+        curr, ok, done, present = c
+        active = ok & (~done)
+        idx = jnp.clip(refs.ref_idx(curr), 0, n - 1)
+
+        remote = refs.ref_sid(curr) != me
+        dead_end = refs.is_null(curr)
+        curr_nxt = pool.nxt[idx]
+        marked = refs.ref_mark(curr_nxt)
+        switched = state.stct[jnp.clip(pool.ctr[idx], 0,
+                                       state.stct.shape[0] - 1)] < 0
+        moving = ~refs.is_null(pool.newloc[idx])
+        bad = remote | dead_end | marked | switched | moving
+
+        curr_key = pool.key[idx]
+        is_sh = curr_key == SH_KEY
+        is_st = curr_key == ST_KEY
+        # stop at a covering SubTail (red lines 37-39) or the first node with
+        # key' >= key; cross non-covering SubTails into the next sublist.
+        st_stop = is_st & (key <= pool.keymax[idx])
+        ord_stop = (~is_st) & (~is_sh) & (curr_key >= key)
+        stop = (st_stop | ord_stop) & (~bad)
+
+        ok = ok & jnp.where(active, ~bad, True)
+        present = jnp.where(active & stop, (~is_st) & (curr_key == key),
+                            present)
+        done = done | (active & (stop | bad))
+        curr = jnp.where(active & (~stop) & (~bad), curr_nxt, curr)
+        return curr, ok, done, present
+
+    shape = key.shape
+    init = (pool.nxt[head_idx],
+            jnp.ones(shape, bool), jnp.zeros(shape, bool),
+            jnp.zeros(shape, bool))
+    _, ok, done, present = jax.lax.fori_loop(0, bound, body, init)
+    return ok & done, present
+
+
 class SearchOut(NamedTuple):
     status: jnp.ndarray   # int32
     left: jnp.ndarray     # int32 pool index of left node (valid if FOUND)
@@ -96,7 +159,11 @@ def search(state: ShardState, head_idx, key, me, cfg: DiLiConfig) -> SearchOut:
         do_delink = (~stop_deleg) & curr_marked & (~is_sh) & (~is_st) & \
             refs.is_null(pool.newloc[safe_idx])
         unlinked_to = refs.unmarked(curr_nxt)
-        nxt = jnp.where(do_delink, nxt.at[prev].set(unlinked_to), nxt)
+        # preserve prev's own deletion mark when relinking (the mark lives
+        # on prev's nxt word — same rule as replay's Line 260)
+        prev_mark = nxt[prev] & jnp.uint32(refs.MARK_BIT)
+        nxt = jnp.where(do_delink, nxt.at[prev].set(unlinked_to | prev_mark),
+                        nxt)
         # recycle the slot
         pos = jnp.clip(ftop, 0, flist.shape[0] - 1)
         flist = jnp.where(do_delink, flist.at[pos].set(curr_idx), flist)
@@ -107,7 +174,12 @@ def search(state: ShardState, head_idx, key, me, cfg: DiLiConfig) -> SearchOut:
         st_stop = (~stop_deleg) & is_st & (key <= pool.keymax[safe_idx])
         st_cross = (~stop_deleg) & is_st & (~st_stop)
 
-        # --- ordinary stop: first node with key' >= key.
+        # --- ordinary stop: first node with key' >= key. A marked node that
+        # ``do_delink`` exempted (item of a moving sublist, newLoc != null)
+        # stops the walk too — it must stay linked for the mover's cursor,
+        # and stopping keeps ``left`` unmarked — but it is NOT present:
+        # callers must check right's mark before treating the key as found
+        # (see key_present in ops.py).
         ord_stop = (~stop_deleg) & (~do_delink) & (~is_st) & (~is_sh) & \
             (curr_key >= key)
 

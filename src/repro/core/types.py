@@ -44,6 +44,13 @@ class DiLiConfig(NamedTuple):
     move_batch: int = 8              # MoveItem messages in flight per round
     quarantine_rounds: int = 4       # rounds before a switched chain is freed
     max_retries: int = 64            # replay requeue bound (tests assert << this)
+    find_fastpath: bool = True       # batched FIND pre-pass (DESIGN.md §4)
+    fast_scan_bound: int = 192       # fast-path walk bound (>= split_threshold
+                                     # + insert slack; longer walks bounce to
+                                     # the serial path)
+    fast_min_batch: int = 4          # min local finds in a round to run the
+                                     # pre-pass (below it the vector sweep
+                                     # costs more than the serial rows saved)
 
 
 class Pool(NamedTuple):

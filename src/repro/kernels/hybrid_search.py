@@ -15,6 +15,13 @@ balancer's split threshold bounds occupancy), so the hybrid search becomes
 which is exactly the paper's "logarithmic index + bounded linear scan", with
 the linear scan now a single VPU sweep instead of ~125 dependent loads.
 
+The runtime's batched FIND fast-path (``core/fastpath.py``, DESIGN.md §4)
+implements the same two stages against the live linked pool — stage 1 is
+``registry.get_by_key`` over the identical sorted-keymin layout, stage 2 a
+lock-step bounded walk in place of the block sweep — so on TPU, once
+sublists are kept in packed blocks, this kernel drops in as the fast-path's
+probe with no contract change.
+
 Layout:
   * ``keymin``  int32[M]      — registry, padding rows = INT32_MAX
   * ``blocks``  int32[M, C]   — per-sublist sorted keys, padding = INT32_MAX

@@ -1,0 +1,163 @@
+"""Differential + invariant tests for the batched FIND fast-path.
+
+D1  Differential equivalence (DESIGN.md §4): identical random mixed
+    workloads driven through two clusters — fastpath on vs. off — with
+    channel delays and a live balancer issuing Splits/Moves, must produce
+    op-for-op identical results and identical final key sets, both equal
+    to the sequential oracle.
+D2  The fast-path actually fires (guards against a silently never-eligible
+    pre-pass making D1 vacuous).
+D3  Sentinel error codes: RES_OVERFLOW / RES_POOLFULL never surface while
+    the balancer keeps sublists under split_threshold — the invariant
+    ops.py promises but nothing asserted until now.
+D4  Deleted-while-moving regression: a marked item of a moving sublist is
+    delink-exempt, so the search may return it — it must read as absent
+    (find FALSE, re-insert TRUE) and a subsequent insert must not erase
+    its deletion mark (resurrection).
+"""
+import numpy as np
+import pytest
+
+from repro.core.balancer import Balancer
+from repro.core.oracle import OracleList
+from repro.core.ops import RES_OVERFLOW, RES_POOLFULL
+from repro.core.sim import Cluster
+from repro.core.types import (DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE,
+                              RES_FALSE, RES_PENDING, RES_TRUE)
+
+CFG = DiLiConfig(num_shards=2, pool_capacity=4096, max_sublists=32,
+                 max_ctrs=32, max_scan=4096, batch_size=16,
+                 mailbox_cap=256, move_batch=8, split_threshold=48,
+                 find_fastpath=True)
+
+
+def _workload(seed, n_ops, key_space, read_frac):
+    rng = np.random.default_rng(seed)
+    w = (1 - read_frac) / 2
+    kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], n_ops,
+                       p=[read_frac, w, w])
+    keys = rng.integers(1, key_space, n_ops)
+    return kinds.tolist(), keys.tolist()
+
+
+def _drive(cfg, kinds, keys, *, seed, delay, balance_every=3):
+    """Run one cluster over the workload; returns (results, keys, hits)."""
+    cl = Cluster(cfg, seed=seed, delay_prob=delay)
+    bal = Balancer(cl)
+    ids = []
+    b = cfg.batch_size
+    r = 0
+    for i in range(0, len(kinds), b):
+        # all fresh ops enter at shard 0 so it overloads and Moves fire
+        ids += cl.submit(0, kinds[i:i + b], keys[i:i + b])
+        cl.step()
+        if r % balance_every == balance_every - 1:
+            bal.step()
+        r += 1
+    cl.run_until_quiet(2000)
+    return [cl.results[j] for j in ids], cl.all_keys(), cl.stats["fast_hits"]
+
+
+@pytest.mark.parametrize("seed,read_frac,delay", [
+    (0, 0.6, 0.25),
+    (1, 0.9, 0.15),
+])
+def test_differential_fastpath_vs_serial(seed, read_frac, delay):
+    """D1 + D2: fastpath on == fastpath off, op for op, under bg churn."""
+    kinds, keys = _workload(seed, 480, 160, read_frac)
+
+    res_on, keys_on, hits_on = _drive(
+        CFG, kinds, keys, seed=seed + 7, delay=delay)
+    res_off, keys_off, hits_off = _drive(
+        CFG._replace(find_fastpath=False), kinds, keys,
+        seed=seed + 7, delay=delay)
+
+    assert hits_off == 0
+    assert hits_on > 0, "fast-path never fired — differential test is vacuous"
+    assert res_on == res_off, "fastpath changed an op result"
+    assert keys_on == keys_off, "fastpath changed the final key set"
+
+    oracle = OracleList()
+    expected = oracle.apply_batch(kinds, keys)
+    assert [bool(v) for v in res_on] == expected
+    assert keys_on == sorted(oracle.snapshot())
+
+
+def test_fastpath_pure_reads_all_hit():
+    """D2: on a quiescent list, a read-only batch is answered entirely by
+    the fast-path (nothing to collide with, nothing moving)."""
+    cl = Cluster(CFG)
+    base = list(range(10, 400, 3))
+    cl.submit(0, [OP_INSERT] * len(base), base)
+    cl.run_until_quiet(800)
+    hits0 = cl.stats["fast_hits"]
+
+    rng = np.random.default_rng(3)
+    qs = rng.integers(1, 450, 64).tolist()
+    ids = cl.submit(0, [OP_FIND] * len(qs), qs)
+    cl.run_until_quiet(400)
+    assert cl.stats["fast_hits"] - hits0 == len(qs)
+    for j, q in zip(ids, qs):
+        assert bool(cl.results[j]) == (q in set(base))
+
+
+def test_deleted_while_moving_reads_absent():
+    """D4: mid-Move, remove a copied item (marked + newLoc set, so the
+    search returns it undelinked), then re-insert it and insert its
+    successor — presence answers and the final key set must match the
+    oracle, with no mark erasure resurrecting the removed key."""
+    from repro.core import refs
+
+    cfg = CFG._replace(move_batch=1, find_fastpath=False)
+    cl = Cluster(cfg)
+    base = list(range(10, 90, 10))        # 10..80, one bootstrap sublist
+    cl.submit(0, [OP_INSERT] * len(base), base)
+    cl.run_until_quiet(400)
+
+    subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+    cl.move(0, subs[0]["keymax"], 1)
+    # step until the first items are copied (newLoc set) but the sublist
+    # has not switched (stCt >= 0): the deleted-while-moving window
+    k = base[0]
+    for _ in range(40):
+        cl.step()
+        st = cl.states[0]
+        pool_keys = np.asarray(st.pool.key)
+        idxs = np.where(pool_keys == k)[0]
+        has_newloc = any(
+            int(np.asarray(st.pool.newloc)[i]) != refs.NULL_REF
+            for i in idxs)
+        slot = int(np.asarray(st.pool.ctr)[idxs[0]]) if len(idxs) else 0
+        if has_newloc and int(np.asarray(st.stct)[slot]) >= 0:
+            break
+    else:
+        pytest.skip("could not catch the mid-move window")
+
+    ids = cl.submit(0, [OP_REMOVE, OP_FIND, OP_INSERT, OP_INSERT, OP_FIND,
+                        OP_FIND],
+                    [k, k, k, k + 1, k, k + 1])
+    cl.run_until_quiet(1500)
+    got = [bool(cl.results[i]) for i in ids]
+    assert got == [True, False, True, True, True, True], got
+
+    oracle = OracleList(base)
+    oracle.apply_batch([OP_REMOVE, OP_INSERT, OP_INSERT], [k, k, k + 1])
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sentinel_codes_never_surface_under_balancer(seed):
+    """D3: with the balancer holding sublists under split_threshold, no op
+    ever reports RES_OVERFLOW or RES_POOLFULL (and none stays pending)."""
+    cfg = CFG._replace(max_scan=512, split_threshold=40)
+    kinds, keys = _workload(seed, 480, 300, 0.2)  # write-heavy: growth
+    res, final_keys, _ = _drive(cfg, kinds, keys, seed=seed, delay=0.1,
+                                balance_every=2)
+    bad = {RES_OVERFLOW, RES_POOLFULL, RES_PENDING}
+    assert not bad.intersection(res), \
+        f"sentinel codes surfaced: {sorted(set(res) & bad)}"
+    assert set(res) <= {RES_FALSE, RES_TRUE}
+
+    oracle = OracleList()
+    oracle.apply_batch(kinds, keys)
+    assert final_keys == sorted(oracle.snapshot())

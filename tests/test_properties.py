@@ -13,6 +13,8 @@ P5  Hybrid-search kernel == oracle on arbitrary registry layouts.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 import jax.numpy as jnp
