@@ -9,6 +9,10 @@
   lmstep small-LM train-step walltime (framework overhead sanity)
 
 Prints ``name,metric,value`` CSV rows; ``python -m benchmarks.run [names]``.
+Each benchmark additionally persists a ``BENCH_<name>.json`` artifact (rows
++ run metadata) next to the CSV prints — into ``$BENCH_OUT_DIR`` (default:
+current directory) — so the perf trajectory survives the run. ``--tiny``
+shrinks workloads for the CI smoke job.
 
 Scale note: sizes are CPU-feasible fractions of the paper's 1M-key/2M-op
 runs; the *comparisons* (relative throughput, latency orders) are the
@@ -17,6 +21,9 @@ write split evenly between insert/remove, load phase first).
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import sys
 import time
 
@@ -36,6 +43,28 @@ ROWS = []
 def emit(name, metric, value):
     ROWS.append((name, metric, value))
     print(f"{name},{metric},{value}", flush=True)
+
+
+def write_artifact(name, rows, duration_s, params=None):
+    """Persist one benchmark's rows + metadata as ``BENCH_<name>.json``."""
+    payload = {
+        "bench": name,
+        "rows": [{"name": n, "metric": m, "value": v} for n, m, v in rows],
+        "meta": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "duration_s": round(duration_s, 1),
+            "params": params or {},
+        },
+    }
+    path = os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                        f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
 
 
 # ------------------------------------------------------------------ helpers
@@ -63,11 +92,13 @@ def _drive_cluster(cl, kinds, keys, batch, *, balancer=None, shards=None):
 
 def _dili_throughput(n_shards, kinds, keys, *, split: bool,
                      load_kinds, load_keys, batch=64, fastpath=True):
+    """``fastpath`` toggles BOTH batched pre-passes (find §4 + mutation
+    §4b); False is the serial-only scan baseline."""
     cfg = DiLiConfig(num_shards=n_shards, pool_capacity=1 << 15,
                      max_sublists=256, max_ctrs=256, max_scan=1 << 15,
                      batch_size=batch, mailbox_cap=512,
                      split_threshold=125, move_batch=32,
-                     find_fastpath=fastpath)
+                     find_fastpath=fastpath, mut_fastpath=fastpath)
     cl = Cluster(cfg)
     bal = Balancer(cl) if split else None
     # load phase (timed separately from the measured mixed phase)
@@ -86,9 +117,11 @@ def _dili_throughput(n_shards, kinds, keys, *, split: bool,
 def fig3a(n_load=2000, n_ops=4000, key_space=8000):
     """Single-machine: DiLi (split on) vs Harris (split off) vs skip list.
 
-    DiLi runs twice per mix — batched FIND fast-path on (the default
-    runtime) vs. off (serial scan only) — so the fast-path's contribution
-    lands in the bench trajectory as ``fastpath_over_scan_r*``.
+    DiLi runs twice per mix — both batched pre-passes on (find §4 +
+    mutation §4b, the default runtime) vs. off (serial scan only) — so
+    their combined contribution lands in the bench trajectory as
+    ``fastpath_over_scan_r*``. The write-side pre-pass is what moves the
+    10%-read row (90% mutations).
     """
     load_kinds, load_keys = load_phase(n_load, key_space, seed=1)
     for read_pct in (10, 50, 90):
@@ -101,6 +134,7 @@ def fig3a(n_load=2000, n_ops=4000, key_space=8000):
         emit("fig3a", f"dili_r{read_pct}_ops_per_s", round(thr_dili))
         emit("fig3a", f"dili_r{read_pct}_sublists", n_sub)
         emit("fig3a", f"dili_r{read_pct}_fast_hits", cl.stats["fast_hits"])
+        emit("fig3a", f"dili_r{read_pct}_mut_hits", cl.stats["mut_hits"])
 
         thr_scan, _ = _dili_throughput(1, kinds, keys, split=True,
                                        load_kinds=load_kinds,
@@ -157,7 +191,7 @@ def fig3b(n_load=1500, n_ops=3000, key_space=6000):
                              max_sublists=256, max_ctrs=256, max_scan=1 << 15,
                              batch_size=64, mailbox_cap=512,
                              split_threshold=125, move_batch=32,
-                             find_fastpath=fastpath)
+                             find_fastpath=fastpath, mut_fastpath=fastpath)
             cl = Cluster(cfg)
             bal = Balancer(cl)
             _drive_cluster(cl, load_kinds, load_keys, 64, balancer=bal)
@@ -344,12 +378,27 @@ def lmstep():
 ALL = {"fig3a": fig3a, "fig3b": fig3b, "bgops": bgops,
        "kernels": kernels, "lmstep": lmstep}
 
+# shrunken workloads for the CI smoke lane (--tiny): same code paths,
+# minutes -> seconds. Benches without parameters run as-is.
+TINY = {
+    "fig3a": dict(n_load=300, n_ops=600, key_space=1200),
+    "fig3b": dict(n_load=200, n_ops=400, key_space=1000),
+    "bgops": dict(n_keys=300, key_space=1200),
+}
+
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    flags = [a for a in sys.argv[1:] if a.startswith("-")]
+    names = [a for a in sys.argv[1:] if not a.startswith("-")] or list(ALL)
+    tiny = "--tiny" in flags
     print("name,metric,value")
     for n in names:
-        ALL[n]()
+        params = TINY.get(n, {}) if tiny else {}
+        start = len(ROWS)
+        t0 = time.perf_counter()
+        ALL[n](**params)
+        write_artifact(n, ROWS[start:], time.perf_counter() - t0,
+                       params=params)
 
 
 if __name__ == "__main__":

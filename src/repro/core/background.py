@@ -246,7 +246,14 @@ def h_rep_delete(state, bg, me, row, outbox, count, cfg):
 
 
 def h_ack_insert(state, bg, me, row, outbox, count, cfg):
-    """InsertReplayResponseRecv (Lines 263-265)."""
+    """InsertReplayResponseRecv (Lines 263-265).
+
+    No marked-while-in-flight race catch is needed here (unlike
+    h_move_ack's Line 210): an item awaiting this ack was born with its
+    left's non-null newLoc (ops.py Line 189), so a remove racing the
+    replay sees node_moving and sends its own RepDelete — whose pair-FIFO
+    channel guarantees it arrives after the replay it chases.
+    """
     oldloc, slot = row[M.F_X1], row[M.F_X4]
     sid, ts = row[M.F_SID], row[M.F_TS]
     same = (state.pool.sid[oldloc] == sid) & (state.pool.ts[oldloc] == ts)

@@ -1,0 +1,382 @@
+"""Unified batched pre-pass: answer a round's eligible FINDs and *apply*
+its eligible INSERT/REMOVE rows in one vectorized sweep (DESIGN.md §4/§4b).
+
+The serial round answers every op through a per-row ``lax.while_loop``
+pointer chase, so rows pay O(sum of path lengths) *sequential* steps. The
+pre-pass is the §4 hybrid search applied to the round itself:
+
+  1. one vectorized registry binary search over all op keys
+     (``ops.resolve_route``) — shared by the read and write sides,
+  2. one bounded lock-step gather-walk (``traverse.probe_batch``) over all
+     candidate lanes, reads and writes together, returning presence plus
+     each lane's Harris window ``(left, right)`` — sharing the sweep is
+     what keeps the fixed cost at one walk per round,
+  3. a *same-key group fold*: lanes are sorted by (key, row order) and a
+     segmented scan replays each key group's serial semantics against its
+     round-start presence — every lane's result, plus the group's *net*
+     membership effect, falls out in O(log k) vector steps (zipfian rounds
+     hammer a few hot keys; bouncing duplicates would send exactly the
+     write-heavy rows this pass exists for back to the serial loop),
+  4. a conflict screen that bounces every group the static schedule
+     cannot guarantee (taxonomy below),
+  5. one scatter-based apply of each surviving group's net effect: batched
+     node allocation (free-list pops then bump), one ``nxt``-relink
+     scatter preserving left-node marks, mark-bit sets for net removes,
+     and stCt/endCt batch increments via ``segment_sum`` over counter
+     slots — with the per-row logical-clock ticks replaced by a *block
+     Lamport bump* (each materialized insert gets ``clock + rank``; the
+     clock advances once by the insert count), which preserves the §8
+     timestamp uniqueness/monotonicity lemmas.
+
+Correctness (the commute argument, DESIGN.md §4/§4b): rounds linearize
+rows in serial order, and an insert/remove changes the membership of *its
+own key only* — so a *whole key group* (every round row carrying that key)
+commutes with every other row of the round, as a result-and-membership
+equivalence. The fold replays the group's internal serial order exactly;
+group results and the group's net state change are therefore identical to
+the serial loop's, at any interleaving with other keys' rows. Everything
+outside the argument bounces to the exact serial ``ops.apply_op`` *by
+construction*:
+
+  * rounds carrying any non-benign message kind (replicate/move/switch
+    traffic can change membership physically) — everything bounces;
+  * incomplete groups: if ANY row of a key group is not an eligible
+    candidate lane (a remote-client row, a delegating row, a row past the
+    lane budget, a row of a side whose fast-path is disabled), the whole
+    group bounces — partial application would reorder against the
+    serial remainder;
+  * shared link words: two groups writing the same ``nxt`` word (a net
+    insert's ``left`` colliding with another group's ``left`` or net
+    remove's node — adjacent keys racing for one link word): both bounce;
+  * dirty walks: any group lane whose walk touched a marked, moving
+    (newLoc != null), switched (stCt < 0) or remote node, ran past
+    ``fast_scan_bound``, delegated or had no route — plus the same checks
+    on a net insert's ``left`` node, which the walk never inspects when
+    it is the SubHead itself;
+  * allocator-pressure rounds: the whole batch bounces when pool room
+    (free slots + bump space) comes within ``cfg.mut_alloc_headroom`` of
+    the batch's allocation demand — the serial path owns the RES_POOLFULL
+    edge.
+
+Eligible groups emit *no* messages (local clients, not moving, not
+delegating), so the serial rows' outbox positions — and with them
+per-(src,dst) FIFO order — are untouched. ``tests/test_fastpath.py`` and
+``tests/test_batch_apply.py`` check all of this differentially (each
+fast-path on vs. off, op-for-op, under channel delays and
+balancer-driven Split/Move/Merge churn).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import messages as M
+from . import refs
+from .ops import pool_slot, resolve_route
+from .traverse import probe_batch
+from .types import (DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE, RES_FALSE,
+                    RES_TRUE, ShardState)
+
+# message kinds that cannot invalidate a round-start read or mutation
+# window: padding, result routing (no list-state writes) and client ops
+# (same-key interactions are handled by the group fold).
+_BENIGN_KINDS = (M.MSG_NONE, M.MSG_RESULT, M.MSG_OP)
+
+
+class PreOut(NamedTuple):
+    state: ShardState        # post-apply state (== input when no mut ran)
+    find_elig: jnp.ndarray   # bool[R] — FIND answered here
+    mut_elig: jnp.ndarray    # bool[R] — INSERT/REMOVE applied here
+    res: jnp.ndarray         # int32[R] (valid where find_elig | mut_elig)
+
+
+def _count_eq(sorted_keys, query):
+    """Occurrences of each ``query`` value in ``sorted_keys``."""
+    return (jnp.searchsorted(sorted_keys, query, side="right")
+            - jnp.searchsorted(sorted_keys, query, side="left"))
+
+
+def _seg_last_nonzero(start, code):
+    """Segmented inclusive scan of 'last nonzero code so far'."""
+    def comb(a, b):
+        ra, va = a
+        rb, vb = b
+        return ra | rb, jnp.where(rb | (vb != 0), vb, va)
+    _, out = jax.lax.associative_scan(comb, (start, code))
+    return out
+
+
+def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
+                  *, run_find: bool, run_mut: bool) -> PreOut:
+    """Classify + answer/apply the round's eligible rows. ``rows`` is the
+    round's full [R, FIELDS] inbox+client block. ``run_find``/``run_mut``
+    are the static cfg gates (find_fastpath / mut_fastpath)."""
+    me = jnp.asarray(me, jnp.int32)
+    kind = rows[:, M.F_KIND]
+    op = rows[:, M.F_A]
+    key = rows[:, M.F_KEY]
+    n = key.shape[0]
+    zb = jnp.zeros((n,), bool)
+    zi = jnp.zeros((n,), jnp.int32)
+    if not (run_find or run_mut):
+        return PreOut(state, zb, zb, zi)
+
+    is_op = kind == M.MSG_OP
+    benign = jnp.zeros(kind.shape, bool)
+    for k in _BENIGN_KINDS:
+        benign = benign | (kind == k)
+    round_ok = jnp.all(benign)
+
+    is_find = is_op & (op == OP_FIND)
+    is_mut = is_op & ((op == OP_INSERT) | (op == OP_REMOVE))
+    is_fir = is_find | is_mut
+    local_client = rows[:, M.F_SID] == me
+
+    # the sweep costs per round whether one lane rides or a hundred, so it
+    # only pays off with enough candidates on at least one side; below
+    # both cuts (and on drain / bg-message rounds) skip it wholesale. Once
+    # it runs, the other side rides along for free.
+    gate = jnp.zeros((), bool)
+    if run_find:
+        gate = gate | (jnp.sum(round_ok & is_find & local_client)
+                       >= max(1, cfg.fast_min_batch))
+    if run_mut:
+        gate = gate | (jnp.sum(round_ok & is_mut & local_client)
+                       >= max(1, cfg.mut_min_batch))
+    bound = min(cfg.fast_scan_bound, cfg.max_scan)
+    imax = jnp.iinfo(jnp.int32).max
+
+    def run(_):
+        rt = resolve_route(state, key, M.i2ref(rows[:, M.F_REF1]), me)
+        routed = (~rt.no_route) & (rt.owner == me) & (~rt.head_moved)
+        side_on = (is_find if run_find else zb) | \
+            (is_mut if run_mut else zb)
+        cand = round_ok & side_on & local_client & routed
+
+        # compact candidates into k lanes before sweeping: inboxes are
+        # sized for worst-case all-to-all fan-in (R can be 64x the client
+        # batch) and the sweep costs per *lane*, not per candidate. k
+        # covers a full client batch plus slack; overflow lanes just
+        # bounce to the serial path (their whole key group with them).
+        k = min(n, max(2 * cfg.batch_size, 64))
+        sel = jnp.argsort((~cand).astype(jnp.int32) * n
+                          + jnp.arange(n, dtype=jnp.int32))[:k]
+        cand_k = cand[sel]
+        key_k = key[sel]
+        op_k = op[sel]
+        pr = probe_batch(state, rt.head_idx[sel], key[sel], me, bound)
+
+        pool = state.pool
+        cap = pool.key.shape[0]
+        left = pool_slot(state, pr.left)
+        right = pool_slot(state, pr.right)
+
+        # whole-group check: every op row of this key, eligible side or
+        # not, must be a selected candidate lane — otherwise bounce the
+        # group (padding lanes hold INT32_MAX, never a valid key).
+        cnt_all = _count_eq(jnp.sort(jnp.where(is_fir, key, imax)), key_k)
+        cnt_sel = _count_eq(jnp.sort(jnp.where(cand_k, key_k, imax)), key_k)
+        whole = cnt_sel == cnt_all
+
+        if not run_mut:
+            # read-only side: finds never interact with each other, so
+            # eligibility is per-lane — clean walk plus no same-key op row
+            # outside the candidate set (``whole`` is the §4 rule that a
+            # find colliding with any mutation bounces). The whole write
+            # pipeline below drops out of the trace.
+            elig_k = cand_k & pr.ok & whole
+            res_k = jnp.where(pr.present, RES_TRUE, RES_FALSE)
+            return (state, zb.at[sel].set(elig_k), zb,
+                    zi.at[sel].set(res_k.astype(jnp.int32)))
+
+        # ---- group fold: sort lanes by (key, original row position) so
+        # each key group is a contiguous segment in serial order. Padding
+        # lanes sort to one inert trailing segment.
+        fold_key = jnp.where(cand_k, key_k, imax)
+        s2 = jnp.lexsort((sel.astype(jnp.int32), fold_key))
+        kf = fold_key[s2]
+        start = jnp.concatenate(
+            [jnp.ones((1,), bool), kf[1:] != kf[:-1]])
+        sid_g = jnp.cumsum(start.astype(jnp.int32)) - 1   # segment ids
+        candf = cand_k[s2]
+        opf = op_k[s2]
+        okf = (~candf) | pr.ok[s2]
+        p0f = pr.present[s2]
+        is_insf = candf & (opf == OP_INSERT)
+        is_remf = candf & (opf == OP_REMOVE)
+
+        # presence evolves as 'last membership-setting op wins': insert
+        # sets present, remove sets absent, find passes through — a
+        # segmented last-nonzero scan over codes gives presence *after*
+        # every lane; shifting within the segment gives presence *before*.
+        code = jnp.where(is_insf, 2, jnp.where(is_remf, 1, 0))
+        last = _seg_last_nonzero(start, code)
+        paft = jnp.where(last == 2, True, jnp.where(last == 1, False, p0f))
+        pbef = jnp.where(start, p0f,
+                         jnp.concatenate([p0f[:1], paft[:-1]]))
+
+        # per-lane serial results and which mutations actually fire
+        fired = (is_insf & (~pbef)) | (is_remf & pbef)
+        resf = jnp.where(is_insf, ~pbef, pbef)
+
+        # ---- per-group (segment) aggregates
+        pos = jnp.arange(k, dtype=jnp.int32)
+        lead = jnp.clip(jax.ops.segment_min(pos, sid_g, num_segments=k),
+                        0, k - 1)
+        lastp = jnp.clip(jax.ops.segment_max(pos, sid_g, num_segments=k),
+                         0, k - 1)
+        seg_has = jax.ops.segment_max(candf.astype(jnp.int32), sid_g,
+                                      num_segments=k) > 0
+        clean = jax.ops.segment_min(okf.astype(jnp.int32), sid_g,
+                                    num_segments=k) > 0
+        any_fired = jax.ops.segment_max(fired.astype(jnp.int32), sid_g,
+                                        num_segments=k) > 0
+        n_fired = jax.ops.segment_sum(fired.astype(jnp.int32), sid_g,
+                                      num_segments=k)
+        # the lane whose insert materializes the group's final node
+        jstar = jax.ops.segment_max(jnp.where(fired & is_insf, pos, -1),
+                                    sid_g, num_segments=k)
+
+        p0_g = p0f[lead]
+        pend_g = paft[lastp]
+        whole_g = whole[s2][lead]
+        left_g = left[s2][lead]
+        right_g = right[s2][lead]
+
+        # net effect per group: the original node is removed iff it was
+        # present and any mutation fired (while present, only removes can
+        # fire first); a fresh node materializes iff the group ends
+        # present on a node other than the original.
+        does_mark = seg_has & p0_g & any_fired
+        does_ins = seg_has & pend_g & ~(p0_g & (~any_fired))
+
+        # left-node screen: the walk starts at head.nxt, so a left that is
+        # the SubHead itself was never inspected by the probe — re-check
+        # marked / moving (newLoc != null) / switched (stCt < 0) on every
+        # net insert's left before writing through its nxt word.
+        left_bad = refs.ref_mark(pool.nxt[left_g]) \
+            | (~refs.is_null(pool.newloc[left_g])) \
+            | (state.stct[jnp.clip(pool.ctr[left_g], 0,
+                                   state.stct.shape[0] - 1)] < 0)
+        elig_g = seg_has & clean & whole_g & \
+            jnp.where(does_ins, ~left_bad, True)
+
+        # shared-link-word screen: each group claims the existing nxt
+        # words it writes — a net insert claims left.nxt, a net remove
+        # claims right.nxt (the node's own word; within a group the two
+        # never coincide since left precedes right). Two groups claiming
+        # one word are adjacent keys racing for a single link: both
+        # bounce. Non-claiming slots get unique out-of-range tags.
+        does_mark = does_mark & elig_g
+        does_ins = does_ins & elig_g
+        dummies = cap + jnp.arange(2 * k, dtype=jnp.int32)
+        claim = jnp.concatenate([
+            jnp.where(does_ins, left_g, dummies[:k]),
+            jnp.where(does_mark, right_g, dummies[k:]),
+        ])
+        sc = jnp.sort(claim)
+        shared2 = _count_eq(sc, claim) >= 2
+        racing = shared2[:k] | shared2[k:]
+        elig_g = elig_g & (~racing)
+        does_mark = does_mark & (~racing)
+        does_ins = does_ins & (~racing)
+
+        # allocator-pressure screen (whole-batch): the serial path owns
+        # pool exhaustion (RES_POOLFULL), so near the edge nothing applies.
+        n_ins0 = jnp.sum(does_ins.astype(jnp.int32))
+        room = state.free_top + (cap - state.alloc_top)
+        alloc_ok = (n_ins0 + cfg.mut_alloc_headroom) <= room
+        elig_g = elig_g & alloc_ok
+        does_mark = does_mark & alloc_ok
+        does_ins = does_ins & alloc_ok
+
+        # ---- batched allocation: free-list pops first, then bump — the
+        # exact policy of ops._alloc_node, vectorized over net inserts.
+        rank = jnp.cumsum(does_ins.astype(jnp.int32)) - 1
+        n_ins = jnp.sum(does_ins.astype(jnp.int32))
+        from_free = rank < state.free_top
+        free_pos = jnp.clip(state.free_top - 1 - rank, 0,
+                            state.free_list.shape[0] - 1)
+        new_idx = jnp.where(from_free, state.free_list[free_pos],
+                            state.alloc_top + (rank - state.free_top))
+        new_idx = jnp.clip(new_idx, 0, cap - 1)
+        free_top2 = state.free_top - jnp.minimum(n_ins, state.free_top)
+        alloc_top2 = state.alloc_top + jnp.maximum(n_ins - state.free_top,
+                                                   0)
+
+        # ---- block Lamport bump (DESIGN.md §4b/§8): one clock advance
+        # covers the batch; each materialized node gets a unique,
+        # monotone ts.
+        new_ts = state.ts_clock + rank
+        clock2 = state.ts_clock + n_ins
+
+        # ---- single scatter-based apply of the groups' net effects.
+        # Bounced groups scatter to an out-of-bounds index and drop; all
+        # in-bounds targets are distinct by the screens above, so scatter
+        # order cannot matter.
+        drop = cap
+        ins_at = jnp.where(does_ins, new_idx, drop)
+        left_at = jnp.where(does_ins, left_g, drop)
+        rem_at = jnp.where(does_mark, right_g, drop)
+        left_ctr = pool.ctr[left_g]
+        # eligible lefts are unmarked/non-moving by screen; preserving the
+        # word's mark bit and inheriting newLoc keeps the write identical
+        # to the serial relink (Line 189 / replay Line 260) regardless.
+        left_mark = pool.nxt[left_g] & jnp.uint32(refs.MARK_BIT)
+        new_ref = refs.make_ref(me, new_idx)
+        key_g = key_k[s2][lead]
+        val_g = rows[sel, M.F_VAL][s2][jnp.clip(jstar, 0, k - 1)]
+
+        pool = pool._replace(
+            key=pool.key.at[ins_at].set(key_g, mode="drop"),
+            ts=pool.ts.at[ins_at].set(new_ts, mode="drop"),
+            sid=pool.sid.at[ins_at].set(me, mode="drop"),
+            ctr=pool.ctr.at[ins_at].set(left_ctr, mode="drop"),
+            newloc=pool.newloc.at[ins_at].set(pool.newloc[left_g],
+                                              mode="drop"),
+            keymax=pool.keymax.at[ins_at].set(val_g, mode="drop"),
+        )
+        nxt = pool.nxt.at[ins_at].set(refs.make_ref(me, right_g),
+                                      mode="drop")
+        nxt = nxt.at[left_at].set(new_ref | left_mark, mode="drop")
+        nxt = nxt.at[rem_at].set(refs.with_mark(state.pool.nxt[right_g]),
+                                 mode="drop")
+        pool = pool._replace(nxt=nxt)
+
+        # ---- counter batch increments: stCt++ and endCt++ per *fired*
+        # mutation, exactly the serial count (no eligible group is moving,
+        # so no endCt deferral), summed per counter slot in one
+        # segment_sum. left and right share a counter slot by
+        # construction (a walk enters a sublist through its SubHead).
+        w = elig_g & (n_fired > 0)
+        slot = jnp.where(w, jnp.clip(left_ctr, 0, state.stct.shape[0] - 1),
+                         0)
+        bump = jax.ops.segment_sum(jnp.where(w, n_fired, 0), slot,
+                                   num_segments=state.stct.shape[0])
+
+        st2 = state._replace(
+            pool=pool,
+            stct=state.stct + bump,
+            endct=state.endct + bump,
+            free_top=free_top2,
+            alloc_top=alloc_top2,
+            ts_clock=clock2,
+        )
+
+        # ---- scatter lane verdicts back to rows
+        eligf = candf & elig_g[sid_g]
+        elig_k = jnp.zeros((k,), bool).at[s2].set(eligf)
+        res_k = jnp.zeros((k,), jnp.int32).at[s2].set(
+            jnp.where(resf, RES_TRUE, RES_FALSE))
+        is_find_k = op_k == OP_FIND
+        felig = zb.at[sel].set(elig_k & is_find_k)
+        melig = zb.at[sel].set(elig_k & (~is_find_k))
+        return st2, felig, melig, zi.at[sel].set(res_k)
+
+    def skip(_):
+        return state, zb, zb, zi
+
+    st, felig, melig, res = jax.lax.cond(gate, run, skip, None)
+    return PreOut(state=st, find_elig=felig, mut_elig=melig, res=res)

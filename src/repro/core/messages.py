@@ -68,15 +68,19 @@ def empty_outbox(cap: int):
 
 
 def push(outbox, count, row, do: bool | jnp.ndarray = True):
-    """Functionally append ``row`` when ``do``; drops silently past cap.
+    """Functionally append ``row`` when ``do``.
 
-    Capacity is a static budget computed per round (ops can emit at most a
-    bounded number of messages); tests assert no round ever hits the cap.
+    ``count`` counts every *attempted* push, so it can exceed the buffer
+    capacity; rows past the cap are not stored. A final count above the cap
+    is the overflow signal: the routing layer must fail the round loudly
+    (``sim.Cluster.step`` raises ``OutboxOverflow`` unconditionally — a
+    dropped replicate/ack would deadlock the protocol silently). Capacities
+    are budgeted so healthy rounds never overflow.
     """
     cap = outbox.shape[0]
+    do = jnp.asarray(do)
     pos = jnp.clip(count, 0, cap - 1)
-    do = jnp.asarray(do) & (count < cap)
-    new = jnp.where(do, outbox.at[pos].set(row), outbox)
+    new = jnp.where(do & (count < cap), outbox.at[pos].set(row), outbox)
     return new, count + do.astype(jnp.int32)
 
 

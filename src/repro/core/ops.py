@@ -47,9 +47,18 @@ class Route(NamedTuple):
     no_route: jnp.ndarray    # bool — registry has no covering entry
 
 
+def pool_slot(state: ShardState, idx):
+    """Clip a (possibly hostile) pool index into the pool's single capacity
+    bound. Every ``Pool`` column shares ``pool.key.shape[0]`` — route every
+    clamped gather through this helper so a future capacity split cannot
+    leave one column clipped against another's bound (an out-of-bounds
+    gather in disguise)."""
+    return jnp.clip(idx, 0, state.pool.key.shape[0] - 1)
+
+
 def resolve_route(state: ShardState, key, sh_hint, me) -> Route:
     """Resolve the subhead an op must start from, shared by the serial
-    ``apply_op`` path and the batched FIND fast-path (DESIGN.md §4).
+    ``apply_op`` path and the batched fast-paths (DESIGN.md §4/§4b).
 
     A null/stale hint forces a registry lookup; a hinted subhead that has
     itself moved (stCt < 0) forwards via its newLoc. All lanes vectorize:
@@ -65,10 +74,10 @@ def resolve_route(state: ShardState, key, sh_hint, me) -> Route:
     owner = refs.ref_sid(sh_ref)
     head_idx = refs.ref_idx(sh_ref)
 
-    head_ctr = state.pool.ctr[jnp.clip(head_idx, 0, state.pool.ctr.shape[0] - 1)]
+    safe_head = pool_slot(state, head_idx)
+    head_ctr = state.pool.ctr[safe_head]
     head_moved = (owner == me) & (state.stct[head_ctr] < 0)
-    head_newloc = refs.unmarked(
-        state.pool.newloc[jnp.clip(head_idx, 0, state.pool.key.shape[0] - 1)])
+    head_newloc = refs.unmarked(state.pool.newloc[safe_head])
     return Route(sh_ref=sh_ref, owner=owner, head_idx=head_idx,
                  head_moved=head_moved, head_newloc=head_newloc,
                  no_route=no_route)

@@ -8,7 +8,14 @@ With ``cfg.find_fastpath`` (DESIGN.md §4) a vectorized pre-pass answers the
 round's eligible FIND rows before the serial scan; those rows dispatch to
 the no-op branch (their per-op ``while_loop`` pointer chase is skipped) and
 their completions are patched in from the pre-pass. Ineligible finds flow
-through the serial path untouched.
+through the serial path untouched. ``cfg.mut_fastpath`` (DESIGN.md §4b) is
+the write-side twin: a second pre-pass *applies* the round's eligible
+INSERT/REMOVE rows in one scatter sweep against round-start state, so those
+rows skip the serial loop too. Both pre-passes classify against the same
+round-start state (eligible finds never share a key with any mutation, so
+the order between the two pre-passes is immaterial); the serial loop then
+runs on the mutated state — safe because eligible mutations commute with
+every remaining row.
 """
 from __future__ import annotations
 
@@ -19,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from . import background as B
-from . import fastpath as F
+from . import batch_apply as BA
 from . import messages as M
 from . import ops as O
 from .types import DiLiConfig, RES_PENDING, ShardState
@@ -33,6 +40,7 @@ class RoundOut(NamedTuple):
     comp_slot: jnp.ndarray   # [K] client slots completed this round (-1 pad)
     comp_val: jnp.ndarray    # [K]
     fast_hits: jnp.ndarray   # int32 — finds answered by the fast-path
+    mut_hits: jnp.ndarray    # int32 — mutations applied by the fast-path
 
 
 def _handle_op(state, bg, me, row, outbox, count, cfg):
@@ -91,24 +99,29 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
     n_rows = rows.shape[0]
     outbox, count = M.empty_outbox(cfg.mailbox_cap)
 
-    if cfg.find_fastpath:
-        fast = F.find_fastpath(state, rows, me, cfg)
-    else:
-        fast = F.FastOut(elig=jnp.zeros((n_rows,), bool),
-                         res=jnp.zeros((n_rows,), jnp.int32))
+    # one combined pre-pass: answers eligible FINDs from round-start state
+    # and applies eligible INSERT/REMOVEs against it (eligible finds never
+    # share a key with a mutation, so their relative order is immaterial),
+    # sharing a single route-resolve + bounded gather-walk.
+    pre = BA.round_prepass(state, rows, me, cfg,
+                           run_find=cfg.find_fastpath,
+                           run_mut=cfg.mut_fastpath)
+    state = pre.state
 
     # Stable-partition the rows the serial pass must execute to the front,
     # so it runs a *dynamic* trip count: padding costs nothing (rounds are
-    # usually mostly MSG_NONE), and fast-path-answered finds never enter
-    # the loop at all — they neither mutate state nor emit messages, so
-    # removing them leaves the remaining rows' serial order (and with it
-    # per-(src,dst) FIFO) intact. The composite key skip*n + i is unique,
-    # so the sort is order-preserving on the kept rows.
-    skip = (rows[:, M.F_KIND] == M.MSG_NONE) | fast.elig
+    # usually mostly MSG_NONE), and fast-path-answered rows never enter
+    # the loop at all — fast finds neither mutate state nor emit messages,
+    # and fast mutations commute with every remaining row and emit nothing
+    # either, so removing them leaves the remaining rows' serial order (and
+    # with it per-(src,dst) FIFO) intact. The composite key skip*n + i is
+    # unique, so the sort is order-preserving on the kept rows.
+    skip = (rows[:, M.F_KIND] == M.MSG_NONE) | pre.find_elig | pre.mut_elig
     order = jnp.argsort(skip.astype(jnp.int32) * n_rows
                         + jnp.arange(n_rows, dtype=jnp.int32))
     rows = rows[order]
-    elig = fast.elig[order]
+    elig = pre.find_elig[order]
+    melig = pre.mut_elig[order]
     n_live = jnp.sum(~skip)
 
     branches = []
@@ -135,15 +148,16 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
         return (i + 1, st, b, ob, ct,
                 cslots.at[i].set(cs), cvals.at[i].set(cv))
 
-    # completions start pre-filled with the fast-path answers (those rows
+    # completions start pre-filled with the pre-pass answers (those rows
     # sit past n_live); the serial loop overwrites its own rows' slots.
     init = (jnp.zeros((), jnp.int32), state, bg, outbox, count,
-            jnp.where(elig, rows[:, M.F_TS], -1).astype(jnp.int32),
-            jnp.where(elig, fast.res[order], 0).astype(jnp.int32))
+            jnp.where(elig | melig, rows[:, M.F_TS], -1).astype(jnp.int32),
+            jnp.where(elig | melig, pre.res[order], 0).astype(jnp.int32))
     _, state, bg, outbox, count, cslots, cvals = jax.lax.while_loop(
         cond, body, init)
 
     state, bg, outbox, count = B.bg_step(state, bg, me, outbox, count, cfg)
     return RoundOut(state=state, bg=bg, outbox=outbox, out_count=count,
                     comp_slot=cslots, comp_val=cvals,
-                    fast_hits=jnp.sum(fast.elig).astype(jnp.int32))
+                    fast_hits=jnp.sum(pre.find_elig).astype(jnp.int32),
+                    mut_hits=jnp.sum(pre.mut_elig).astype(jnp.int32))

@@ -29,6 +29,17 @@ from .types import (DiLiConfig, KEY_MAX, KEY_MIN, OP_FIND, OP_INSERT,
                     OP_REMOVE, SH_KEY, ST_KEY, ShardState, init_shard)
 
 
+class OutboxOverflow(RuntimeError):
+    """A shard emitted more messages in one round than ``mailbox_cap``.
+
+    Overflowing rows are not stored (``messages.push``), and a lost
+    replicate/ack deadlocks ``run_until_quiet`` — so this is raised
+    unconditionally (never an ``assert``: ``python -O`` must not turn it
+    into silent truncation). Fix: raise ``cfg.mailbox_cap`` or feed the
+    shard fewer ops per round.
+    """
+
+
 class Cluster:
     def __init__(self, cfg: DiLiConfig, *, seed: int = 0,
                  delay_prob: float = 0.0,
@@ -63,7 +74,7 @@ class Cluster:
         self.delay_prob = delay_prob
         self.rng = np.random.default_rng(seed)
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
-                      "fast_hits": 0}
+                      "fast_hits": 0, "mut_hits": 0}
 
     # ------------------------------------------------------------ client API
     def submit(self, shard: int, kinds: Sequence[int],
@@ -73,11 +84,21 @@ class Cluster:
 
         Returns op ids; results appear in ``self.results`` once linearized.
         ``values`` ride with inserts (item payload, e.g. a KV-page slot).
+        ``kinds``/``keys``/``values`` may be any iterables (generators
+        included) — they are materialized exactly once up front.
         """
+        kinds = [int(k) for k in kinds]
+        keys = [int(k) for k in keys]
+        if len(kinds) != len(keys):
+            raise ValueError(
+                f"submit: {len(kinds)} kinds vs {len(keys)} keys")
+        values = ([0] * len(keys) if values is None
+                  else [int(v) for v in values])
+        if len(values) != len(keys):
+            raise ValueError(
+                f"submit: {len(values)} values vs {len(keys)} keys")
         ids = []
         rows = []
-        if values is None:
-            values = [0] * len(list(keys))
         for kind, key, val in zip(kinds, keys, values):
             slot = self._next_slot
             self._next_slot += 1
@@ -123,9 +144,17 @@ class Cluster:
             self.states[s] = out.state
             self.bgs[s] = out.bg
             self.stats["fast_hits"] += int(out.fast_hits)
+            self.stats["mut_hits"] += int(out.mut_hits)
             cnt = int(out.out_count)
             self.stats["max_outbox"] = max(self.stats["max_outbox"], cnt)
-            assert cnt <= cfg.mailbox_cap, "outbox overflow — raise cap"
+            if cnt > cfg.mailbox_cap:
+                # not an assert: under ``python -O`` a dropped message
+                # (replicate/ack) would silently deadlock run_until_quiet.
+                raise OutboxOverflow(
+                    f"shard {s} emitted {cnt} messages in round "
+                    f"{self.round_no}, mailbox_cap={cfg.mailbox_cap}: "
+                    f"{cnt - cfg.mailbox_cap} rows dropped — raise "
+                    f"mailbox_cap or reduce the per-round feed")
             ob = np.asarray(out.outbox)[:cnt]
             if ob.size:
                 new_msgs.append(ob)

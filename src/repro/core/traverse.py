@@ -31,8 +31,16 @@ S_DELEGATE = 1
 S_OVERFLOW = 2
 
 
-def probe_batch(state: ShardState, head_idx, key, me, bound: int):
-    """Read-only batched traversal for the FIND fast-path (DESIGN.md §4).
+class ProbeOut(NamedTuple):
+    ok: jnp.ndarray       # bool[B] — lane terminated cleanly within bound
+    present: jnp.ndarray  # bool[B] — membership answer (valid where ok)
+    left: jnp.ndarray     # int32[B] pool idx of the stop node's predecessor
+    right: jnp.ndarray    # int32[B] pool idx of the stop node
+
+
+def probe_batch(state: ShardState, head_idx, key, me, bound: int) -> ProbeOut:
+    """Read-only batched traversal for the batched fast-paths (DESIGN.md
+    §4/§4b).
 
     Walks every query's sublist chain simultaneously: one ``fori_loop`` of
     ``bound`` steps where each step advances all B cursors with vectorized
@@ -47,8 +55,15 @@ def probe_batch(state: ShardState, head_idx, key, me, bound: int):
     delink — makes the lane ineligible; the caller bounces it to the exact
     serial ``search``.
 
-    Returns (ok[B] bool, present[B] bool): ``ok`` lanes terminated cleanly
-    and ``present`` is their membership answer.
+    ``ok`` lanes terminated cleanly; ``present`` is their membership
+    answer; ``(left, right)`` is the Harris window the walk stopped at —
+    ``right`` is the stop node (first node with key' >= key, or the
+    covering SubTail) and ``left`` its predecessor (the SubHead when the
+    walk stopped on its first step). The mutation fast-path
+    (``core/batch_apply.py``) links inserts at ``left.nxt`` and marks
+    removes at ``right.nxt``. NB the walk starts at ``head.nxt``, so
+    ``left == head_idx`` lanes never had their left node screened here —
+    callers must re-check the head before writing through it.
     """
     pool = state.pool
     n = pool.key.shape[0]
@@ -57,7 +72,7 @@ def probe_batch(state: ShardState, head_idx, key, me, bound: int):
     head_idx = jnp.clip(jnp.asarray(head_idx, jnp.int32), 0, n - 1)
 
     def body(_, c):
-        curr, ok, done, present = c
+        curr, prev, right, ok, done, present = c
         active = ok & (~done)
         idx = jnp.clip(refs.ref_idx(curr), 0, n - 1)
 
@@ -82,16 +97,32 @@ def probe_batch(state: ShardState, head_idx, key, me, bound: int):
         ok = ok & jnp.where(active, ~bad, True)
         present = jnp.where(active & stop, (~is_st) & (curr_key == key),
                             present)
+        right = jnp.where(active & stop, idx, right)
         done = done | (active & (stop | bad))
-        curr = jnp.where(active & (~stop) & (~bad), curr_nxt, curr)
-        return curr, ok, done, present
+        advance = active & (~stop) & (~bad)
+        prev = jnp.where(advance, idx, prev)
+        curr = jnp.where(advance, curr_nxt, curr)
+        return curr, prev, right, ok, done, present
 
     shape = key.shape
-    init = (pool.nxt[head_idx],
+    init = (pool.nxt[head_idx], head_idx, head_idx,
             jnp.ones(shape, bool), jnp.zeros(shape, bool),
             jnp.zeros(shape, bool))
-    _, ok, done, present = jax.lax.fori_loop(0, bound, body, init)
-    return ok & done, present
+
+    # early-exit sweep: the fixed cost is the *longest* live lane, not the
+    # bound — the balancer keeps that near split_threshold, typically well
+    # under fast_scan_bound.
+    def w_cond(c):
+        i, (curr, prev, right, ok, done, present) = c
+        return (i < bound) & jnp.any(ok & (~done))
+
+    def w_body(c):
+        i, carry = c
+        return i + 1, body(i, carry)
+
+    _, (_, prev, right, ok, done, present) = jax.lax.while_loop(
+        w_cond, w_body, (jnp.zeros((), jnp.int32), init))
+    return ProbeOut(ok=ok & done, present=present, left=prev, right=right)
 
 
 class SearchOut(NamedTuple):
@@ -152,12 +183,20 @@ def search(state: ShardState, head_idx, key, me, cfg: DiLiConfig) -> SearchOut:
         stop_deleg = remote | is_moved
 
         # --- marked node (and not a sentinel): delink it (Harris helping).
-        # Exception (§5.4): items of a sublist being moved (newLoc set) stay
-        # linked — the mover still references them (its cursor) and the paper
-        # delinks them "once the cloned sublist becomes active", on the
-        # target. Recycling such a slot would dangle the move cursor.
+        # Exception (§5.4): items of a sublist being moved stay linked — the
+        # mover still references them (its cursor) and the paper delinks
+        # them "once the cloned sublist becomes active", on the target.
+        # Recycling such a slot would dangle the move cursor. The check is
+        # region-level, via the covering SubHead's newLoc, not just the
+        # item's own: an item marked while its MoveItem copy is in flight
+        # still has newLoc == null, and delinking it recycles the slot the
+        # MOVE_ACK's <sId, ts> identity check needs — the ack's
+        # marked-in-flight race RepDelete (h_move_ack Line 210) would be
+        # silently skipped and the removed key would resurrect on the
+        # target.
         do_delink = (~stop_deleg) & curr_marked & (~is_sh) & (~is_st) & \
-            refs.is_null(pool.newloc[safe_idx])
+            refs.is_null(pool.newloc[safe_idx]) & \
+            refs.is_null(pool.newloc[head2])
         unlinked_to = refs.unmarked(curr_nxt)
         # preserve prev's own deletion mark when relinking (the mark lives
         # on prev's nxt word — same rule as replay's Line 260)

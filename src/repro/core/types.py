@@ -51,6 +51,14 @@ class DiLiConfig(NamedTuple):
     fast_min_batch: int = 4          # min local finds in a round to run the
                                      # pre-pass (below it the vector sweep
                                      # costs more than the serial rows saved)
+    mut_fastpath: bool = True        # batched INSERT/REMOVE pre-pass
+                                     # (DESIGN.md §4b)
+    mut_min_batch: int = 4           # min eligible mutations in a round to
+                                     # run the mutation pre-pass
+    mut_alloc_headroom: int = 32     # bounce the whole mutation batch when
+                                     # pool room (free slots + bump space)
+                                     # falls within this margin of the
+                                     # batch's allocation demand
 
 
 class Pool(NamedTuple):

@@ -15,12 +15,18 @@ balancer's split threshold bounds occupancy), so the hybrid search becomes
 which is exactly the paper's "logarithmic index + bounded linear scan", with
 the linear scan now a single VPU sweep instead of ~125 dependent loads.
 
-The runtime's batched FIND fast-path (``core/fastpath.py``, DESIGN.md §4)
-implements the same two stages against the live linked pool — stage 1 is
-``registry.get_by_key`` over the identical sorted-keymin layout, stage 2 a
-lock-step bounded walk in place of the block sweep — so on TPU, once
-sublists are kept in packed blocks, this kernel drops in as the fast-path's
-probe with no contract change.
+The runtime's batched round pre-pass (``core/batch_apply.py`` — FINDs per
+DESIGN.md §4, INSERT/REMOVE per §4b) implements the same two stages
+against the live linked pool — stage 1 is ``registry.get_by_key``
+over the identical sorted-keymin layout, stage 2 a lock-step bounded walk
+(``traverse.probe_batch``) in place of the block sweep — so on TPU, once
+sublists are kept in packed blocks, this kernel drops in as both
+fast-paths' probe with no contract change: the mutation pre-pass consumes
+stage 2's Harris window ``(left, right)``, and this kernel already returns
+its packed-block equivalent — ``pos`` (the insertion point inside the
+block) IS the link slot an insert writes and the slot a remove marks, so
+the §4b conflict screen ("two lanes, one link word") maps to "two lanes,
+one (entry, pos) pair" verbatim.
 
 Layout:
   * ``keymin``  int32[M]      — registry, padding rows = INT32_MAX

@@ -69,7 +69,7 @@ def test_differential_fastpath_vs_serial(seed, read_frac, delay):
     res_on, keys_on, hits_on = _drive(
         CFG, kinds, keys, seed=seed + 7, delay=delay)
     res_off, keys_off, hits_off = _drive(
-        CFG._replace(find_fastpath=False), kinds, keys,
+        CFG._replace(find_fastpath=False, mut_fastpath=False), kinds, keys,
         seed=seed + 7, delay=delay)
 
     assert hits_off == 0
@@ -108,7 +108,8 @@ def test_deleted_while_moving_reads_absent():
     oracle, with no mark erasure resurrecting the removed key."""
     from repro.core import refs
 
-    cfg = CFG._replace(move_batch=1, find_fastpath=False)
+    cfg = CFG._replace(move_batch=1, find_fastpath=False,
+                       mut_fastpath=False)
     cl = Cluster(cfg)
     base = list(range(10, 90, 10))        # 10..80, one bootstrap sublist
     cl.submit(0, [OP_INSERT] * len(base), base)

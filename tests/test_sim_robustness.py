@@ -1,0 +1,86 @@
+"""Regression tests for Cluster client-API and routing robustness.
+
+R1  ``Cluster.submit`` accepts generators/iterators for kinds/keys/values —
+    the old ``len(list(keys))`` probe exhausted the iterator before the
+    ``zip``, silently dropping every op (``ids == []``, no error).
+R2  submit validates length mismatches loudly instead of zip-truncating.
+R3  Outbox overflow raises ``OutboxOverflow`` unconditionally — it must
+    not be an ``assert`` (``python -O`` would silently truncate messages,
+    and a lost replicate/ack deadlocks ``run_until_quiet``).
+"""
+import numpy as np
+import pytest
+
+from repro.core.oracle import OracleList
+from repro.core.sim import Cluster, OutboxOverflow
+from repro.core.types import DiLiConfig, OP_FIND, OP_INSERT
+
+CFG = DiLiConfig(num_shards=2, pool_capacity=2048, max_sublists=16,
+                 max_ctrs=16, max_scan=2048, batch_size=16,
+                 mailbox_cap=128)
+
+
+def test_submit_accepts_generators():
+    """R1: generator inputs must land every op, not silently drop all."""
+    cl = Cluster(CFG)
+    keys = list(range(10, 26))
+    ids = cl.submit(0,
+                    (OP_INSERT for _ in keys),
+                    (k for k in keys),
+                    (k * 2 for k in keys))
+    assert len(ids) == len(keys), "generator ops were silently dropped"
+    cl.run_until_quiet(400)
+    assert [bool(cl.results[j]) for j in ids] == [True] * len(keys)
+    assert cl.all_keys() == sorted(keys)
+    # values rode along (payload is stored in pool.keymax for items)
+    chain = {k: v for k, _, v in cl.shard_chain(0, 0, include_meta=True)}
+    assert chain == {k: k * 2 for k in keys}
+
+
+def test_submit_generator_matches_list_submission():
+    """R1: a generator submission behaves exactly like the list one."""
+    keys = list(range(5, 45, 3))
+    a, b = Cluster(CFG), Cluster(CFG)
+    ids_a = a.submit(0, [OP_INSERT] * len(keys), list(keys))
+    ids_b = b.submit(0, (OP_INSERT for _ in keys), iter(keys))
+    a.run_until_quiet(400)
+    b.run_until_quiet(400)
+    assert ids_a == ids_b
+    assert [a.results[j] for j in ids_a] == [b.results[j] for j in ids_b]
+    assert a.all_keys() == b.all_keys() == sorted(set(keys))
+    oracle = OracleList(keys)
+    assert a.all_keys() == sorted(oracle.snapshot())
+
+
+def test_submit_length_mismatch_raises():
+    """R2: mismatched kinds/keys/values must fail loudly, not truncate."""
+    cl = Cluster(CFG)
+    with pytest.raises(ValueError):
+        cl.submit(0, [OP_INSERT] * 3, [1, 2])
+    with pytest.raises(ValueError):
+        cl.submit(0, [OP_INSERT] * 2, [1, 2], [7])
+
+
+def test_outbox_overflow_raises():
+    """R3: a round emitting more messages than mailbox_cap must raise."""
+    cfg = DiLiConfig(num_shards=2, pool_capacity=512, max_sublists=8,
+                     max_ctrs=8, max_scan=512, batch_size=16,
+                     mailbox_cap=4, find_fastpath=False, mut_fastpath=False)
+    cl = Cluster(cfg)
+    # every key is owned by shard 0, so each op submitted at shard 1
+    # delegates: 12 outbox rows in one round > mailbox_cap = 4
+    cl.submit(1, [OP_FIND] * 12, list(range(10, 22)))
+    with pytest.raises(OutboxOverflow, match="mailbox_cap"):
+        cl.step()
+
+
+def test_outbox_at_cap_does_not_raise():
+    """R3: exactly-at-cap rounds are legal — only genuine overflow raises."""
+    cfg = DiLiConfig(num_shards=2, pool_capacity=512, max_sublists=8,
+                     max_ctrs=8, max_scan=512, batch_size=16,
+                     mailbox_cap=4, find_fastpath=False, mut_fastpath=False)
+    cl = Cluster(cfg)
+    cl.submit(1, [OP_FIND] * 4, list(range(10, 14)))
+    cl.run_until_quiet(100)
+    assert cl.stats["max_outbox"] == 4
+    assert all(cl.results[j] == 0 for j in range(4))  # absent keys
