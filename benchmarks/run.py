@@ -31,9 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import DiLiClient, LocalBackend
 from repro.core import skiplist as SL
 from repro.core.balancer import Balancer
-from repro.core.sim import Cluster
 from repro.core.types import DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE
 from repro.data.ycsb import load_phase, mixed_phase
 
@@ -69,47 +69,99 @@ def write_artifact(name, rows, duration_s, params=None):
 
 # ------------------------------------------------------------------ helpers
 
-def _drive_cluster(cl, kinds, keys, batch, *, balancer=None, shards=None):
-    """Feed ops round-by-round; returns wall seconds of the drive loop."""
+def _drive_client(client, kinds, keys, batch):
+    """Feed ops batch-per-round through the client; returns wall seconds.
+
+    The client routes each op via its registry cache, paces admission
+    against ``mailbox_cap`` (overload queues client-side instead of
+    raising ``OutboxOverflow``), and runs its balance policy from the pump
+    loop at the configured cadence. This path times the *public client*
+    (futures + routing + pacing) — used for the ``client_*`` rows.
+    """
     n = len(kinds)
-    shards = shards or list(range(cl.n))
+    per_round = batch * client.backend.n
+    t0 = time.perf_counter()
+    i = 0
+    while i < n:
+        j = min(i + per_round, n)
+        client.submit(kinds[i:j].tolist(), keys[i:j].tolist())
+        i = j
+        client.pump()
+    client.drain(4000)
+    return time.perf_counter() - t0
+
+
+def _drive_backend(backend, kinds, keys, batch, *, balancer=None,
+                   max_drain=4000):
+    """Feed ops round-robin at the raw ``Backend`` surface (no futures);
+    returns wall seconds. This is the measurement path for the
+    paper-figure rows: it times the round engine itself, keeping the
+    metric lineage of earlier artifacts (the Python client machinery is
+    measured separately by the ``client_*`` rows). Runs unchanged against
+    ``LocalBackend`` or ``ShardMapBackend``.
+    """
+    n = len(kinds)
+    pending = 0
     t0 = time.perf_counter()
     i = 0
     r = 0
     while i < n:
-        for s in shards:
+        for s in range(backend.n):
             j = min(i + batch, n)
             if i < j:
-                cl.submit(s, kinds[i:j].tolist(), keys[i:j].tolist())
+                backend.submit(s, kinds[i:j].tolist(), keys[i:j].tolist())
+                pending += j - i
                 i = j
-        cl.step()
+        pending -= len(backend.step())
         if balancer is not None and r % 4 == 3:
             balancer.step()
         r += 1
-    cl.run_until_quiet(2000)
+    for _ in range(max_drain):
+        if pending == 0 and backend.quiescent():
+            break
+        pending -= len(backend.step())
+    else:
+        raise RuntimeError(f"backend did not drain: pending={pending}")
     return time.perf_counter() - t0
+
+
+def _bench_cfg(n_shards, *, batch=64, fastpath=True):
+    return DiLiConfig(num_shards=n_shards, pool_capacity=1 << 15,
+                      max_sublists=256, max_ctrs=256, max_scan=1 << 15,
+                      batch_size=batch, mailbox_cap=512,
+                      split_threshold=125, move_batch=32,
+                      find_fastpath=fastpath, mut_fastpath=fastpath)
+
+
+def _make_client(n_shards, *, split: bool, batch=64, fastpath=True,
+                 route_cache=True):
+    backend = LocalBackend(_bench_cfg(n_shards, batch=batch,
+                                      fastpath=fastpath))
+    bal = Balancer(backend) if split else None
+    return DiLiClient(backend, balance=bal, route_cache=route_cache)
+
+
+def _settle(backend, balancer, *, max_passes=200):
+    for _ in range(max_passes):
+        if not any(balancer.step().values()):
+            return
+        _drive_backend(backend, np.zeros(0, np.int64), np.zeros(0, np.int64),
+                       64)
 
 
 def _dili_throughput(n_shards, kinds, keys, *, split: bool,
                      load_kinds, load_keys, batch=64, fastpath=True):
     """``fastpath`` toggles BOTH batched pre-passes (find §4 + mutation
     §4b); False is the serial-only scan baseline."""
-    cfg = DiLiConfig(num_shards=n_shards, pool_capacity=1 << 15,
-                     max_sublists=256, max_ctrs=256, max_scan=1 << 15,
-                     batch_size=batch, mailbox_cap=512,
-                     split_threshold=125, move_batch=32,
-                     find_fastpath=fastpath, mut_fastpath=fastpath)
-    cl = Cluster(cfg)
-    bal = Balancer(cl) if split else None
+    backend = LocalBackend(_bench_cfg(n_shards, batch=batch,
+                                      fastpath=fastpath))
+    bal = Balancer(backend) if split else None
     # load phase (timed separately from the measured mixed phase)
-    _drive_cluster(cl, load_kinds, load_keys, batch, balancer=bal)
+    _drive_backend(backend, load_kinds, load_keys, batch, balancer=bal)
     if bal is not None:
-        for _ in range(200):
-            if not any(bal.step().values()):
-                break
-            cl.run_until_quiet(2000)
-    dt = _drive_cluster(cl, kinds, keys, batch, balancer=bal)
-    return len(kinds) / dt, cl
+        _settle(backend, bal)
+    dt = _drive_backend(backend, kinds, keys, batch, balancer=bal)
+    return len(kinds) / dt, backend
 
 
 # ------------------------------------------------------------------- fig3a
@@ -166,6 +218,24 @@ def fig3a(n_load=2000, n_ops=4000, key_space=8000):
         emit("fig3a", f"dili_over_skip_r{read_pct}",
              round(thr_dili / thr_skip, 2))
 
+    # client routing: cached-registry vs fixed-shard submission on a
+    # 4-server cluster — the delegation hops the client cache saves
+    # (ISSUE 3 acceptance metric; the hop window covers the measured
+    # phase only, after an explicit cache refresh).
+    kinds, keys = mixed_phase(n_ops, key_space, 0.5, seed=6)
+    for label, cached in (("cached", True), ("fixed", False)):
+        client = _make_client(4, split=True, route_cache=cached)
+        _drive_client(client, load_kinds, load_keys, 64)
+        client.settle(max_rounds=4000)
+        client.balance = None             # freeze topology for the window
+        if cached:
+            client.refresh_route_cache()
+        client.stats.update(max_hops=0, delegated=0)
+        dt = _drive_client(client, kinds, keys, 64)
+        emit("fig3a", f"client_{label}_ops_per_s", round(len(kinds) / dt))
+        emit("fig3a", f"client_{label}_max_hops", client.stats["max_hops"])
+        emit("fig3a", f"client_{label}_delegated", client.stats["delegated"])
+
 
 # ------------------------------------------------------------------- fig3b
 
@@ -187,25 +257,17 @@ def fig3b(n_load=1500, n_ops=3000, key_space=6000):
 
         walls = {}
         for fastpath in (True, False):
-            cfg = DiLiConfig(num_shards=n, pool_capacity=1 << 15,
-                             max_sublists=256, max_ctrs=256, max_scan=1 << 15,
-                             batch_size=64, mailbox_cap=512,
-                             split_threshold=125, move_batch=32,
-                             find_fastpath=fastpath, mut_fastpath=fastpath)
-            cl = Cluster(cfg)
-            bal = Balancer(cl)
-            _drive_cluster(cl, load_kinds, load_keys, 64, balancer=bal)
-            for _ in range(200):
-                if not any(bal.step().values()):
-                    break
-                cl.run_until_quiet(2000)
-            r0 = cl.round_no
-            walls[fastpath] = _drive_cluster(cl, kinds, keys, 64,
+            backend = LocalBackend(_bench_cfg(n, fastpath=fastpath))
+            bal = Balancer(backend)
+            _drive_backend(backend, load_kinds, load_keys, 64, balancer=bal)
+            _settle(backend, bal)
+            r0 = backend.stats["rounds"]
+            walls[fastpath] = _drive_backend(backend, kinds, keys, 64,
                                              balancer=bal)
-            rounds = cl.round_no - r0
+            rounds = backend.stats["rounds"] - r0
             if not fastpath:
                 continue  # scan-only run contributes its wall time only
-            loads = [sum(e["size"] or 0 for e in cl.sublists(s)
+            loads = [sum(e["size"] or 0 for e in backend.sublists(s)
                          if e["owner"] == s) for s in range(n)]
             opr = len(kinds) / rounds
             base_opr = base_opr or opr
@@ -214,8 +276,9 @@ def fig3b(n_load=1500, n_ops=3000, key_space=6000):
             emit("fig3b", f"dili_{n}srv_speedup", round(opr / base_opr, 2))
             emit("fig3b", f"dili_{n}srv_load_spread",
                  round(max(loads) / max(sum(loads) / n, 1), 2))
-            emit("fig3b", f"dili_{n}srv_max_hops", cl.stats["max_hops"])
-            emit("fig3b", f"dili_{n}srv_fast_hits", cl.stats["fast_hits"])
+            emit("fig3b", f"dili_{n}srv_max_hops", backend.stats["max_hops"])
+            emit("fig3b", f"dili_{n}srv_fast_hits",
+                 backend.stats["fast_hits"])
         # completions per round are fastpath-invariant by construction, so
         # the fastpath-vs-scan comparison here is wall-clock throughput.
         # NB the simulator runs shards sequentially on one core, and with
@@ -239,13 +302,15 @@ def bgops(n_keys=1200, key_space=4000):
     cfg = DiLiConfig(num_shards=2, pool_capacity=1 << 14, max_sublists=128,
                      max_ctrs=128, max_scan=1 << 14, batch_size=32,
                      mailbox_cap=512, split_threshold=125, move_batch=32)
-    cl = Cluster(cfg)
+    backend = LocalBackend(cfg)
+    client = DiLiClient(backend)
+    cl = backend.cluster      # bg-phase instrumentation reads the machinery
     rng = np.random.default_rng(5)
     keys = rng.permutation(np.arange(1, key_space))[:n_keys]
 
     stats = {"split": [], "move": []}
     starts = {}
-    bal = Balancer(cl)
+    bal = Balancer(backend)
     i = 0
     guard = 0
     idle_streak = 0
@@ -253,9 +318,9 @@ def bgops(n_keys=1200, key_space=4000):
         guard += 1
         j = min(i + 32, len(keys))
         if i < j:
-            cl.submit(0, [OP_INSERT] * (j - i), keys[i:j].tolist())
+            client.submit([OP_INSERT] * (j - i), keys[i:j].tolist())
             i = j
-        cl.step()
+        client.pump(run_balance=False)
         # completions are visible right after the round, before the
         # balancer possibly queues the next op
         for s in range(cl.n):
@@ -270,9 +335,10 @@ def bgops(n_keys=1200, key_space=4000):
                 kind = "split" if ph in (B.BG_SPLIT_EXEC, B.BG_SPLIT_WAIT,
                                          B.BG_MERGE_EXEC) else "move"
                 starts[s] = (cl.round_no, time.perf_counter(), kind)
-        busy = (i < len(keys) or any(issued.values()) or
-                any(int(bg.phase) != B.BG_IDLE for bg in cl.bgs) or
-                any(b.shape[0] for b in cl.backlog))
+        busy = (i < len(keys) or client.pending > 0
+                or any(issued.values())
+                or any(int(bg.phase) != B.BG_IDLE for bg in cl.bgs)
+                or any(b.shape[0] for b in cl.backlog))
         idle_streak = 0 if busy else idle_streak + 1
 
     for kind in ("split", "move"):

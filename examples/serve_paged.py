@@ -33,14 +33,14 @@ def generate(rebalance: bool):
         eng.admit(r)
     for step in range(N_NEW):
         if rebalance and step == 2:
-            subs = [e for e in eng.kv.dili.sublists(0) if e["owner"] == 0]
+            subs = [e for e in eng.kv.backend.sublists(0) if e["owner"] == 0]
             if subs:
-                eng.kv.dili.move(0, subs[0]["keymax"], 1)
+                eng.kv.backend.move(0, subs[0]["keymax"], 1)
                 print("  [step 2] issued Move of the page-index sublist "
                       "shard0 -> shard1")
         eng.step(rebalance=rebalance)
     owners = sorted({e["owner"] for s in range(2)
-                     for e in eng.kv.dili.sublists(s)})
+                     for e in eng.kv.backend.sublists(s)})
     return [r.out for r in reqs], owners
 
 

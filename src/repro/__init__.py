@@ -1,6 +1,7 @@
 """repro: DiLi (distributable lock-free index) + multi-pod JAX LM framework.
 
 Subpackages:
+  api        — public client surface (DiLiClient futures API + backends)
   core       — the paper's contribution (DiLi protocol + runtimes)
   kernels    — Pallas TPU kernels (hybrid_search, paged_attention)
   models     — the 10 assigned architectures' backbones

@@ -1,0 +1,21 @@
+"""Public client API for the DiLi distributed list (DESIGN.md §9).
+
+    from repro.api import DiLiClient, LocalBackend
+
+    backend = LocalBackend(DiLiConfig(num_shards=4, ...))
+    client = DiLiClient(backend, balance=Balancer(backend))
+    fut = client.insert(42)
+    client.drain()
+    assert fut.result()
+
+The same client runs against ``ShardMapBackend`` (SPMD device mesh) with
+no workload changes.
+"""
+from .backend import Backend, LocalBackend, ShardMapBackend
+from .client import DiLiClient, RegistryCache, local_client
+from .futures import BatchResult, OpFuture
+
+__all__ = [
+    "Backend", "BatchResult", "DiLiClient", "LocalBackend", "OpFuture",
+    "RegistryCache", "ShardMapBackend", "local_client",
+]

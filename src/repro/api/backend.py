@@ -1,0 +1,345 @@
+"""Execution backends behind ``DiLiClient`` (DESIGN.md §9).
+
+A backend is one round-based execution engine for the DiLi protocol. The
+client is backend-agnostic: the same workload runs unchanged against the
+single-host simulator (``LocalBackend`` wrapping ``core.sim.Cluster``) or
+the SPMD device mesh (``ShardMapBackend`` wrapping
+``core.distributed.make_dili_round``).
+
+The contract (``Backend`` protocol):
+
+  * ``submit(shard, kinds, keys, values)`` enqueues fresh client ops at a
+    server and returns op ids;
+  * ``step()`` runs one synchronized round and returns the ops completed in
+    it as ``(op_id, result, src_shard)`` triples — ``src_shard`` is the
+    shard that *executed* the op, the client's route-correction signal.
+    Returned op ids are recycled by the backend;
+  * ``quiescent()`` — no messages in flight and all background ops idle;
+  * ``registry_entries(shard)`` — one shard's (lazily-replicated) registry
+    view, which clients seed/refresh their route cache from;
+  * the balance surface (``sublists``/``middle_item``/``split``/``move``/
+    ``merge`` plus ``states``/``bgs``/``cfg``/``n``) — the same duck type
+    ``core.balancer.Balancer`` has always driven, so today's balancer runs
+    unmodified as a policy over either backend.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import background as B
+from repro.core import messages as M
+from repro.core import refs
+from repro.core.sim import (Cluster, OpIdAllocator, OutboxOverflow,
+                            chain_keys, global_keys, make_op_row,
+                            materialize_ops, registry_entries,
+                            state_sublists)
+from repro.core.types import DiLiConfig, KEY_MAX, KEY_MIN
+
+Completion = Tuple[int, int, int]           # (op_id, result, src_shard)
+RegEntry = Tuple[int, int, int]             # (keymin, keymax, owner)
+
+
+class Backend(Protocol):
+    """Round-based DiLi execution engine (see module docstring)."""
+
+    cfg: DiLiConfig
+    stats: Dict[str, int]
+
+    @property
+    def n(self) -> int: ...
+
+    def submit(self, shard: int, kinds: Sequence[int], keys: Sequence[int],
+               values: Optional[Sequence[int]] = None) -> List[int]: ...
+
+    def step(self) -> List[Completion]: ...
+
+    def quiescent(self) -> bool: ...
+
+    def registry_entries(self, shard: int = 0) -> List[RegEntry]: ...
+
+    # ------------------------------------------------------ balance surface
+    def sublists(self, s: int) -> List[dict]: ...
+
+    def middle_item(self, s: int, head_idx: int) -> Optional[int]: ...
+
+    def split(self, s: int, entry_keymax: int, sitem_idx: int) -> None: ...
+
+    def move(self, s: int, entry_keymax: int, target: int) -> None: ...
+
+    def merge(self, s: int, left_keymax: int, right_keymax: int) -> None: ...
+
+
+class LocalBackend:
+    """The single-host simulator as a client backend.
+
+    Wraps ``core.sim.Cluster`` — which stays the execution machinery (round
+    loop, host-side routing, overflow detection) while this class adapts it
+    to the backend contract: per-step completion harvesting with executing
+    shard, and op-id recycling via ``Cluster.take_result``.
+    """
+
+    def __init__(self, cfg: Optional[DiLiConfig] = None, *,
+                 cluster: Optional[Cluster] = None, seed: int = 0,
+                 delay_prob: float = 0.0,
+                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
+        if cluster is None:
+            if cfg is None:
+                raise ValueError("LocalBackend needs a DiLiConfig or Cluster")
+            cluster = Cluster(cfg, seed=seed, delay_prob=delay_prob,
+                              key_lo=key_lo, key_hi=key_hi)
+        self.cluster = cluster
+        self.cfg = cluster.cfg
+        self._issued: set = set()
+
+    # ------------------------------------------------------------- protocol
+    @property
+    def n(self) -> int:
+        return self.cluster.n
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.cluster.stats
+
+    def submit(self, shard, kinds, keys, values=None) -> List[int]:
+        ids = self.cluster.submit(shard, kinds, keys, values)
+        self._issued.update(ids)
+        return ids
+
+    def step(self) -> List[Completion]:
+        """One round; returns and recycles completions of ops issued
+        *through this backend*. Ops submitted raw at the wrapped cluster
+        keep their results in ``cluster.results`` untouched — draining
+        them would orphan the raw caller's poll loop and let its live id
+        be reissued to a client op. Harvesting goes through
+        ``cluster.results`` (not ``last_completions``, which the next raw
+        ``Cluster.step`` overwrites) so tools stepping the cluster
+        directly between backend rounds cannot orphan client futures."""
+        self.cluster.step()
+        comps = []
+        done = [op_id for op_id in self._issued
+                if op_id in self.cluster.results]
+        for op_id in done:
+            src = self.cluster.result_src.get(op_id, -1)
+            val = self.cluster.take_result(op_id)   # pops + recycles the id
+            self._issued.discard(op_id)
+            comps.append((op_id, val, src))
+        return comps
+
+    def quiescent(self) -> bool:
+        cl = self.cluster
+        if any(b.shape[0] for b in cl.backlog):
+            return False
+        return all(int(bg.phase) == B.BG_IDLE for bg in cl.bgs)
+
+    def registry_entries(self, shard: int = 0) -> List[RegEntry]:
+        return self.cluster.registry_entries(shard)
+
+    # ------------------------------------------------------ balance surface
+    @property
+    def states(self):
+        return self.cluster.states
+
+    @property
+    def bgs(self):
+        return self.cluster.bgs
+
+    def sublists(self, s: int):
+        return self.cluster.sublists(s)
+
+    def middle_item(self, s: int, head_idx: int) -> Optional[int]:
+        return self.cluster.middle_item(s, head_idx)
+
+    def split(self, s, entry_keymax, sitem_idx) -> None:
+        self.cluster.split(s, entry_keymax, sitem_idx)
+
+    def move(self, s, entry_keymax, target) -> None:
+        self.cluster.move(s, entry_keymax, target)
+
+    def merge(self, s, left_keymax, right_keymax) -> None:
+        self.cluster.merge(s, left_keymax, right_keymax)
+
+    # ------------------------------------------------------------ debugging
+    def all_keys(self) -> List[int]:
+        return self.cluster.all_keys()
+
+    def shard_chain(self, s, head_idx, include_meta=False):
+        return self.cluster.shard_chain(s, head_idx, include_meta)
+
+
+class ShardMapBackend:
+    """The SPMD ``shard_map`` round as a client backend.
+
+    One device of the mesh per DiLi shard; routing is the on-device
+    ``all_to_all`` inside ``make_dili_round``. The host side here only
+    feeds client batches, harvests completions, and keeps the same overflow
+    discipline as the simulator: ``cap_pair`` defaults to ``mailbox_cap``
+    so no per-destination bucket can drop a row without the (host-checked)
+    total outbox count exceeding ``mailbox_cap`` first — which raises
+    ``OutboxOverflow`` exactly like ``Cluster.step``.
+
+    The balance surface works on host snapshots of the stacked device
+    state (pulled lazily, invalidated each round); Split/Move/Merge are
+    queued by editing the stacked ``BgState`` in place, and execute inside
+    the jitted round like any other background phase.
+    """
+
+    def __init__(self, cfg: DiLiConfig, *, mesh=None,
+                 cap_pair: Optional[int] = None, seed: int = 0,
+                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.distributed import make_dili_round, stack_states
+        self._jnp = jnp
+        self._jax = jax
+        self.cfg = cfg
+        if mesh is None:
+            devs = np.array(jax.devices())
+            if devs.size < cfg.num_shards:
+                raise ValueError(
+                    f"need {cfg.num_shards} devices for {cfg.num_shards} "
+                    f"shards, have {devs.size} (set "
+                    f"--xla_force_host_platform_device_count)")
+            mesh = Mesh(devs[:cfg.num_shards].reshape(cfg.num_shards),
+                        ("shard",))
+        self.mesh = mesh
+        self.cap_pair = int(cap_pair if cap_pair is not None
+                            else cfg.mailbox_cap)
+        if self.cap_pair < cfg.mailbox_cap:
+            # with cap_pair < mailbox_cap a single destination's bucket can
+            # drop rows while the total outbox stays under mailbox_cap —
+            # the host-side overflow check would never fire, and a dropped
+            # replicate/ack deadlocks the protocol silently
+            raise ValueError(
+                f"cap_pair={self.cap_pair} < mailbox_cap="
+                f"{cfg.mailbox_cap}: per-destination buckets could drop "
+                f"rows undetected")
+        # borrow the simulator's init: bootstrap sublist on shard 0 plus
+        # synchronized registry replicas everywhere else
+        boot = Cluster(cfg, seed=seed, key_lo=key_lo, key_hi=key_hi)
+        self._states, self._bgs = stack_states(boot.states, boot.bgs)
+        self._rnd = make_dili_round(mesh, cfg, cap_pair=self.cap_pair)
+        self.in_cap = cfg.num_shards * self.cap_pair
+        self._inbox = jnp.zeros((cfg.num_shards, self.in_cap, M.FIELDS),
+                                jnp.int32)
+        self._inflight_msgs = 0
+        self._queues: List[deque] = [deque() for _ in range(cfg.num_shards)]
+        self._ids = OpIdAllocator()
+        self._host_states: Optional[list] = None
+        self.round_no = 0
+        self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
+                      "fast_hits": 0, "mut_hits": 0, "delegated": 0}
+
+    # ------------------------------------------------------------- protocol
+    @property
+    def n(self) -> int:
+        return self.cfg.num_shards
+
+    def submit(self, shard, kinds, keys, values=None) -> List[int]:
+        kinds, keys, values = materialize_ops(kinds, keys, values)
+        ids = []
+        for kind, key, val in zip(kinds, keys, values):
+            slot = self._ids.alloc()
+            self._queues[shard].append(make_op_row(shard, kind, key, val,
+                                                   slot))
+            ids.append(slot)
+        return ids
+
+    def step(self) -> List[Completion]:
+        cfg = self.cfg
+        client = np.zeros((self.n, cfg.batch_size, M.FIELDS), np.int32)
+        for s in range(self.n):
+            q = self._queues[s]
+            for b in range(min(len(q), cfg.batch_size)):
+                client[s, b] = q.popleft()
+        out = self._rnd(self._states, self._bgs, self._inbox,
+                        self._jnp.asarray(client))
+        self._states, self._bgs, self._inbox, cs, cv, cr, rstats = out
+        self._host_states = None
+        # per-shard int32[4] round stats computed on-device (the routed
+        # inbox itself never crosses to host on the hot path)
+        rstats = np.asarray(rstats)
+        over = int(rstats[:, 0].max())
+        self.stats["max_outbox"] = max(self.stats["max_outbox"], over)
+        if over > cfg.mailbox_cap:
+            s = int(rstats[:, 0].argmax())
+            raise OutboxOverflow(
+                f"shard {s} emitted {over} messages in round "
+                f"{self.round_no}, mailbox_cap={cfg.mailbox_cap} — raise "
+                f"mailbox_cap or reduce the per-round feed")
+        self._inflight_msgs = int(rstats[:, 1].sum())
+        delegated = int(rstats[:, 2].sum())
+        if delegated:
+            self.stats["delegated"] += delegated
+            self.stats["max_hops"] = max(self.stats["max_hops"],
+                                         int(rstats[:, 3].max()))
+        comps: List[Completion] = []
+        cs, cv, cr = np.asarray(cs), np.asarray(cv), np.asarray(cr)
+        done = cs >= 0
+        for slot, val, src in zip(cs[done], cv[done], cr[done]):
+            comps.append((int(slot), int(val), int(src)))
+            self._ids.release(int(slot))
+        self.round_no += 1
+        self.stats["rounds"] += 1
+        return comps
+
+    def quiescent(self) -> bool:
+        if self._inflight_msgs or any(len(q) for q in self._queues):
+            return False
+        phases = np.asarray(self._bgs.phase)
+        return bool((phases == B.BG_IDLE).all())
+
+    def registry_entries(self, shard: int = 0) -> List[RegEntry]:
+        return registry_entries(self.states[shard])
+
+    # ------------------------------------------------------ balance surface
+    @property
+    def states(self):
+        if self._host_states is None:
+            tree_map = self._jax.tree_util.tree_map
+            host = tree_map(np.asarray, self._states)
+            self._host_states = [
+                tree_map(lambda x, s=s: x[s], host) for s in range(self.n)]
+        return self._host_states
+
+    @property
+    def bgs(self):
+        tree_map = self._jax.tree_util.tree_map
+        host = tree_map(np.asarray, self._bgs)
+        return [tree_map(lambda x, s=s: x[s], host) for s in range(self.n)]
+
+    def sublists(self, s: int):
+        return state_sublists(self.cfg, self.states, s)
+
+    def middle_item(self, s: int, head_idx: int) -> Optional[int]:
+        items = chain_keys(self.cfg, self.states, s, head_idx,
+                           include_meta=True)
+        if len(items) < 2:
+            return None
+        return items[len(items) // 2][1]
+
+    def _queue_bg(self, s: int, fn, *args) -> None:
+        tree_map = self._jax.tree_util.tree_map
+        bg = tree_map(lambda x: x[s], self._bgs)
+        bg = fn(bg, *args)
+        self._bgs = tree_map(lambda col, leaf: col.at[s].set(leaf),
+                             self._bgs, bg)
+
+    def split(self, s, entry_keymax, sitem_idx) -> None:
+        self._queue_bg(s, B.queue_split, entry_keymax, sitem_idx)
+
+    def move(self, s, entry_keymax, target) -> None:
+        self._queue_bg(s, B.queue_move, entry_keymax, target)
+
+    def merge(self, s, left_keymax, right_keymax) -> None:
+        self._queue_bg(s, B.queue_merge, left_keymax, right_keymax)
+
+    # ------------------------------------------------------------ debugging
+    def all_keys(self) -> List[int]:
+        return global_keys(self.cfg, self.states)
+
+    def shard_chain(self, s, head_idx, include_meta=False):
+        return chain_keys(self.cfg, self.states, s, head_idx, include_meta)

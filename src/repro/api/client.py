@@ -1,0 +1,275 @@
+"""``DiLiClient`` — the public client API of the DiLi runtime (DESIGN.md §9).
+
+The paper's clients are first-class participants: they cache registry
+entries, learn corrected routes from wrong-shard replies, and keep
+operating while sublists split and move underneath them. This client
+reproduces that contract over any ``Backend``:
+
+  * **Routing.** A client-side registry cache (seeded from a server
+    replica at construction) predicts each key's owner, so ops are
+    submitted where they will execute instead of a fixed shard. Stale
+    routes are *safe* — servers delegate mis-routed ops (Theorem 4 bounds
+    the hops) — they only cost hops, and every completion reports the
+    shard that executed the op, so a mismatch triggers a cache refresh.
+  * **Pacing.** Admission is bounded against ``mailbox_cap`` so overload
+    queues client-side instead of surfacing ``OutboxOverflow`` from the
+    round engine: every in-flight op occupies at most one message per
+    round, so capping in-flight ops leaves outbox headroom for move
+    replicates and registry broadcasts.
+  * **Ordering.** At most one op per key is in flight at a time; same-key
+    ops are admitted in submission order (ops on different keys commute in
+    a set, so this is exactly the per-key FIFO linearizability needs).
+  * **Balancing.** ``pump()`` periodically runs a pluggable balance policy
+    (``core.balancer.Balancer`` is the paper's §7.1 policy) over the
+    backend's balance surface.
+"""
+from __future__ import annotations
+
+from bisect import bisect_left
+from collections import deque
+from itertools import islice
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
+
+from .backend import Backend, LocalBackend
+from .futures import BatchResult, OpFuture
+
+
+class RegistryCache:
+    """Client-side replica of the registry: sorted (keymin, keymax, owner).
+
+    Same semantics as ``core.registry.get_by_key``: an entry covers keys
+    strictly greater than its keymin and up to (inclusive) its keymax.
+    """
+
+    def __init__(self, entries: Sequence[Tuple[int, int, int]] = ()):
+        self._mins: List[int] = []
+        self._maxs: List[int] = []
+        self._owners: List[int] = []
+        self.load(entries)
+
+    def load(self, entries: Sequence[Tuple[int, int, int]]) -> None:
+        ordered = sorted(entries)
+        self._mins = [e[0] for e in ordered]
+        self._maxs = [e[1] for e in ordered]
+        self._owners = [e[2] for e in ordered]
+
+    def lookup(self, key: int) -> Optional[int]:
+        i = bisect_left(self._mins, key) - 1
+        if i < 0:
+            return None
+        if self._mins[i] < key <= self._maxs[i]:
+            return self._owners[i]
+        return None
+
+    def __len__(self) -> int:
+        return len(self._mins)
+
+
+class DiLiClient:
+    """Futures-based client over a DiLi execution backend.
+
+    ``route_cache=False`` degrades to fixed-shard submission (every op goes
+    to ``home_shard``) — the pre-redesign behaviour, kept for comparison
+    benchmarks and tests.
+    """
+
+    def __init__(self, backend: Backend, *, route_cache: bool = True,
+                 balance=None, balance_every: int = 4,
+                 home_shard: int = 0,
+                 max_inflight: Optional[int] = None):
+        self.backend = backend
+        self.cfg = backend.cfg
+        self.route_cache = route_cache
+        self.balance = balance          # any object with .step() -> dict
+        self.balance_every = max(1, int(balance_every))
+        self.home_shard = int(home_shard)
+        # Pacing budget: each in-flight op contributes at most one outbox
+        # row per shard per round (its delegation XOR its result), plus one
+        # replicate while its sublist moves. Reserve headroom for the
+        # background op (``move_batch`` MoveItems + registry broadcasts).
+        if max_inflight is None:
+            max_inflight = max(
+                1, self.cfg.mailbox_cap - 2 * self.cfg.move_batch
+                - self.cfg.num_shards - 4)
+        self.max_inflight = int(max_inflight)
+        self._queue: deque = deque()                 # unadmitted OpFutures
+        self._inflight: Dict[int, OpFuture] = {}     # op_id -> future
+        self._busy_keys: Set[int] = set()            # keys with op in flight
+        self._cache = RegistryCache(backend.registry_entries(self.home_shard))
+        self._refresh_from: Optional[int] = None     # pending cache refresh
+        self._rounds = 0
+        self.wrong_routes = 0                        # completions off-route
+
+    # ------------------------------------------------------------ submission
+    def find(self, key: int) -> OpFuture:
+        return self._enqueue(OP_FIND, key)
+
+    def insert(self, key: int, value: int = 0) -> OpFuture:
+        return self._enqueue(OP_INSERT, key, value)
+
+    def remove(self, key: int) -> OpFuture:
+        return self._enqueue(OP_REMOVE, key)
+
+    def find_batch(self, keys: Sequence[int]) -> BatchResult:
+        return BatchResult([self.find(k) for k in keys])
+
+    def insert_batch(self, keys: Sequence[int],
+                     values: Optional[Sequence[int]] = None) -> BatchResult:
+        values = [0] * len(keys) if values is None else list(values)
+        if len(values) != len(keys):
+            raise ValueError(f"{len(values)} values vs {len(keys)} keys")
+        return BatchResult([self.insert(k, v)
+                            for k, v in zip(keys, values)])
+
+    def remove_batch(self, keys: Sequence[int]) -> BatchResult:
+        return BatchResult([self.remove(k) for k in keys])
+
+    def submit(self, kinds: Sequence[int], keys: Sequence[int],
+               values: Optional[Sequence[int]] = None) -> BatchResult:
+        """Mixed batch, one future per (kind, key) in submission order."""
+        kinds, keys = list(kinds), list(keys)
+        if len(kinds) != len(keys):
+            raise ValueError(f"{len(kinds)} kinds vs {len(keys)} keys")
+        values = [0] * len(keys) if values is None else list(values)
+        if len(values) != len(keys):
+            raise ValueError(f"{len(values)} values vs {len(keys)} keys")
+        return BatchResult([self._enqueue(k, x, v)
+                            for k, x, v in zip(kinds, keys, values)])
+
+    def _enqueue(self, kind: int, key: int, value: int = 0) -> OpFuture:
+        fut = OpFuture(self, kind, key, value)
+        self._queue.append(fut)
+        return fut
+
+    # ---------------------------------------------------------- driver loop
+    @property
+    def pending(self) -> int:
+        """Ops submitted but not yet resolved."""
+        return len(self._queue) + len(self._inflight)
+
+    def pump(self, run_balance: bool = True) -> int:
+        """One round: refresh-route, admit, execute, harvest. Returns the
+        number of futures resolved this round."""
+        if self._refresh_from is not None and self.route_cache:
+            self.refresh_route_cache(self._refresh_from)
+        self._admit()
+        ndone = 0
+        for op_id, val, src in self.backend.step():
+            fut = self._inflight.pop(op_id, None)
+            if fut is None:
+                # backends only report ops issued through them, and a
+                # backend supports one driving client — unreachable unless
+                # two clients share a backend (unsupported)
+                continue
+            fut._resolve(val, src)
+            fut.op_id = None
+            self._busy_keys.discard(fut.key)
+            ndone += 1
+            if src != fut.shard:
+                # wrong-route reply: the executing shard's replica covers
+                # this key freshest — refresh from it next pump
+                self.wrong_routes += 1
+                self._refresh_from = src
+        self._rounds += 1
+        if (run_balance and self.balance is not None
+                and self._rounds % self.balance_every == 0):
+            self.balance.step()
+        return ndone
+
+    def drain(self, max_rounds: int = 2000, *,
+              run_balance: bool = False) -> None:
+        """Pump until every future is resolved and the backend is quiet."""
+        for _ in range(max_rounds):
+            self.pump(run_balance=run_balance)
+            if self.pending == 0 and self.backend.quiescent():
+                return
+        raise RuntimeError(
+            f"client did not drain in {max_rounds} rounds: "
+            f"queued={len(self._queue)} inflight={len(self._inflight)} "
+            f"backend_quiet={self.backend.quiescent()}")
+
+    def settle(self, max_passes: int = 200, max_rounds: int = 2000) -> None:
+        """Drain, then run the balance policy to a fixed point (no commands
+        issued), draining after each pass."""
+        self.drain(max_rounds)
+        if self.balance is None:
+            return
+        for _ in range(max_passes):
+            if not any(self.balance.step().values()):
+                return
+            self.drain(max_rounds)
+        raise RuntimeError(f"balance did not settle in {max_passes} passes")
+
+    # -------------------------------------------------------------- routing
+    def route(self, key: int) -> int:
+        """Predicted owner shard for ``key`` (home shard when uncached)."""
+        if self.route_cache:
+            owner = self._cache.lookup(key)
+            if owner is not None and 0 <= owner < self.backend.n:
+                return owner
+        return self.home_shard
+
+    def refresh_route_cache(self, shard: Optional[int] = None) -> None:
+        """Re-seed the route cache from a server's registry replica."""
+        src = self.home_shard if shard is None else int(shard)
+        self._cache.load(self.backend.registry_entries(src))
+        self._refresh_from = None
+
+    def _admit(self) -> None:
+        """Admit queued ops up to the pacing budget, preserving per-key
+        submission order (a key with an op in flight, or with an earlier op
+        deferred this pass, keeps its later ops queued)."""
+        if not self._queue:
+            return
+        budget = self.max_inflight - len(self._inflight)
+        per_round = self.cfg.batch_size      # backend feed bound per shard
+        admit: Dict[int, List[OpFuture]] = {}
+        kept: deque = deque()
+        skip: Set[int] = set()
+        for qi, fut in enumerate(self._queue):
+            if budget <= 0:
+                # budget spent: everything left stays queued in order —
+                # stop scanning (a deep overload queue would otherwise make
+                # each pump O(queue) for nothing)
+                kept.extend(islice(self._queue, qi, None))
+                break
+            key = fut.key
+            if key in self._busy_keys or key in skip:
+                kept.append(fut)
+                skip.add(key)
+                continue
+            shard = self.route(key)
+            lane = admit.setdefault(shard, [])
+            if len(lane) >= per_round:
+                kept.append(fut)
+                skip.add(key)
+                continue
+            fut.shard = shard
+            lane.append(fut)
+            self._busy_keys.add(key)
+            budget -= 1
+        self._queue = kept
+        for shard, futs in admit.items():
+            ids = self.backend.submit(
+                shard, [f.kind for f in futs], [f.key for f in futs],
+                [f.value for f in futs])
+            for f, op_id in zip(futs, ids):
+                f.op_id = op_id
+                self._inflight[op_id] = f
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.backend.stats
+
+    def all_keys(self) -> List[int]:
+        return self.backend.all_keys()
+
+
+def local_client(cfg, **kw) -> DiLiClient:
+    """Convenience: a ``DiLiClient`` over a fresh ``LocalBackend``."""
+    backend_kw = {k: kw.pop(k) for k in
+                  ("seed", "delay_prob", "key_lo", "key_hi") if k in kw}
+    return DiLiClient(LocalBackend(cfg, **backend_kw), **kw)

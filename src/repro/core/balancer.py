@@ -12,17 +12,33 @@ per machine). Policy, verbatim from the paper:
 
 The Split/Move primitives are the *interface*; this policy is deliberately
 simple and replaceable (the paper calls for workload-specific balancers).
+``Balancer`` is one ``BalancePolicy`` — the client driver loop
+(``repro.api.DiLiClient``) runs any policy with a ``step() -> dict``
+method at a configurable cadence, over any object exposing the balance
+surface (``Cluster`` or an ``api.Backend``: ``n``/``cfg``/``bgs``/
+``states``/``sublists``/``middle_item``/``split``/``move``/``merge``).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional, Protocol
 
 from . import background as B
-from .sim import Cluster
+
+
+class BalancePolicy(Protocol):
+    """A pluggable balancing policy: one pass of decisions per call.
+
+    ``step`` inspects the cluster/backend it was constructed over, queues
+    Split/Move/Merge commands, and returns issued-command counts; an
+    all-zero dict means the policy reached a fixed point (how
+    ``DiLiClient.settle`` detects convergence).
+    """
+
+    def step(self) -> Dict[str, int]: ...
 
 
 class Balancer:
-    def __init__(self, cluster: Cluster, *, split_threshold: Optional[int] = None,
+    def __init__(self, cluster, *, split_threshold: Optional[int] = None,
                  move_headroom: float = 1.10, merge_threshold: int = 0,
                  registry_headroom: int = 4):
         self.cl = cluster

@@ -56,10 +56,20 @@ def bucket_by_dst(outbox, count, num_shards: int, cap_pair: int):
 
 
 def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
-    """Build the jitted SPMD round: (states, bgs, inbox, client) -> ... .
+    """Build the jitted SPMD round: (states, bgs, inbox, client) ->
+    (states, bgs, inbox_next, comp_slot, comp_val, comp_src, stats).
 
     All arguments are stacked over the leading shard axis and sharded over
-    the mesh's flattened device axes.
+    the mesh's flattened device axes. ``comp_src`` is the shard that
+    executed each completed op (route-correction feedback for the client
+    API). ``stats`` is int32[4] per shard, computed on-device so the host
+    driver never pulls the routed inbox:
+
+      0  out_count — attempted outbox pushes (detects ``bucket_by_dst``
+         overflow instead of silently losing rows)
+      1  live rows routed to this shard (quiescence signal)
+      2  delegated MSG_OP rows routed to this shard
+      3  max delegation-hop count among those rows
     """
     num = cfg.num_shards
     assert num == mesh.devices.size, (num, mesh.devices.size)
@@ -78,18 +88,28 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
         routed = jax.lax.all_to_all(buckets, axes, split_axis=0,
                                     concat_axis=0)
         inbox_next = routed.reshape(1, num * cap_pair, M.FIELDS)
+        rows = inbox_next[0]
+        live = rows[:, M.F_KIND] != M.MSG_NONE
+        is_op = rows[:, M.F_KIND] == M.MSG_OP
+        stats = jnp.stack([
+            out.out_count,
+            jnp.sum(live).astype(jnp.int32),
+            jnp.sum(is_op).astype(jnp.int32),
+            jnp.max(jnp.where(is_op, rows[:, M.F_X2], 0)).astype(jnp.int32),
+        ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),
                 jax.tree_util.tree_map(add1, out.bg),
                 inbox_next,
-                out.comp_slot[None], out.comp_val[None])
+                out.comp_slot[None], out.comp_val[None],
+                out.comp_src[None], stats[None])
 
     pspec = P(axes)
 
     fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec),
-        out_specs=(pspec, pspec, pspec, pspec, pspec),
+        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec),
         check_rep=False)
     return jax.jit(fn)
 

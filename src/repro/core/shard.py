@@ -39,6 +39,11 @@ class RoundOut(NamedTuple):
     out_count: jnp.ndarray
     comp_slot: jnp.ndarray   # [K] client slots completed this round (-1 pad)
     comp_val: jnp.ndarray    # [K]
+    comp_src: jnp.ndarray    # [K] shard that *executed* each completed op —
+                             # != the submission shard means the op was
+                             # delegated, i.e. the client's route was stale
+                             # (the client API uses this to refresh its
+                             # registry cache; DESIGN.md §9)
     fast_hits: jnp.ndarray   # int32 — finds answered by the fast-path
     mut_hits: jnp.ndarray    # int32 — mutations applied by the fast-path
 
@@ -50,24 +55,28 @@ def _handle_op(state, bg, me, row, outbox, count, cfg):
         (row[M.F_A] != 0)
     cslot = jnp.where(local_done, slot, -1)
     cval = jnp.where(local_done, out.result, 0)
-    return out.state, bg, out.outbox, out.count, cslot, cval
+    return out.state, bg, out.outbox, out.count, cslot, cval, me
 
 
 def _handle_result(state, bg, me, row, outbox, count, cfg):
-    return state, bg, outbox, count, row[M.F_TS], row[M.F_A]
+    # F_SRC is the shard that executed the op and routed the result home —
+    # the corrected route for the op's key.
+    return state, bg, outbox, count, row[M.F_TS], row[M.F_A], row[M.F_SRC]
 
 
 def _wrap_bg(fn):
     def h(state, bg, me, row, outbox, count, cfg):
         state, bg, outbox, count = fn(state, bg, me, row, outbox, count, cfg)
         neg = jnp.asarray(-1, jnp.int32)
-        return state, bg, outbox, count, neg, jnp.zeros((), jnp.int32)
+        return (state, bg, outbox, count, neg, jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32))
     return h
 
 
 def _noop(state, bg, me, row, outbox, count, cfg):
     neg = jnp.asarray(-1, jnp.int32)
-    return state, bg, outbox, count, neg, jnp.zeros((), jnp.int32)
+    return (state, bg, outbox, count, neg, jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32))
 
 
 _HANDLERS = {
@@ -140,24 +149,27 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
         return c[0] < n_live
 
     def body(c):
-        i, st, b, ob, ct, cslots, cvals = c
+        i, st, b, ob, ct, cslots, cvals, csrcs = c
         row = rows[i]
         kind = jnp.clip(row[M.F_KIND], 0, _N_KINDS - 1)
-        st, b, ob, ct, cs, cv = jax.lax.switch(
+        st, b, ob, ct, cs, cv, cr = jax.lax.switch(
             kind, branches, (st, b, row, ob, ct))
         return (i + 1, st, b, ob, ct,
-                cslots.at[i].set(cs), cvals.at[i].set(cv))
+                cslots.at[i].set(cs), cvals.at[i].set(cv),
+                csrcs.at[i].set(cr))
 
     # completions start pre-filled with the pre-pass answers (those rows
     # sit past n_live); the serial loop overwrites its own rows' slots.
+    # Pre-pass rows are local clients answered here, so their src is ``me``.
     init = (jnp.zeros((), jnp.int32), state, bg, outbox, count,
             jnp.where(elig | melig, rows[:, M.F_TS], -1).astype(jnp.int32),
-            jnp.where(elig | melig, pre.res[order], 0).astype(jnp.int32))
-    _, state, bg, outbox, count, cslots, cvals = jax.lax.while_loop(
+            jnp.where(elig | melig, pre.res[order], 0).astype(jnp.int32),
+            jnp.full((n_rows,), me, jnp.int32))
+    _, state, bg, outbox, count, cslots, cvals, csrcs = jax.lax.while_loop(
         cond, body, init)
 
     state, bg, outbox, count = B.bg_step(state, bg, me, outbox, count, cfg)
     return RoundOut(state=state, bg=bg, outbox=outbox, out_count=count,
-                    comp_slot=cslots, comp_val=cvals,
+                    comp_slot=cslots, comp_val=cvals, comp_src=csrcs,
                     fast_hits=jnp.sum(pre.find_elig).astype(jnp.int32),
                     mut_hits=jnp.sum(pre.mut_elig).astype(jnp.int32))

@@ -8,8 +8,9 @@ This is the single-host execution backend for the DiLi runtime. Each round:
      FIFO preserved; undeliverable overflow is backlogged, never dropped —
      the reliable-channel condition of conditional lock-freedom).
 
-An optional ``delay_rng`` holds back whole (src,dst) channels for a round to
-exercise out-of-order-across-pairs delivery (replay retries must heal).
+With ``delay_prob > 0`` (deterministic under ``seed``) whole (src,dst)
+channels are held back for a round to exercise out-of-order-across-pairs
+delivery (replay retries must heal).
 
 The shard_map/TPU backend with ``all_to_all`` routing lives in
 ``distributed.py``; it runs the same ``shard_round``.
@@ -40,6 +41,162 @@ class OutboxOverflow(RuntimeError):
     """
 
 
+# ------------------------------------------------------ client-op plumbing
+# Shared by every execution backend (Cluster below, api.ShardMapBackend) so
+# the MSG_OP row layout and the op-id lifecycle have exactly one home —
+# divergence here is precisely what the Local-vs-ShardMap parity test
+# guards against.
+
+class OpIdAllocator:
+    """Op ids for the int32 ``F_TS`` message lane, with recycling.
+
+    ``alloc`` reissues released ids first and raises before the int32
+    ceiling — a wrapped id would silently alias a live op.
+    """
+
+    def __init__(self):
+        self.next_id = 0
+        self.free: List[int] = []
+
+    def alloc(self) -> int:
+        if self.free:
+            return self.free.pop()
+        if self.next_id >= np.iinfo(np.int32).max:
+            raise RuntimeError(
+                "op-id space exhausted: op ids are int32 message lanes and "
+                "would wrap — drain results (take_result / backend.step) "
+                "so ids recycle")
+        nid = self.next_id
+        self.next_id += 1
+        return nid
+
+    def release(self, op_id: int) -> None:
+        self.free.append(op_id)
+
+
+def materialize_ops(kinds, keys, values):
+    """Materialize (once) and length-check a client op batch."""
+    kinds = [int(k) for k in kinds]
+    keys = [int(k) for k in keys]
+    if len(kinds) != len(keys):
+        raise ValueError(f"submit: {len(kinds)} kinds vs {len(keys)} keys")
+    values = ([0] * len(keys) if values is None
+              else [int(v) for v in values])
+    if len(values) != len(keys):
+        raise ValueError(f"submit: {len(values)} values vs {len(keys)} keys")
+    return kinds, keys, values
+
+
+def make_op_row(shard: int, kind: int, key: int, val: int,
+                slot: int) -> np.ndarray:
+    """One fresh MSG_OP row addressed at server ``shard`` (null subhead
+    hint — the server resolves the route; reply shard = ``shard``)."""
+    row = np.zeros((M.FIELDS,), np.int32)
+    row[M.F_KIND] = M.MSG_OP
+    row[M.F_DST] = shard
+    row[M.F_SRC] = shard
+    row[M.F_A] = kind
+    row[M.F_KEY] = key
+    row[M.F_REF1] = np.int64(refs.NULL_REF).astype(np.int32)
+    row[M.F_SID] = shard
+    row[M.F_TS] = slot
+    row[M.F_VAL] = val
+    return row
+
+
+# ------------------------------------------------------- state inspection
+# Free functions over (cfg, states) so every execution backend (the
+# simulator below, the shard_map backend behind ``api.ShardMapBackend``)
+# shares one chain walker and one registry reader.
+
+def chain_keys(cfg: DiLiConfig, states: Sequence[ShardState], s: int,
+               head_idx: int, include_meta: bool = False):
+    """Walk a chain from a subhead; returns live keys, or (key, idx, value)
+    triples with ``include_meta``.
+
+    A healthy chain terminates (SubTail, null, or a foreign ref) within
+    ``pool_capacity`` steps — the nodes of one chain are distinct pool
+    slots. Exhausting the bound therefore proves a cycle (corruption), and
+    raising beats returning a silent prefix: ``all_keys()``-based
+    assertions must not pass vacuously on a truncated walk.
+    """
+    st = states[s]
+    nxt = np.asarray(st.pool.nxt)
+    key = np.asarray(st.pool.key)
+    vals = np.asarray(st.pool.keymax)
+    out = []
+    ref = int(nxt[head_idx])
+    for _ in range(int(cfg.pool_capacity) + 2):
+        idx = ref & refs.IDX_MASK
+        sid = (ref & refs.SID_MASK) >> refs.IDX_BITS
+        if idx == refs.NULL_IDX or sid != s:
+            break
+        k = int(key[idx])
+        marked = bool(int(nxt[idx]) & refs.MARK_BIT)
+        if k == ST_KEY:
+            break
+        if k != SH_KEY and not marked:
+            out.append((k, idx, int(vals[idx])) if include_meta else k)
+        ref = int(nxt[idx])
+    else:
+        raise RuntimeError(
+            f"shard {s} chain from head {head_idx} did not terminate "
+            f"within pool_capacity={int(cfg.pool_capacity)} steps "
+            f"— cyclic or corrupted chain")
+    return out
+
+
+def state_sublists(cfg: DiLiConfig, states: Sequence[ShardState], s: int):
+    """(keymin, keymax, owner, size, head_idx, switched) per entry of
+    shard s's registry replica; ``size`` is None for entries owned
+    elsewhere. ``switched`` flags an owned entry whose sublist has been
+    switched away (stCt < 0) — a stale local copy awaiting quarantine."""
+    st = states[s]
+    reg = st.registry
+    out = []
+    for e in range(int(reg.size)):
+        sh = int(np.asarray(reg.subhead)[e])
+        sid = (sh & refs.SID_MASK) >> refs.IDX_BITS
+        head_idx = sh & refs.IDX_MASK
+        size = None
+        switched = False
+        if sid == s:
+            size = len(chain_keys(cfg, states, s, head_idx))
+            slot = int(np.asarray(st.pool.ctr)[head_idx])
+            switched = int(np.asarray(st.stct)[slot]) < 0
+        out.append(dict(
+            keymin=int(np.asarray(reg.keymin)[e]),
+            keymax=int(np.asarray(reg.keymax)[e]),
+            owner=int(sid), size=size, head_idx=int(head_idx),
+            switched=switched))
+    return out
+
+
+def global_keys(cfg: DiLiConfig, states: Sequence[ShardState]) -> List[int]:
+    """Global key set: union over every shard's owned, non-switched
+    sublists (one registry walk, shared with ``state_sublists``)."""
+    keys: List[int] = []
+    for s in range(len(states)):
+        for e in state_sublists(cfg, states, s):
+            if e["owner"] != s or e["switched"]:
+                continue
+            keys.extend(chain_keys(cfg, states, s, e["head_idx"]))
+    return sorted(keys)
+
+
+def registry_entries(state: ShardState):
+    """One shard's registry replica as (keymin, keymax, owner) triples,
+    sorted by keymin — the view a client seeds/refreshes its route cache
+    from (DESIGN.md §9)."""
+    reg = state.registry
+    size = int(reg.size)
+    kmin = np.asarray(reg.keymin)[:size]
+    kmax = np.asarray(reg.keymax)[:size]
+    sh = np.asarray(reg.subhead)[:size].astype(np.int64)
+    owner = (sh & refs.SID_MASK) >> refs.IDX_BITS
+    return [(int(a), int(b), int(o)) for a, b, o in zip(kmin, kmax, owner)]
+
+
 class Cluster:
     def __init__(self, cfg: DiLiConfig, *, seed: int = 0,
                  delay_prob: float = 0.0,
@@ -68,13 +225,15 @@ class Cluster:
         self.backlog = [np.zeros((0, M.FIELDS), np.int32)
                         for _ in range(self.n)]
         self.results: Dict[int, int] = {}
-        self._next_slot = 0
+        self.result_src: Dict[int, int] = {}
+        self.last_completions: List[Tuple[int, int, int]] = []
+        self._ids = OpIdAllocator()
         self._pending_ops: Dict[int, Tuple[int, int]] = {}
         self.round_no = 0
         self.delay_prob = delay_prob
         self.rng = np.random.default_rng(seed)
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
-                      "fast_hits": 0, "mut_hits": 0}
+                      "fast_hits": 0, "mut_hits": 0, "delegated": 0}
 
     # ------------------------------------------------------------ client API
     def submit(self, shard: int, kinds: Sequence[int],
@@ -86,39 +245,38 @@ class Cluster:
         ``values`` ride with inserts (item payload, e.g. a KV-page slot).
         ``kinds``/``keys``/``values`` may be any iterables (generators
         included) — they are materialized exactly once up front.
+
+        Op ids travel in an int32 message lane, so they must stay below
+        2**31. Ids returned to ``take_result`` are recycled; ids whose
+        results linger in ``self.results`` are not — a long-running caller
+        that never drains them exhausts the space and ``submit`` raises
+        (never silently wraps).
         """
-        kinds = [int(k) for k in kinds]
-        keys = [int(k) for k in keys]
-        if len(kinds) != len(keys):
-            raise ValueError(
-                f"submit: {len(kinds)} kinds vs {len(keys)} keys")
-        values = ([0] * len(keys) if values is None
-                  else [int(v) for v in values])
-        if len(values) != len(keys):
-            raise ValueError(
-                f"submit: {len(values)} values vs {len(keys)} keys")
+        kinds, keys, values = materialize_ops(kinds, keys, values)
         ids = []
         rows = []
         for kind, key, val in zip(kinds, keys, values):
-            slot = self._next_slot
-            self._next_slot += 1
-            row = np.zeros((M.FIELDS,), np.int32)
-            row[M.F_KIND] = M.MSG_OP
-            row[M.F_DST] = shard
-            row[M.F_SRC] = shard
-            row[M.F_A] = int(kind)
-            row[M.F_KEY] = int(key)
-            row[M.F_REF1] = np.int64(refs.NULL_REF).astype(np.int32)
-            row[M.F_SID] = shard
-            row[M.F_TS] = slot
-            row[M.F_VAL] = int(val)
-            rows.append(row)
+            slot = self._ids.alloc()
+            rows.append(make_op_row(shard, kind, key, val, slot))
             ids.append(slot)
-            self._pending_ops[slot] = (int(kind), int(key))
+            self._pending_ops[slot] = (kind, key)
         if rows:
             self.backlog[shard] = np.concatenate(
                 [self.backlog[shard], np.stack(rows)], axis=0)
         return ids
+
+    def take_result(self, op_id: int) -> int:
+        """Pop a completed op's result and recycle its id.
+
+        Raises ``KeyError`` while the op is still pending. This is the
+        drain path long-running clients must use: ids handed back here are
+        reissued by ``submit`` instead of growing the id space toward the
+        int32 wraparound guard.
+        """
+        val = self.results.pop(op_id)
+        self.result_src.pop(op_id, None)
+        self._ids.release(op_id)
+        return val
 
     # ------------------------------------------------------------- execution
     def step(self) -> int:
@@ -139,6 +297,7 @@ class Cluster:
             outs.append(out)
 
         ndone = 0
+        self.last_completions = []
         new_msgs: List[np.ndarray] = []
         for s, out in enumerate(outs):
             self.states[s] = out.state
@@ -162,10 +321,15 @@ class Cluster:
                 if hops.size:
                     self.stats["max_hops"] = max(self.stats["max_hops"],
                                                  int(hops.max()))
+                    self.stats["delegated"] += int(hops.size)
             cs = np.asarray(out.comp_slot)
             cv = np.asarray(out.comp_val)
-            for slot, val in zip(cs[cs >= 0], cv[cs >= 0]):
+            cr = np.asarray(out.comp_src)
+            done = cs >= 0
+            for slot, val, src in zip(cs[done], cv[done], cr[done]):
                 self.results[int(slot)] = int(val)
+                self.result_src[int(slot)] = int(src)
+                self.last_completions.append((int(slot), int(val), int(src)))
                 self._pending_ops.pop(int(slot), None)
                 ndone += 1
 
@@ -211,64 +375,21 @@ class Cluster:
 
     # ----------------------------------------------------------- inspection
     def shard_chain(self, s: int, head_idx: int, include_meta=False):
-        """Walk a chain from a subhead; returns live keys, or
-        (key, idx, value) triples with ``include_meta``."""
-        st = self.states[s]
-        nxt = np.asarray(st.pool.nxt)
-        key = np.asarray(st.pool.key)
-        vals = np.asarray(st.pool.keymax)
-        out = []
-        ref = int(nxt[head_idx])
-        for _ in range(int(self.cfg.max_scan) * 4):
-            idx = ref & refs.IDX_MASK
-            sid = (ref & refs.SID_MASK) >> refs.IDX_BITS
-            if idx == refs.NULL_IDX or sid != s:
-                break
-            k = int(key[idx])
-            marked = bool(int(nxt[idx]) & refs.MARK_BIT)
-            if k == ST_KEY:
-                break
-            if k != SH_KEY and not marked:
-                out.append((k, idx, int(vals[idx])) if include_meta else k)
-            ref = int(nxt[idx])
-        return out
+        """Walk a chain from a subhead (see ``chain_keys``); raises on a
+        cyclic/corrupted chain instead of returning a silent prefix."""
+        return chain_keys(self.cfg, self.states, s, head_idx, include_meta)
 
     def all_keys(self) -> List[int]:
         """Global key set: union over every shard's owned sublists."""
-        keys: List[int] = []
-        for s in range(self.n):
-            st = self.states[s]
-            reg = st.registry
-            size = int(reg.size)
-            for e in range(size):
-                sh = int(np.asarray(reg.subhead)[e])
-                sid = (sh & refs.SID_MASK) >> refs.IDX_BITS
-                if sid != s:
-                    continue
-                head_idx = sh & refs.IDX_MASK
-                slot = int(np.asarray(st.pool.ctr)[head_idx])
-                if int(np.asarray(st.stct)[slot]) < 0:
-                    continue  # switched-away stale copy
-                keys.extend(self.shard_chain(s, head_idx))
-        return sorted(keys)
+        return global_keys(self.cfg, self.states)
 
     def sublists(self, s: int):
-        """(keymin, keymax, owner, size, head_idx, keymax_id) per entry."""
-        st = self.states[s]
-        reg = st.registry
-        out = []
-        for e in range(int(reg.size)):
-            sh = int(np.asarray(reg.subhead)[e])
-            sid = (sh & refs.SID_MASK) >> refs.IDX_BITS
-            head_idx = sh & refs.IDX_MASK
-            size = None
-            if sid == s:
-                size = len(self.shard_chain(s, head_idx))
-            out.append(dict(
-                keymin=int(np.asarray(reg.keymin)[e]),
-                keymax=int(np.asarray(reg.keymax)[e]),
-                owner=int(sid), size=size, head_idx=int(head_idx)))
-        return out
+        """(keymin, keymax, owner, size, head_idx) per entry."""
+        return state_sublists(self.cfg, self.states, s)
+
+    def registry_entries(self, s: int = 0):
+        """Shard ``s``'s registry replica as (keymin, keymax, owner)."""
+        return registry_entries(self.states[s])
 
     # ---------------------------------------------------------- bg commands
     def split(self, s: int, entry_keymax: int, sitem_idx: int) -> None:

@@ -53,7 +53,7 @@ def main():
     for r in reqs:
         print(f"seq {r.seq_id}: generated {r.out}")
     print(f"page-table sublists per shard: "
-          f"{[len(eng.kv.dili.sublists(s)) for s in range(eng.kv.dili.n)]}")
+          f"{[len(eng.kv.backend.sublists(s)) for s in range(eng.kv.backend.n)]}")
 
 
 if __name__ == "__main__":

@@ -43,7 +43,7 @@ class ServingEngine:
         self.max_batch = max_batch
         self.use_kernel = use_kernel
         self.active: List[Request] = []
-        self.balancer = Balancer(self.kv.dili, split_threshold=64)
+        self.balancer = Balancer(self.kv.backend, split_threshold=64)
         self._decode = jax.jit(
             lambda p, t, kp, vp, pt, sl: paged_decode_step(
                 p, cfg, t, kp, vp, pt, sl, page_size=page_size,
@@ -76,7 +76,7 @@ class ServingEngine:
             return
         if rebalance:
             self.balancer.step()
-            self.kv.dili.run_until_quiet(600)
+            self.kv.client.drain(600)
             self.kv.refresh_table()
         b = len(live)
         pp = max((len(r.prompt) + r.max_new + self.page_size - 1)

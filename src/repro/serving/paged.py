@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sim import Cluster
-from repro.core.types import DiLiConfig, OP_INSERT, OP_REMOVE
+from repro.api import DiLiClient, LocalBackend
+from repro.core.types import DiLiConfig
 from repro.kernels import ops as K
 from repro.models import transformer as T
 from repro.models.attention import decode_attention
@@ -54,7 +54,11 @@ class PagedKVManager:
                           max_sublists=64, max_ctrs=64,
                           max_scan=max(4 * num_pages, 1024),
                           batch_size=32, mailbox_cap=256, move_batch=16)
-        self.dili = Cluster(dcfg)
+        self.backend = LocalBackend(dcfg)
+        self.client = DiLiClient(self.backend)
+        # the raw cluster stays reachable for tests/tools that inject
+        # background commands or inspect chains directly
+        self.dili = self.backend.cluster
         self._table: Dict[int, int] = {}   # key -> slot (snapshot cache)
 
     # ------------------------------------------------------------ alloc/free
@@ -62,15 +66,15 @@ class PagedKVManager:
         assert self.free_slots, "page pool exhausted"
         slot = self.free_slots.pop()
         key = page_key(seq_id, page)
-        self.dili.submit(0, [OP_INSERT], [key], [slot])
-        self.dili.run_until_quiet()
+        self.client.insert(key, value=slot)
+        self.client.drain()
         self._table[key] = slot
         return slot
 
     def free_seq(self, seq_id: int, num_pages: int) -> None:
         keys = [page_key(seq_id, p) for p in range(num_pages)]
-        self.dili.submit(0, [OP_REMOVE] * len(keys), keys)
-        self.dili.run_until_quiet()
+        self.client.remove_batch(keys)
+        self.client.drain()
         for k in keys:
             slot = self._table.pop(k, None)
             if slot is not None:
@@ -80,11 +84,11 @@ class PagedKVManager:
     def refresh_table(self) -> None:
         """Re-snapshot key->slot from the DiLi chains (after Split/Move)."""
         table: Dict[int, int] = {}
-        for s in range(self.dili.n):
-            for e in self.dili.sublists(s):
+        for s in range(self.backend.n):
+            for e in self.backend.sublists(s):
                 if e["owner"] != s:
                     continue
-                for k, _idx, val in self.dili.shard_chain(
+                for k, _idx, val in self.backend.shard_chain(
                         s, e["head_idx"], include_meta=True):
                     table[k] = val
         self._table = table

@@ -7,10 +7,17 @@ R2  submit validates length mismatches loudly instead of zip-truncating.
 R3  Outbox overflow raises ``OutboxOverflow`` unconditionally — it must
     not be an ``assert`` (``python -O`` would silently truncate messages,
     and a lost replicate/ack deadlocks ``run_until_quiet``).
+R4  Op ids are int32 message lanes: completed ids drained through
+    ``take_result`` are recycled, and exhaustion raises instead of
+    silently wrapping into colliding ids.
+R5  ``shard_chain`` raises on a cyclic/corrupted chain instead of
+    returning a silent prefix (which made ``all_keys()``-based
+    assertions pass vacuously).
 """
 import numpy as np
 import pytest
 
+from repro.core import refs
 from repro.core.oracle import OracleList
 from repro.core.sim import Cluster, OutboxOverflow
 from repro.core.types import DiLiConfig, OP_FIND, OP_INSERT
@@ -84,3 +91,48 @@ def test_outbox_at_cap_does_not_raise():
     cl.run_until_quiet(100)
     assert cl.stats["max_outbox"] == 4
     assert all(cl.results[j] == 0 for j in range(4))  # absent keys
+
+
+def test_op_ids_recycle_via_take_result():
+    """R4: drained op ids are reissued; _next_slot stays bounded."""
+    cl = Cluster(CFG)
+    ids = cl.submit(0, [OP_INSERT] * 4, [10, 11, 12, 13])
+    cl.run_until_quiet(200)
+    for j in ids:
+        assert cl.take_result(j) == 1
+        with pytest.raises(KeyError):
+            cl.take_result(j)       # already drained
+    top = cl._ids.next_id
+    ids2 = cl.submit(0, [OP_FIND] * 4, [10, 11, 12, 13])
+    assert sorted(ids2) == sorted(ids), "drained ids were not reissued"
+    assert cl._ids.next_id == top
+    cl.run_until_quiet(200)
+    assert [cl.take_result(j) for j in ids2] == [1] * 4
+
+
+def test_op_id_exhaustion_raises():
+    """R4: id-space exhaustion must raise, not wrap into int32 aliasing."""
+    cl = Cluster(CFG)
+    cl._ids.next_id = np.iinfo(np.int32).max
+    with pytest.raises(RuntimeError, match="op-id space exhausted"):
+        cl.submit(0, [OP_FIND], [5])
+    # recycled ids keep a full results dict submittable at the guard
+    cl._ids.release(7)
+    assert cl.submit(0, [OP_FIND], [5]) == [7]
+
+
+def test_shard_chain_cycle_raises():
+    """R5: a corrupted (cyclic) chain must raise, not truncate silently."""
+    cl = Cluster(CFG)
+    ids = cl.submit(0, [OP_INSERT] * 3, [10, 20, 30])
+    cl.run_until_quiet(200)
+    assert cl.all_keys() == [10, 20, 30]
+    # corrupt: point the node holding key 20 back at itself
+    st = cl.states[0]
+    idx = {k: i for k, i, _ in cl.shard_chain(0, 0, include_meta=True)}[20]
+    cl.states[0] = st._replace(pool=st.pool._replace(
+        nxt=st.pool.nxt.at[idx].set(refs.make_ref(0, idx))))
+    with pytest.raises(RuntimeError, match="did not terminate"):
+        cl.shard_chain(0, 0)
+    with pytest.raises(RuntimeError, match="did not terminate"):
+        cl.all_keys()
