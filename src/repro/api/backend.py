@@ -29,7 +29,7 @@ from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import background as B
+from repro.core import bg as B
 from repro.core import messages as M
 from repro.core import refs
 from repro.core.sim import (Cluster, OpIdAllocator, OutboxOverflow,
@@ -65,11 +65,13 @@ class Backend(Protocol):
 
     def middle_item(self, s: int, head_idx: int) -> Optional[int]: ...
 
-    def split(self, s: int, entry_keymax: int, sitem_idx: int) -> None: ...
+    # each returns True when a background slot accepted the command,
+    # False when it was dropped (no idle slot / entry already claimed)
+    def split(self, s: int, entry_keymax: int, sitem_idx: int) -> bool: ...
 
-    def move(self, s: int, entry_keymax: int, target: int) -> None: ...
+    def move(self, s: int, entry_keymax: int, target: int) -> bool: ...
 
-    def merge(self, s: int, left_keymax: int, right_keymax: int) -> None: ...
+    def merge(self, s: int, left_keymax: int, right_keymax: int) -> bool: ...
 
 
 class LocalBackend:
@@ -132,7 +134,7 @@ class LocalBackend:
         cl = self.cluster
         if any(b.shape[0] for b in cl.backlog):
             return False
-        return all(int(bg.phase) == B.BG_IDLE for bg in cl.bgs)
+        return not any(B.any_active(bg) for bg in cl.bgs)
 
     def registry_entries(self, shard: int = 0) -> List[RegEntry]:
         return self.cluster.registry_entries(shard)
@@ -152,14 +154,14 @@ class LocalBackend:
     def middle_item(self, s: int, head_idx: int) -> Optional[int]:
         return self.cluster.middle_item(s, head_idx)
 
-    def split(self, s, entry_keymax, sitem_idx) -> None:
-        self.cluster.split(s, entry_keymax, sitem_idx)
+    def split(self, s, entry_keymax, sitem_idx) -> bool:
+        return self.cluster.split(s, entry_keymax, sitem_idx)
 
-    def move(self, s, entry_keymax, target) -> None:
-        self.cluster.move(s, entry_keymax, target)
+    def move(self, s, entry_keymax, target) -> bool:
+        return self.cluster.move(s, entry_keymax, target)
 
-    def merge(self, s, left_keymax, right_keymax) -> None:
-        self.cluster.merge(s, left_keymax, right_keymax)
+    def merge(self, s, left_keymax, right_keymax) -> bool:
+        return self.cluster.merge(s, left_keymax, right_keymax)
 
     # ------------------------------------------------------------ debugging
     def all_keys(self) -> List[int]:
@@ -231,7 +233,8 @@ class ShardMapBackend:
         self._host_states: Optional[list] = None
         self.round_no = 0
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
-                      "fast_hits": 0, "mut_hits": 0, "delegated": 0}
+                      "fast_hits": 0, "mut_hits": 0, "delegated": 0,
+                      "move_hits": 0, "max_bg_active": 0}
 
     # ------------------------------------------------------------- protocol
     @property
@@ -259,8 +262,9 @@ class ShardMapBackend:
                         self._jnp.asarray(client))
         self._states, self._bgs, self._inbox, cs, cv, cr, rstats = out
         self._host_states = None
-        # per-shard int32[4] round stats computed on-device (the routed
-        # inbox itself never crosses to host on the hot path)
+        # per-shard int32[6] round stats computed on-device (the routed
+        # inbox itself never crosses to host on the hot path; see
+        # make_dili_round's docstring for the lane layout)
         rstats = np.asarray(rstats)
         over = int(rstats[:, 0].max())
         self.stats["max_outbox"] = max(self.stats["max_outbox"], over)
@@ -271,6 +275,9 @@ class ShardMapBackend:
                 f"{self.round_no}, mailbox_cap={cfg.mailbox_cap} — raise "
                 f"mailbox_cap or reduce the per-round feed")
         self._inflight_msgs = int(rstats[:, 1].sum())
+        self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
+                                          int(rstats[:, 4].max()))
+        self.stats["move_hits"] += int(rstats[:, 5].sum())
         delegated = int(rstats[:, 2].sum())
         if delegated:
             self.stats["delegated"] += delegated
@@ -321,21 +328,22 @@ class ShardMapBackend:
             return None
         return items[len(items) // 2][1]
 
-    def _queue_bg(self, s: int, fn, *args) -> None:
+    def _queue_bg(self, s: int, fn, *args) -> bool:
         tree_map = self._jax.tree_util.tree_map
         bg = tree_map(lambda x: x[s], self._bgs)
-        bg = fn(bg, *args)
+        bg, ok = fn(bg, *args)
         self._bgs = tree_map(lambda col, leaf: col.at[s].set(leaf),
                              self._bgs, bg)
+        return bool(ok)
 
-    def split(self, s, entry_keymax, sitem_idx) -> None:
-        self._queue_bg(s, B.queue_split, entry_keymax, sitem_idx)
+    def split(self, s, entry_keymax, sitem_idx) -> bool:
+        return self._queue_bg(s, B.queue_split, entry_keymax, sitem_idx)
 
-    def move(self, s, entry_keymax, target) -> None:
-        self._queue_bg(s, B.queue_move, entry_keymax, target)
+    def move(self, s, entry_keymax, target) -> bool:
+        return self._queue_bg(s, B.queue_move, entry_keymax, target)
 
-    def merge(self, s, left_keymax, right_keymax) -> None:
-        self._queue_bg(s, B.queue_merge, left_keymax, right_keymax)
+    def merge(self, s, left_keymax, right_keymax) -> bool:
+        return self._queue_bg(s, B.queue_merge, left_keymax, right_keymax)
 
     # ------------------------------------------------------------ debugging
     def all_keys(self) -> List[int]:

@@ -88,10 +88,16 @@ class DiLiClient:
         # Pacing budget: each in-flight op contributes at most one outbox
         # row per shard per round (its delegation XOR its result), plus one
         # replicate while its sublist moves. Reserve headroom for the
-        # background op (``move_batch`` MoveItems + registry broadcasts).
+        # background slots (each can have ``move_batch`` MoveItems plus
+        # their acks in fabric per round, and a registry broadcast). The
+        # reserve assumes ≤ bg_slots concurrent migrations touch any one
+        # shard (the §7.1 balancer's behaviour); policies aiming more
+        # moves at a single target need a larger mailbox_cap or an
+        # explicit max_inflight (DESIGN.md §9).
         if max_inflight is None:
+            bg_budget = self.cfg.bg_slots * (2 * self.cfg.move_batch + 2)
             max_inflight = max(
-                1, self.cfg.mailbox_cap - 2 * self.cfg.move_batch
+                1, self.cfg.mailbox_cap - bg_budget
                 - self.cfg.num_shards - 4)
         self.max_inflight = int(max_inflight)
         self._queue: deque = deque()                 # unadmitted OpFutures

@@ -1,1009 +1,21 @@
-"""Background operations: Split (§5.3), Move + Replay (§5.4), Switch (Alg. 5).
+"""Backwards-compatibility shim: the background engine lives in
+``repro.core.bg`` (fsm / util / handlers / phases / replay / engine).
 
-Each shard runs at most one background operation at a time (the paper assigns
-one background thread per machine); the operation advances one *phase* per
-round, never blocking client operations — they observe either the pre- or
-post-state of each phase plus delegation, exactly the paper's asynchrony.
-
-Phase graph::
-
-   IDLE -> SPLIT_EXEC -> SPLIT_WAIT -> IDLE
-   IDLE -> MOVE_SH -> MOVE_SH_WAIT -> MOVE_COPY -> MOVE_STABLE
-        -> SWITCH_ST [-> SWITCH_ST_WAIT] -> SWITCH_REG -> QUAR -> IDLE
-   IDLE -> MERGE_EXEC -> MERGE_WAIT -> IDLE          (Appendix B)
-
-Replay (Lines 249-262) is implemented faithfully: items are identified by
-their <sId, ts> tuple; an insert replays before the first node whose ts is
-smaller than the inserted item's comparison timestamp (Lemmas 8/9).
-One adaptation (DESIGN.md §8): the receiving shard Lamport-bumps its logical
-clock on every replayed/moved item (clock = max(clock, item_ts + 1)) so that
-timestamps stay comparable across repeated moves of the same sublist —
-x86 DiLi gets this for free only until a sublist changes clock domain twice.
+Everything importable from here before the decomposition still is —
+``from repro.core import background as B`` keeps working for tests,
+benchmarks and downstream tools. New code should import ``repro.core.bg``
+directly.
 """
-from __future__ import annotations
-
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from . import messages as M
-from . import refs, registry as reg_ops
-from .types import (DiLiConfig, NEG_INF_CT, SH_KEY, ST_KEY, ShardState)
-
-# ------------------------------------------------------------------ phases
-BG_IDLE = 0
-BG_SPLIT_EXEC = 1
-BG_SPLIT_WAIT = 2
-BG_MOVE_SH = 3
-BG_MOVE_SH_WAIT = 4
-BG_MOVE_COPY = 5
-BG_MOVE_STABLE = 6
-BG_SWITCH_ST = 7
-BG_SWITCH_ST_WAIT = 8
-BG_SWITCH_REG = 9
-BG_QUAR = 10
-BG_MERGE_EXEC = 11
-BG_MERGE_WAIT = 12
-
-# MOVE_ITEM / MOVE_ACK flag bits (message field F_A)
-FL_MARKED = 1
-FL_ST = 2
-
-
-class BgState(NamedTuple):
-    phase: jnp.ndarray       # int32
-    entry_key: jnp.ndarray   # int32 — keymax identifying the sublist entry
-    target: jnp.ndarray      # int32 — destination shard of a Move
-    sitem: jnp.ndarray       # int32 — split item pool idx
-    cursor: jnp.ndarray      # int32 — last copied (acked) source pool idx
-    sent: jnp.ndarray        # int32 — MoveItems sent in the current batch
-    acked: jnp.ndarray       # int32
-    st_sent: jnp.ndarray     # int32 bool — the SubTail has been sent
-    st_acked: jnp.ndarray    # int32 bool
-    sh_star: jnp.ndarray     # uint32 — target SubHead ref
-    st_star: jnp.ndarray     # uint32 — target SubTail ref
-    old_head: jnp.ndarray    # int32 — source SubHead pool idx
-    quar_round: jnp.ndarray  # int32
-    round: jnp.ndarray       # int32 — round counter
-    new_slot: jnp.ndarray    # int32 — split: right-half counter slot
-    old_slot: jnp.ndarray    # int32 — split: left-half counter slot
-    split_key: jnp.ndarray   # int32
-    sh_new: jnp.ndarray      # int32 — split: new SubHead pool idx
-    st_new: jnp.ndarray      # int32 — split: new SubTail pool idx
-    old_keymax: jnp.ndarray  # int32 — split: pre-split keymax (right keymax)
-    merge_key: jnp.ndarray   # int32 — merge: right entry keymax
-
-
-def init_bg() -> BgState:
-    z = jnp.zeros((), jnp.int32)
-    return BgState(phase=z, entry_key=z, target=z, sitem=z, cursor=z,
-                   sent=z, acked=z, st_sent=z, st_acked=z,
-                   sh_star=refs.null_ref(), st_star=refs.null_ref(),
-                   old_head=z, quar_round=z, round=z, new_slot=z,
-                   old_slot=z, split_key=z, sh_new=z, st_new=z,
-                   old_keymax=z, merge_key=z)
-
-
-# ===================================================================== util
-
-def _cover(reg, key):
-    return reg_ops.get_by_key(reg, key)
-
-
-def _entry_by_keymax(reg, keymax):
-    """Entry whose keymax equals ``keymax`` (the bg op's stable handle)."""
-    e = _cover(reg, keymax)
-    ok = (e >= 0) & (reg.keymax[jnp.clip(e, 0, None)] == keymax)
-    return jnp.where(ok, e, -1)
-
-
-def _alloc_node(state: ShardState):
-    has_free = state.free_top > 0
-    free_idx = state.free_list[jnp.clip(state.free_top - 1, 0, None)]
-    bump_ok = state.alloc_top < state.pool.key.shape[0]
-    idx = jnp.where(has_free, free_idx, state.alloc_top)
-    ok = has_free | bump_ok
-    state = state._replace(
-        free_top=state.free_top - has_free.astype(jnp.int32),
-        alloc_top=state.alloc_top + ((~has_free) & bump_ok).astype(jnp.int32))
-    return state, jnp.where(ok, idx, 0), ok
-
-
-def _set(col, idx, val, do):
-    return jnp.where(do, col.at[idx].set(val), col)
-
-
-def _lamport(state: ShardState, ts):
-    return state._replace(ts_clock=jnp.maximum(state.ts_clock, ts + 1))
-
-
-def _find_by_identity(state: ShardState, start_idx, sid, ts, bound):
-    """Walk the chain from ``start_idx`` for the node with <sId, ts>.
-
-    Returns (idx, found). Stops at SubTail / null / ``bound`` steps.
-    Used by Replay (Lines 227-230) and RepDelete (Lines 232-234).
-    """
-    pool = state.pool
-    n = pool.key.shape[0]
-
-    def cond(c):
-        idx, steps, done = c
-        return (~done) & (steps < bound)
-
-    def body(c):
-        idx, steps, _ = c
-        hit = (pool.sid[idx] == sid) & (pool.ts[idx] == ts)
-        at_end = (pool.key[idx] == ST_KEY) | \
-                 refs.is_null(pool.nxt[idx]) & ~hit
-        nxt_idx = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
-        idx2 = jnp.where(hit | at_end, idx, nxt_idx)
-        return idx2, steps + 1, hit | at_end
-
-    idx0 = jnp.clip(start_idx, 0, n - 1)
-    hit0 = (pool.sid[idx0] == sid) & (pool.ts[idx0] == ts)
-    idx, _, done = jax.lax.while_loop(
-        cond, body, (idx0, jnp.zeros((), jnp.int32), hit0))
-    found = (pool.sid[idx] == sid) & (pool.ts[idx] == ts)
-    return idx, found
-
-
-def _replay_insert(state: ShardState, me, prev_idx, comp_ts, key, item_sid,
-                   item_ts, is_marked, cfg: DiLiConfig, value=0):
-    """Replay algorithm Lines 249-262: insert after ``prev``, before the
-    first node whose ts < comp_ts. Returns (state, new_idx, ok)."""
-    pool = state.pool
-    n = pool.key.shape[0]
-
-    def cond(c):
-        curr_prev, curr, steps = c
-        go = (pool.ts[curr] >= comp_ts) & (pool.key[curr] != ST_KEY)
-        return go & (steps < cfg.max_scan)
-
-    def body(c):
-        curr_prev, curr, steps = c
-        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[curr])), 0, n - 1)
-        return curr, nxt, steps + 1
-
-    first = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[prev_idx])), 0, n - 1)
-    curr_prev, curr, _ = jax.lax.while_loop(
-        cond, body, (prev_idx, first, jnp.zeros((), jnp.int32)))
-
-    state, new_idx, ok = _alloc_node(state)
-    pool = state.pool
-    prev_nxt = pool.nxt[curr_prev]
-    prev_mark = prev_nxt & jnp.uint32(refs.MARK_BIT)
-    item_next = refs.with_mark(refs.make_ref(me, curr), is_marked)
-
-    pool = pool._replace(
-        key=_set(pool.key, new_idx, key, ok),
-        ts=_set(pool.ts, new_idx, item_ts, ok),
-        sid=_set(pool.sid, new_idx, item_sid, ok),
-        ctr=_set(pool.ctr, new_idx, pool.ctr[curr_prev], ok),
-        newloc=_set(pool.newloc, new_idx, refs.null_ref(), ok),
-        keymax=_set(pool.keymax, new_idx, value, ok),
-    )
-    pool = pool._replace(nxt=_set(pool.nxt, new_idx, item_next, ok))
-    # Line 260: preserve currPrev's own deletion mark when relinking.
-    pool = pool._replace(nxt=_set(
-        pool.nxt, curr_prev, refs.make_ref(me, new_idx) | prev_mark, ok))
-    state = state._replace(pool=pool)
-    state = _lamport(state, item_ts)
-    return state, new_idx, ok
-
-
-# ============================================================== msg handlers
-# All handlers: (state, bg, me, row, outbox, count, cfg) ->
-#               (state, bg, outbox, count)
-
-def h_rep_insert(state, bg, me, row, outbox, count, cfg):
-    """RepInsertAfterRecv (Lines 226-231)."""
-    anchor = refs.ref_idx(M.i2ref(row[M.F_REF1]))
-    prev_sid, prev_ts = row[M.F_X2], row[M.F_X3]
-    item_sid, item_ts = row[M.F_SID], row[M.F_TS]
-    key, oldloc, slot = row[M.F_KEY], row[M.F_X1], row[M.F_X4]
-
-    prev_idx, found = _find_by_identity(state, anchor, prev_sid, prev_ts,
-                                        cfg.max_scan)
-    st2, new_idx, ok = _replay_insert(
-        state, me, prev_idx, item_ts, key, item_sid, item_ts,
-        jnp.asarray(False), cfg, value=row[M.F_VAL])
-    apply_it = found & ok
-    state = jax.tree_util.tree_map(
-        lambda a, b: jnp.where(apply_it, b, a), state, st2)
-
-    ack = M.make_row(M.MSG_ACK_INSERT, row[M.F_SRC], me,
-                     ref1=M.ref2i(refs.make_ref(me, new_idx)),
-                     sid=item_sid, ts=item_ts, x1=oldloc, x4=slot)
-    outbox, count = M.push(outbox, count, ack, apply_it)
-    # prev's copy not here yet (out-of-order delivery): retry next round.
-    retry_row = row.at[M.F_A].set(row[M.F_A] + 1)
-    retry_row = retry_row.at[M.F_DST].set(me)
-    outbox, count = M.push(outbox, count, retry_row,
-                           (~apply_it) & (row[M.F_A] < cfg.max_retries))
-    return state, bg, outbox, count
-
-
-def h_rep_delete(state, bg, me, row, outbox, count, cfg):
-    """RepDeleteRecv (Lines 232-239)."""
-    anchor = refs.ref_idx(M.i2ref(row[M.F_REF1]))
-    item_sid, item_ts = row[M.F_SID], row[M.F_TS]
-    oldloc, slot = row[M.F_X1], row[M.F_X4]
-    need_ack = row[M.F_X2] != 0
-
-    idx, found = _find_by_identity(state, anchor, item_sid, item_ts,
-                                   cfg.max_scan)
-    state = state._replace(pool=state.pool._replace(
-        nxt=_set(state.pool.nxt, idx, refs.with_mark(state.pool.nxt[idx]),
-                 found)))
-    ack = M.make_row(M.MSG_ACK_DELETE, row[M.F_SRC], me, x1=oldloc, x4=slot)
-    outbox, count = M.push(outbox, count, ack, found & need_ack)
-    retry_row = row.at[M.F_A].set(row[M.F_A] + 1)
-    retry_row = retry_row.at[M.F_DST].set(me)
-    outbox, count = M.push(outbox, count, retry_row,
-                           (~found) & (row[M.F_A] < cfg.max_retries))
-    return state, bg, outbox, count
-
-
-def h_ack_insert(state, bg, me, row, outbox, count, cfg):
-    """InsertReplayResponseRecv (Lines 263-265).
-
-    No marked-while-in-flight race catch is needed here (unlike
-    h_move_ack's Line 210): an item awaiting this ack was born with its
-    left's non-null newLoc (ops.py Line 189), so a remove racing the
-    replay sees node_moving and sends its own RepDelete — whose pair-FIFO
-    channel guarantees it arrives after the replay it chases.
-    """
-    oldloc, slot = row[M.F_X1], row[M.F_X4]
-    sid, ts = row[M.F_SID], row[M.F_TS]
-    same = (state.pool.sid[oldloc] == sid) & (state.pool.ts[oldloc] == ts)
-    state = state._replace(pool=state.pool._replace(
-        newloc=_set(state.pool.newloc, oldloc, M.i2ref(row[M.F_REF1]), same)))
-    # the deferred endCt increment always lands (balances the op's stCt++)
-    state = state._replace(endct=state.endct.at[slot].add(1))
-    return state, bg, outbox, count
-
-
-def h_ack_delete(state, bg, me, row, outbox, count, cfg):
-    """RemoveReplayResponseRecv (Lines 266-267)."""
-    state = state._replace(endct=state.endct.at[row[M.F_X4]].add(1))
-    return state, bg, outbox, count
-
-
-def h_move_sh(state, bg, me, row, outbox, count, cfg):
-    """MoveSHRecv (Lines 215-225): create SH*/ST* + fresh counters."""
-    keymin, keymax = row[M.F_KEY], row[M.F_X1]
-    sh_sid, sh_ts = row[M.F_SID], row[M.F_TS]
-
-    slot = state.ctr_top
-    slot_ok = slot < state.stct.shape[0]
-    state = state._replace(ctr_top=slot + slot_ok.astype(jnp.int32))
-    state, st_idx, ok1 = _alloc_node(state)
-    state, sh_idx, ok2 = _alloc_node(state)
-    ok = slot_ok & ok1 & ok2
-
-    pool = state.pool
-    pool = pool._replace(
-        key=_set(_set(pool.key, st_idx, ST_KEY, ok), sh_idx, SH_KEY, ok),
-        keymax=_set(pool.keymax, st_idx, keymax, ok),
-        ctr=_set(_set(pool.ctr, st_idx, slot, ok), sh_idx, slot, ok),
-        # the SubHead keeps the original's <sId, ts> identity (Line 219)
-        sid=_set(_set(pool.sid, sh_idx, sh_sid, ok), st_idx, me, ok),
-        ts=_set(_set(pool.ts, sh_idx, sh_ts, ok), st_idx, state.ts_clock, ok),
-        newloc=_set(_set(pool.newloc, sh_idx, refs.null_ref(), ok),
-                    st_idx, refs.null_ref(), ok),
-    )
-    pool = pool._replace(
-        nxt=_set(_set(pool.nxt, sh_idx, refs.make_ref(me, st_idx), ok),
-                 st_idx, refs.null_ref(), ok))
-    state = state._replace(pool=pool, ts_clock=state.ts_clock + 1)
-    state = _lamport(state, sh_ts)
-
-    ack = M.make_row(M.MSG_MOVE_SH_ACK, row[M.F_SRC], me,
-                     ref1=M.ref2i(refs.make_ref(me, sh_idx)),
-                     x3=M.ref2i(refs.make_ref(me, st_idx)),
-                     key=keymin, x1=keymax, a=ok.astype(jnp.int32))
-    outbox, count = M.push(outbox, count, ack)
-    return state, bg, outbox, count
-
-
-def h_move_sh_ack(state, bg, me, row, outbox, count, cfg):
-    """Line 200: head.newLoc = remoteSH; start copying."""
-    good = (bg.phase == BG_MOVE_SH_WAIT) & (row[M.F_A] != 0)
-    sh_star = M.i2ref(row[M.F_REF1])
-    state = state._replace(pool=state.pool._replace(
-        newloc=_set(state.pool.newloc, bg.old_head, sh_star, good)))
-    bg = bg._replace(
-        phase=jnp.where(good, BG_MOVE_COPY, bg.phase),
-        sh_star=jnp.where(good, sh_star, bg.sh_star),
-        st_star=jnp.where(good, M.i2ref(row[M.F_X3]), bg.st_star),
-        cursor=jnp.where(good, bg.old_head, bg.cursor),
-        sent=jnp.where(good, 0, bg.sent),
-        acked=jnp.where(good, 0, bg.acked),
-        st_sent=jnp.where(good, 0, bg.st_sent),
-        st_acked=jnp.where(good, 0, bg.st_acked))
-    return state, bg, outbox, count
-
-
-def h_move_item(state, bg, me, row, outbox, count, cfg):
-    """MoveItemRecv (Lines 240-248): replay-insert the copied item."""
-    flags = row[M.F_A]
-    is_st = (flags & FL_ST) != 0
-    is_marked = (flags & FL_MARKED) != 0
-    anchor = refs.ref_idx(M.i2ref(row[M.F_REF1]))
-    prev_sid, prev_ts = row[M.F_X2], row[M.F_X3]
-    item_sid, item_ts = row[M.F_SID], row[M.F_TS]
-    key, oldloc = row[M.F_KEY], row[M.F_X1]
-
-    prev_idx, found = _find_by_identity(state, anchor, prev_sid, prev_ts,
-                                        cfg.max_scan)
-
-    # ---- ST: link the target SubTail into the global chain (Lines 241-247)
-    pool = state.pool
-    n = pool.key.shape[0]
-
-    def walk_to_st(c):
-        idx, steps = c
-        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
-        return jnp.where(pool.key[idx] == ST_KEY, idx, nxt), steps + 1
-
-    def not_st(c):
-        idx, steps = c
-        return (pool.key[idx] != ST_KEY) & (steps < cfg.max_scan)
-
-    st_idx, _ = jax.lax.while_loop(not_st, walk_to_st,
-                                   (prev_idx, jnp.zeros((), jnp.int32)))
-    do_st = found & is_st
-    st_next = M.i2ref(row[M.F_X4])     # source ST's next: the global chain
-    pool = pool._replace(
-        nxt=_set(pool.nxt, st_idx, st_next, do_st),
-        keymax=_set(pool.keymax, st_idx, key, do_st))
-    state = state._replace(pool=pool)
-    ack_ref = refs.make_ref(me, st_idx)
-
-    # ---- ordinary item: replay insert with compTs = prev.ts (Line 248)
-    st2, new_idx, ok = _replay_insert(
-        state, me, prev_idx, prev_ts, key, item_sid, item_ts, is_marked, cfg,
-        value=row[M.F_VAL])
-    do_item = found & (~is_st) & ok
-    state = jax.tree_util.tree_map(
-        lambda a, b: jnp.where(do_item, b, a), state, st2)
-    ack_ref = jnp.where(is_st, ack_ref, refs.make_ref(me, new_idx))
-
-    done = do_st | do_item
-    ack = M.make_row(M.MSG_MOVE_ACK, row[M.F_SRC], me,
-                     ref1=M.ref2i(ack_ref), sid=item_sid, ts=item_ts,
-                     x1=oldloc, a=flags)
-    outbox, count = M.push(outbox, count, ack, done)
-    # bounded retry: the retry count rides in the flag word's high bits
-    retries = flags >> 8
-    retry = row.at[M.F_A].set(flags + 256)
-    retry = retry.at[M.F_DST].set(me)
-    outbox, count = M.push(outbox, count, retry,
-                           (~done) & (retries < cfg.max_retries))
-    return state, bg, outbox, count
-
-
-def h_move_ack(state, bg, me, row, outbox, count, cfg):
-    """Source side of MoveItem (Lines 208-211): record newLoc, detect races."""
-    oldloc = row[M.F_X1]
-    sid, ts = row[M.F_SID], row[M.F_TS]
-    flags = row[M.F_A]
-    is_st = (flags & FL_ST) != 0
-    sent_marked = (flags & FL_MARKED) != 0
-    new_ref = M.i2ref(row[M.F_REF1])
-
-    same = (state.pool.sid[oldloc] == sid) & (state.pool.ts[oldloc] == ts)
-    state = state._replace(pool=state.pool._replace(
-        newloc=_set(state.pool.newloc, oldloc, new_ref, same)))
-
-    # Line 210: item got marked while the copy was in flight -> RepDelete
-    now_marked = refs.ref_mark(state.pool.nxt[oldloc])
-    race = same & now_marked & (~sent_marked) & (~is_st)
-    rep = M.make_row(M.MSG_REP_DELETE, refs.ref_sid(new_ref), me,
-                     ref1=M.ref2i(refs.unmarked(new_ref)),
-                     sid=sid, ts=ts, x1=oldloc, x2=0, x4=0)
-    # x2=0: no ack needed — the remove already balanced its endCt.
-    outbox, count = M.push(outbox, count, rep, race)
-
-    in_copy = bg.phase == BG_MOVE_COPY
-    # NB: the cursor is advanced only by _move_copy's contiguous-prefix walk;
-    # advancing it here (to the last ack) would skip inserts that landed
-    # between in-flight batch items.
-    bg = bg._replace(
-        acked=jnp.where(in_copy, bg.acked + 1, bg.acked),
-        st_acked=jnp.where(in_copy & is_st, 1, bg.st_acked))
-    return state, bg, outbox, count
-
-
-def h_switch_st(state, bg, me, row, outbox, count, cfg):
-    """SwitchSTRecv (Lines 272-277 + 297-302)."""
-    keymin = row[M.F_KEY]
-    new_sh = M.i2ref(row[M.F_REF1])
-    ok = _switch_next_st(state, me, keymin, new_sh)
-    state, success = ok
-    ack = M.make_row(M.MSG_SWITCH_ST_ACK, row[M.F_SRC], me,
-                     a=success.astype(jnp.int32))
-    outbox, count = M.push(outbox, count, ack)
-    return state, bg, outbox, count
-
-
-def _switch_next_st(state, me, keymin, new_sh):
-    """switchNextST (Lines 297-302) on the local shard. Returns (state, ok)."""
-    reg = state.registry
-    left = reg_ops.get_by_key(reg, keymin)
-    lidx = jnp.clip(left, 0, None)
-    owner_ok = (left >= 0) & (refs.ref_sid(reg.subhead[lidx]) == me)
-    st_idx = refs.ref_idx(reg.subtail[lidx])
-    st_idx = jnp.clip(st_idx, 0, state.pool.key.shape[0] - 1)
-    slot = state.pool.ctr[st_idx]
-    state = state._replace(
-        stct=jnp.where(owner_ok, state.stct.at[slot].add(1), state.stct))
-    live = owner_ok & (state.stct[slot] >= 0)
-    state = state._replace(pool=state.pool._replace(
-        nxt=_set(state.pool.nxt, st_idx, new_sh, live)))
-    state = state._replace(
-        endct=jnp.where(live, state.endct.at[slot].add(1), state.endct))
-    return state, live
-
-
-def h_switch_st_ack(state, bg, me, row, outbox, count, cfg):
-    good = (bg.phase == BG_SWITCH_ST_WAIT)
-    ok = row[M.F_A] != 0
-    bg = bg._replace(phase=jnp.where(
-        good, jnp.where(ok, BG_SWITCH_REG, BG_SWITCH_ST), bg.phase))
-    return state, bg, outbox, count
-
-
-def h_reg_split(state, bg, me, row, outbox, count, cfg):
-    """RegisterSublistRecv (Lines 159-163) at a replica."""
-    split_key, keymax = row[M.F_KEY], row[M.F_X1]
-    sh_ref = M.i2ref(row[M.F_REF1])
-    reg = state.registry
-    e = reg_ops.get_by_key(reg, keymax)
-    eidx = jnp.clip(e, 0, None)
-    # exact right-half already present (duplicate) — drop
-    dup = (e >= 0) & (reg.keymin[eidx] == split_key) & \
-        (reg.keymax[eidx] == keymax)
-    # parent entry present: split it
-    can = (e >= 0) & (~dup) & (reg.keymin[eidx] < split_key) & \
-        (reg.keymax[eidx] == keymax) & (reg.size < reg.keymin.shape[0])
-    new_reg = reg_ops.add_entry(
-        reg_ops.set_fields(reg, eidx, keymax=split_key),
-        split_key, keymax, sh_ref, refs.null_ref(), 0, 0)
-    state = state._replace(registry=jax.tree_util.tree_map(
-        lambda a, b: jnp.where(can, b, a), reg, new_reg))
-    retry = row.at[M.F_A].set(row[M.F_A] + 1)
-    retry = retry.at[M.F_DST].set(me)
-    outbox, count = M.push(outbox, count, retry,
-                           (~can) & (~dup) & (row[M.F_A] < cfg.max_retries))
-    return state, bg, outbox, count
-
-
-def h_switch_server(state, bg, me, row, outbox, count, cfg):
-    """SwitchServerRecv (Lines 285-287): repoint a registry entry."""
-    keymin, keymax = row[M.F_KEY], row[M.F_X1]
-    sh_ref, st_ref = M.i2ref(row[M.F_REF1]), M.i2ref(row[M.F_X3])
-    reg = state.registry
-    e = reg_ops.get_by_key(reg, keymax)
-    eidx = jnp.clip(e, 0, None)
-    exact = (e >= 0) & (reg.keymin[eidx] == keymin) & \
-        (reg.keymax[eidx] == keymax)
-    i_am_new_owner = refs.ref_sid(sh_ref) == me
-    sh_idx = jnp.clip(refs.ref_idx(sh_ref), 0, state.pool.key.shape[0] - 1)
-    new_ctr = jnp.where(i_am_new_owner, state.pool.ctr[sh_idx], 0)
-    new_reg = reg_ops.set_fields(reg, eidx, subhead=sh_ref, subtail=st_ref,
-                                 ctr=new_ctr, offset=0)
-    state = state._replace(registry=jax.tree_util.tree_map(
-        lambda a, b: jnp.where(exact, b, a), reg, new_reg))
-    retry = row.at[M.F_A].set(row[M.F_A] + 1)
-    retry = retry.at[M.F_DST].set(me)
-    outbox, count = M.push(outbox, count, retry,
-                           (~exact) & (row[M.F_A] < cfg.max_retries))
-    return state, bg, outbox, count
-
-
-def h_reg_merged(state, bg, me, row, outbox, count, cfg):
-    """RegisterMergedSublistRecv (Lines 360-365) at a replica."""
-    key_mid = row[M.F_KEY]
-    reg = state.registry
-    right = _entry_by_keymax(reg, row[M.F_X1])
-    ridx = jnp.clip(right, 0, None)
-    ok = (right >= 0) & (reg.keymin[ridx] == key_mid)
-    left = _cover(reg, key_mid)
-    lidx = jnp.clip(left, 0, None)
-    ok = ok & (left >= 0) & (reg.keymax[lidx] == key_mid)
-    new_reg = reg_ops.remove_entry(
-        reg_ops.set_fields(reg, lidx, keymax=reg.keymax[ridx]), ridx)
-    state = state._replace(registry=jax.tree_util.tree_map(
-        lambda a, b: jnp.where(ok, b, a), reg, new_reg))
-    # already merged here (idempotent) — drop; otherwise out-of-order with a
-    # pending REG_SPLIT: retry next round
-    merged = (right < 0) & (_cover(reg, key_mid) >= 0)
-    retry = row.at[M.F_A].set(row[M.F_A] + 1)
-    retry = retry.at[M.F_DST].set(me)
-    outbox, count = M.push(outbox, count, retry,
-                           (~ok) & (~merged) & (row[M.F_A] < cfg.max_retries))
-    return state, bg, outbox, count
-
-
-# ================================================================== bg step
-
-def _split_exec(state, bg, me, outbox, count, cfg):
-    """Split steps 1-3 (§5.3): insert the ST-SH block, repoint counters."""
-    reg = state.registry
-    e = _entry_by_keymax(reg, bg.entry_key)
-    eidx = jnp.clip(e, 0, None)
-    sitem = jnp.clip(bg.sitem, 0, state.pool.key.shape[0] - 1)
-    sitem_key = state.pool.key[sitem]
-    valid = (e >= 0) & (refs.ref_sid(reg.subhead[eidx]) == me) & \
-        (~refs.ref_mark(state.pool.nxt[sitem])) & \
-        (state.pool.ctr[sitem] == reg.ctr[eidx]) & \
-        (sitem_key > reg.keymin[eidx]) & (sitem_key < reg.keymax[eidx]) & \
-        (state.pool.key[sitem] != SH_KEY) & (state.pool.key[sitem] != ST_KEY)
-
-    new_slot = state.ctr_top
-    slot_ok = new_slot < state.stct.shape[0]
-    old_slot = reg.ctr[eidx]
-
-    state2 = state._replace(ctr_top=new_slot + 1)
-    state2, st_idx, ok1 = _alloc_node(state2)
-    state2, sh_idx, ok2 = _alloc_node(state2)
-    ok = valid & slot_ok & ok1 & ok2
-
-    pool = state2.pool
-    old_next = pool.nxt[sitem]          # unmarked by ``valid``
-    ts1 = state2.ts_clock
-    pool = pool._replace(
-        key=_set(_set(pool.key, st_idx, ST_KEY, ok), sh_idx, SH_KEY, ok),
-        keymax=_set(pool.keymax, st_idx, sitem_key, ok),
-        ctr=_set(_set(pool.ctr, st_idx, old_slot, ok), sh_idx, new_slot, ok),
-        sid=_set(_set(pool.sid, st_idx, me, ok), sh_idx, me, ok),
-        ts=_set(_set(pool.ts, st_idx, ts1, ok), sh_idx, ts1 + 1, ok),
-        newloc=_set(_set(pool.newloc, st_idx, refs.null_ref(), ok),
-                    sh_idx, refs.null_ref(), ok),
-    )
-    # ST -> SH -> old next; then CAS sItem.next := ST (Lines 131-139)
-    pool = pool._replace(nxt=_set(pool.nxt, sh_idx, old_next, ok))
-    pool = pool._replace(
-        nxt=_set(pool.nxt, st_idx, refs.make_ref(me, sh_idx), ok))
-    pool = pool._replace(
-        nxt=_set(pool.nxt, sitem, refs.make_ref(me, st_idx), ok))
-    state2 = state2._replace(pool=pool, ts_clock=ts1 + 2)
-
-    # repoint counter pointers of the right half (Lines 140-146),
-    # old-subtail included
-    n = pool.key.shape[0]
-
-    def cond2(c):
-        ctr_col, idx, steps, done = c
-        return (~done) & (steps < cfg.max_scan)
-
-    def body2(c):
-        ctr_col, idx, steps, _ = c
-        ctr_col = ctr_col.at[idx].set(new_slot)
-        at_st = pool.key[idx] == ST_KEY
-        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
-        return ctr_col, jnp.where(at_st, idx, nxt), steps + 1, at_st
-
-    start = jnp.clip(refs.ref_idx(refs.unmarked(old_next)), 0, n - 1)
-    ctr_col, _, _, _ = jax.lax.while_loop(
-        cond2, body2,
-        (state2.pool.ctr, start, jnp.zeros((), jnp.int32),
-         jnp.asarray(False)))
-    state2 = state2._replace(pool=state2.pool._replace(
-        ctr=jnp.where(ok, ctr_col, state2.pool.ctr)))
-
-    state = jax.tree_util.tree_map(
-        lambda a, b: jnp.where(ok, b, a), state, state2)
-    bg = bg._replace(
-        phase=jnp.where(ok, BG_SPLIT_WAIT, BG_IDLE),
-        new_slot=jnp.where(ok, new_slot, bg.new_slot),
-        old_slot=jnp.where(ok, old_slot, bg.old_slot),
-        split_key=jnp.where(ok, sitem_key, bg.split_key),
-        sh_new=jnp.where(ok, sh_idx, bg.sh_new),
-        st_new=jnp.where(ok, st_idx, bg.st_new),
-        old_keymax=jnp.where(ok, reg.keymax[eidx], bg.old_keymax))
-    return state, bg, outbox, count
-
-
-def _split_wait(state, bg, me, outbox, count, cfg):
-    """Split step 4 (Lines 147-157): offset stabilization + registry COW."""
-    reg = state.registry
-    e = _entry_by_keymax(reg, bg.entry_key)
-    eidx = jnp.clip(e, 0, None)
-    a1 = state.stct[bg.new_slot] - state.endct[bg.new_slot]
-    a2 = state.stct[bg.old_slot] - state.endct[bg.old_slot]
-    stable = (e >= 0) & (a1 + a2 == reg.offset[eidx]) & \
-        (reg.size < reg.keymin.shape[0])
-
-    old_subtail = reg.subtail[eidx]
-    sh_ref = refs.make_ref(me, bg.sh_new)
-    st_ref = refs.make_ref(me, bg.st_new)
-    new_reg = reg_ops.add_entry(
-        reg_ops.set_fields(reg, eidx, keymax=bg.split_key, subtail=st_ref,
-                           offset=a2),
-        bg.split_key, bg.old_keymax, sh_ref, old_subtail, bg.new_slot, a1)
-    state = state._replace(registry=jax.tree_util.tree_map(
-        lambda a, b: jnp.where(stable, b, a), reg, new_reg))
-
-    row = M.make_row(M.MSG_REG_SPLIT, 0, me, key=bg.split_key,
-                     x1=bg.old_keymax, ref1=M.ref2i(sh_ref))
-    def send(i, oc):
-        ob, ct = oc
-        r = row.at[M.F_DST].set(i)
-        return M.push(ob, ct, r, stable & (i != me))
-
-    outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
-                                      (outbox, count))
-    bg = bg._replace(phase=jnp.where(stable, BG_IDLE, bg.phase))
-    return state, bg, outbox, count
-
-
-def _move_sh(state, bg, me, outbox, count, cfg):
-    reg = state.registry
-    e = _entry_by_keymax(reg, bg.entry_key)
-    eidx = jnp.clip(e, 0, None)
-    ok = (e >= 0) & (refs.ref_sid(reg.subhead[eidx]) == me) & \
-        (bg.target != me)
-    head_idx = refs.ref_idx(reg.subhead[eidx])
-    row = M.make_row(M.MSG_MOVE_SH, bg.target, me,
-                     key=reg.keymin[eidx], x1=reg.keymax[eidx],
-                     sid=state.pool.sid[head_idx],
-                     ts=state.pool.ts[head_idx])
-    outbox, count = M.push(outbox, count, row, ok)
-    bg = bg._replace(
-        phase=jnp.where(ok, BG_MOVE_SH_WAIT, BG_IDLE),
-        old_head=jnp.where(ok, head_idx, bg.old_head))
-    return state, bg, outbox, count
-
-
-def _move_copy(state, bg, me, outbox, count, cfg):
-    """Send the next batch of MoveItems once the previous batch is acked.
-
-    Concurrency contract (mirrors the paper's synchronous per-item RPC,
-    Lines 206-214, batched): inserts racing an in-flight MoveItem land with
-    newLoc == null (their left's newLoc is not set until the ack), so the
-    cursor advances only over the *contiguous prefix* of copied items and
-    every batch re-walks from there — stragglers are picked up by the next
-    walk. The SubTail is copied only when nothing before it remains, after
-    which every concurrent update replicates (left.newLoc is set) and no
-    item can be missed.
-    """
-    ready = (bg.sent == bg.acked) & (bg.st_sent == 0)
-    pool = state.pool
-    n = pool.key.shape[0]
-
-    # advance cursor over items that already have a newLoc (copied/replicated)
-    def adv_cond(c):
-        cur, steps = c
-        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[cur])), 0, n - 1)
-        ok = (~refs.is_null(pool.newloc[nxt])) & (pool.key[nxt] != ST_KEY)
-        return ready & ok & (steps < cfg.max_scan)
-
-    def adv_body(c):
-        cur, steps = c
-        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[cur])), 0, n - 1)
-        return nxt, steps + 1
-
-    cursor, _ = jax.lax.while_loop(adv_cond, adv_body,
-                                   (bg.cursor, jnp.zeros((), jnp.int32)))
-    anchor = refs.unmarked(pool.newloc[cursor])
-
-    def body(k, c):
-        outbox, count, prev, sent, st_sent, stop = c
-        curr_ref = pool.nxt[prev]
-        curr = jnp.clip(refs.ref_idx(refs.unmarked(curr_ref)), 0, n - 1)
-        # Line 207: skip items already moved / being replicated
-        has_newloc = ~refs.is_null(pool.newloc[curr])
-        is_st = pool.key[curr] == ST_KEY
-        can = ready & (~stop)
-        # ST only when every prior item is copied (nothing sent this walk,
-        # nothing in flight) — then no un-replicated straggler can exist.
-        send_st = can & is_st & (sent == 0)
-        send = can & (~has_newloc) & ((~is_st) | send_st)
-        flags = (refs.ref_mark(pool.nxt[curr]).astype(jnp.int32) * FL_MARKED
-                 + is_st.astype(jnp.int32) * FL_ST)
-        key_field = jnp.where(is_st, pool.keymax[curr], pool.key[curr])
-        row = M.make_row(
-            M.MSG_MOVE_ITEM, bg.target, me, a=flags, key=key_field,
-            ref1=M.ref2i(anchor), sid=pool.sid[curr], ts=pool.ts[curr],
-            x1=curr, x2=pool.sid[prev], x3=pool.ts[prev],
-            x4=M.ref2i(refs.unmarked(pool.nxt[curr])),
-            val=pool.keymax[curr])
-        outbox, count = M.push(outbox, count, row, send)
-        sent = sent + send.astype(jnp.int32)
-        st_sent = st_sent | (send & is_st).astype(jnp.int32)
-        stop = stop | is_st
-        prev = jnp.where(can, curr, prev)
-        return outbox, count, prev, sent, st_sent, stop
-
-    outbox, count, _, nsent, st_sent, _ = jax.lax.fori_loop(
-        0, cfg.move_batch, body,
-        (outbox, count, cursor, jnp.zeros((), jnp.int32),
-         jnp.zeros((), jnp.int32), jnp.asarray(False)))
-    bg = bg._replace(
-        cursor=jnp.where(ready, cursor, bg.cursor),
-        sent=jnp.where(ready, bg.sent + nsent, bg.sent),
-        st_sent=jnp.where(ready, st_sent, bg.st_sent),
-        phase=jnp.where((bg.st_acked != 0) & (bg.sent == bg.acked),
-                        BG_MOVE_STABLE, bg.phase))
-    return state, bg, outbox, count
-
-
-def _move_stable(state, bg, me, outbox, count, cfg):
-    """Line 202-204: CAS stCt := -inf once both copies are provably equal."""
-    reg = state.registry
-    e = _entry_by_keymax(reg, bg.entry_key)
-    eidx = jnp.clip(e, 0, None)
-    slot = reg.ctr[eidx]
-    quiet = (e >= 0) & \
-        (state.stct[slot] == state.endct[slot] + reg.offset[eidx])
-    state = state._replace(
-        stct=jnp.where(quiet, state.stct.at[slot].set(NEG_INF_CT),
-                       state.stct))
-    bg = bg._replace(phase=jnp.where(quiet, BG_SWITCH_ST, bg.phase))
-    return state, bg, outbox, count
-
-
-def _switch_st_phase(state, bg, me, outbox, count, cfg):
-    """Alg. 5 Lines 269-280: repoint the previous sublist's SubTail."""
-    reg = state.registry
-    e = _entry_by_keymax(reg, bg.entry_key)
-    eidx = jnp.clip(e, 0, None)
-    keymin = reg.keymin[eidx]
-    no_left = keymin <= SH_KEY
-    left = _cover(reg, keymin)
-    lidx = jnp.clip(left, 0, None)
-    left_owner = refs.ref_sid(reg.subhead[lidx])
-    local = (~no_left) & (left >= 0) & (left_owner == me)
-    remote = (~no_left) & (left >= 0) & (left_owner != me)
-
-    st2, ok = _switch_next_st(state, me, keymin, bg.sh_star)
-    state = jax.tree_util.tree_map(
-        lambda a, b: jnp.where(local, b, a), state, st2)
-
-    row = M.make_row(M.MSG_SWITCH_ST, left_owner, me, key=keymin,
-                     ref1=M.ref2i(bg.sh_star))
-    outbox, count = M.push(outbox, count, row, remote)
-
-    next_phase = jnp.where(
-        no_left | (local & ok), BG_SWITCH_REG,
-        jnp.where(remote, BG_SWITCH_ST_WAIT, bg.phase))
-    bg = bg._replace(phase=next_phase)
-    return state, bg, outbox, count
-
-
-def _switch_reg(state, bg, me, outbox, count, cfg):
-    """Alg. 5 Lines 281-284: update own registry, broadcast SwitchServer."""
-    reg = state.registry
-    e = _entry_by_keymax(reg, bg.entry_key)
-    eidx = jnp.clip(e, 0, None)
-    keymin = reg.keymin[eidx]
-    new_reg = reg_ops.set_fields(reg, eidx, subhead=bg.sh_star,
-                                 subtail=bg.st_star, ctr=0, offset=0)
-    state = state._replace(registry=jax.tree_util.tree_map(
-        lambda a, b: jnp.where(e >= 0, b, a), reg, new_reg))
-
-    row = M.make_row(M.MSG_SWITCH_SERVER, 0, me, key=keymin,
-                     x1=bg.entry_key, ref1=M.ref2i(bg.sh_star),
-                     x3=M.ref2i(bg.st_star))
-
-    def send(i, oc):
-        ob, ct = oc
-        return M.push(ob, ct, row.at[M.F_DST].set(i), (e >= 0) & (i != me))
-
-    outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
-                                      (outbox, count))
-    bg = bg._replace(phase=BG_QUAR, quar_round=bg.round)
-    return state, bg, outbox, count
-
-
-def _quarantine(state, bg, me, outbox, count, cfg):
-    """Free the stale source chain (interior only — the old SubHead keeps
-    forwarding via newLoc; the epoch-based analogue of hazard pointers)."""
-    due = bg.round - bg.quar_round >= cfg.quarantine_rounds
-    pool = state.pool
-    n = pool.key.shape[0]
-
-    def cond(c):
-        flist, ftop, idx, steps, done = c
-        return due & (~done) & (steps < cfg.max_scan)
-
-    def body(c):
-        flist, ftop, idx, steps, _ = c
-        at_st = pool.key[idx] == ST_KEY
-        pos = jnp.clip(ftop, 0, flist.shape[0] - 1)
-        flist = flist.at[pos].set(idx)
-        ftop = ftop + 1
-        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
-        return flist, ftop, nxt, steps + 1, at_st
-
-    start = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[bg.old_head])),
-                     0, n - 1)
-    flist, ftop, _, _, _ = jax.lax.while_loop(
-        cond, body,
-        (state.free_list, state.free_top, start,
-         jnp.zeros((), jnp.int32), jnp.asarray(False)))
-    state = state._replace(
-        free_list=jnp.where(due, flist, state.free_list),
-        free_top=jnp.where(due, ftop, state.free_top))
-    bg = bg._replace(phase=jnp.where(due, BG_IDLE, bg.phase))
-    return state, bg, outbox, count
-
-
-def _merge_exec(state, bg, me, outbox, count, cfg):
-    """Merge (Appendix B, Alg. 7): fold the right sublist into the left."""
-    reg = state.registry
-    le = _entry_by_keymax(reg, bg.entry_key)      # left entry
-    re_ = _entry_by_keymax(reg, bg.merge_key)     # right entry
-    lidx, ridx = jnp.clip(le, 0, None), jnp.clip(re_, 0, None)
-    pool = state.pool
-    n = pool.key.shape[0]
-    lslot, rslot = reg.ctr[lidx], reg.ctr[ridx]
-    valid = (le >= 0) & (re_ >= 0) & \
-        (reg.keymax[lidx] == reg.keymin[ridx]) & \
-        (refs.ref_sid(reg.subhead[lidx]) == me) & \
-        (refs.ref_sid(reg.subhead[ridx]) == me) & \
-        (state.stct[lslot] >= 0) & (state.stct[rslot] >= 0)
-
-    key_mid = reg.keymax[lidx]
-    mid_st = refs.ref_idx(reg.subtail[lidx])      # the block to neutralize
-    right_sh = refs.ref_idx(reg.subhead[ridx])
-    right_st_ref = reg.subtail[ridx]
-    old_off_sum = reg.offset[lidx] + reg.offset[ridx]
-
-    # Line 335: neutralize the mid SubTail so traversals cross it
-    pool = pool._replace(
-        keymax=_set(pool.keymax, mid_st, reg.keymin[lidx], valid))
-
-    # Lines 341-344: repoint the right half's counter slots to the left's
-    def cond(c):
-        ctr_col, idx, steps, done = c
-        return (~done) & (steps < cfg.max_scan)
-
-    def body(c):
-        ctr_col, idx, steps, _ = c
-        ctr_col = ctr_col.at[idx].set(lslot)
-        at_st = pool.key[idx] == ST_KEY
-        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
-        return ctr_col, jnp.where(at_st, idx, nxt), steps + 1, at_st
-
-    ctr_col, _, _, _ = jax.lax.while_loop(
-        cond, body, (pool.ctr, jnp.clip(right_sh, 0, n - 1),
-                     jnp.zeros((), jnp.int32), jnp.asarray(False)))
-    pool = pool._replace(ctr=jnp.where(valid, ctr_col, pool.ctr))
-
-    # Lines 346-352 (RDCSS): link leftLast directly to rightFirst. The mid
-    # ST-SH block stays quarantined as a forwarder for stale delegations
-    # (its nxt chain still reaches the merged items).
-    def find_last(c):
-        idx, steps = c
-        nxt_ref = refs.unmarked(pool.nxt[idx])
-        nxt = jnp.clip(refs.ref_idx(nxt_ref), 0, n - 1)
-        at_last = nxt == mid_st
-        return jnp.where(at_last, idx, nxt), steps + 1
-
-    def not_last(c):
-        idx, steps = c
-        nxt = refs.ref_idx(refs.unmarked(pool.nxt[idx]))
-        return (nxt != mid_st) & (steps < cfg.max_scan)
-
-    left_sh = jnp.clip(refs.ref_idx(reg.subhead[lidx]), 0, n - 1)
-    left_last, _ = jax.lax.while_loop(
-        not_last, find_last, (left_sh, jnp.zeros((), jnp.int32)))
-    right_first = refs.unmarked(pool.nxt[jnp.clip(right_sh, 0, n - 1)])
-    ll_mark = pool.nxt[left_last] & jnp.uint32(refs.MARK_BIT)
-    pool = pool._replace(
-        nxt=_set(pool.nxt, left_last, right_first | ll_mark, valid))
-    state = state._replace(pool=pool)
-
-    # Lines 336-338: extend the left entry, drop the right entry (local COW)
-    new_reg = reg_ops.remove_entry(
-        reg_ops.set_fields(reg, lidx, keymax=reg.keymax[ridx],
-                           subtail=right_st_ref),
-        ridx)
-    state = state._replace(registry=jax.tree_util.tree_map(
-        lambda a, b: jnp.where(valid, b, a), reg, new_reg))
-
-    bg = bg._replace(
-        phase=jnp.where(valid, BG_MERGE_WAIT, BG_IDLE),
-        entry_key=jnp.where(valid, bg.merge_key, bg.entry_key),
-        split_key=jnp.where(valid, key_mid, bg.split_key),
-        old_slot=jnp.where(valid, lslot, bg.old_slot),
-        new_slot=jnp.where(valid, rslot, bg.new_slot),
-        old_keymax=jnp.where(valid, old_off_sum, bg.old_keymax))
-    return state, bg, outbox, count
-
-
-def _merge_wait(state, bg, me, outbox, count, cfg):
-    """Alg. 7 Lines 353-358: offset stabilization + broadcast."""
-    a1 = state.stct[bg.old_slot] - state.endct[bg.old_slot]
-    a2 = state.stct[bg.new_slot] - state.endct[bg.new_slot]
-    stable = (a1 + a2) == bg.old_keymax
-    reg = state.registry
-    e = _entry_by_keymax(reg, bg.entry_key)
-    eidx = jnp.clip(e, 0, None)
-    new_reg = reg_ops.set_fields(reg, eidx, offset=a1)
-    state = state._replace(registry=jax.tree_util.tree_map(
-        lambda a, b: jnp.where(stable & (e >= 0), b, a), reg, new_reg))
-
-    row = M.make_row(M.MSG_REG_MERGED, 0, me, key=bg.split_key,
-                     x1=bg.entry_key)
-
-    def send(i, oc):
-        ob, ct = oc
-        return M.push(ob, ct, row.at[M.F_DST].set(i), stable & (i != me))
-
-    outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
-                                      (outbox, count))
-    bg = bg._replace(phase=jnp.where(stable, BG_IDLE, bg.phase))
-    return state, bg, outbox, count
-
-
-_PHASES = {
-    BG_SPLIT_EXEC: _split_exec,
-    BG_SPLIT_WAIT: _split_wait,
-    BG_MOVE_SH: _move_sh,
-    BG_MOVE_COPY: _move_copy,
-    BG_MOVE_STABLE: _move_stable,
-    BG_SWITCH_ST: _switch_st_phase,
-    BG_SWITCH_REG: _switch_reg,
-    BG_QUAR: _quarantine,
-    BG_MERGE_EXEC: _merge_exec,
-    BG_MERGE_WAIT: _merge_wait,
-}
-
-
-def bg_step(state: ShardState, bg: BgState, me, outbox, count,
-            cfg: DiLiConfig):
-    """Advance the background op by one phase this round."""
-    def mk(fn):
-        def br(args):
-            st, b, ob, ct = args
-            return fn(st, b, me, ob, ct, cfg)
-        return br
-
-    def noop(args):
-        return args
-
-    branches = []
-    for ph in range(13):
-        branches.append(mk(_PHASES[ph]) if ph in _PHASES else noop)
-    state, bg, outbox, count = jax.lax.switch(
-        jnp.clip(bg.phase, 0, 12), branches, (state, bg, outbox, count))
-    bg = bg._replace(round=bg.round + 1)
-    return state, bg, outbox, count
-
-
-# ============================================================ host commands
-
-def queue_split(bg: BgState, entry_key, sitem_idx) -> BgState:
-    """Host command: split ``entry`` (identified by keymax) at pool idx."""
-    idle = bg.phase == BG_IDLE
-    return bg._replace(
-        phase=jnp.where(idle, BG_SPLIT_EXEC, bg.phase),
-        entry_key=jnp.where(idle, jnp.asarray(entry_key, jnp.int32),
-                            bg.entry_key),
-        sitem=jnp.where(idle, jnp.asarray(sitem_idx, jnp.int32), bg.sitem))
-
-
-def queue_move(bg: BgState, entry_key, target) -> BgState:
-    """Host command: move ``entry`` (identified by keymax) to ``target``."""
-    idle = bg.phase == BG_IDLE
-    return bg._replace(
-        phase=jnp.where(idle, BG_MOVE_SH, bg.phase),
-        entry_key=jnp.where(idle, jnp.asarray(entry_key, jnp.int32),
-                            bg.entry_key),
-        target=jnp.where(idle, jnp.asarray(target, jnp.int32), bg.target))
-
-
-def queue_merge(bg: BgState, left_keymax, right_keymax) -> BgState:
-    """Host command: merge two adjacent sublists owned by this shard."""
-    idle = bg.phase == BG_IDLE
-    return bg._replace(
-        phase=jnp.where(idle, BG_MERGE_EXEC, bg.phase),
-        entry_key=jnp.where(idle, jnp.asarray(left_keymax, jnp.int32),
-                            bg.entry_key),
-        merge_key=jnp.where(idle, jnp.asarray(right_keymax, jnp.int32),
-                            bg.merge_key))
+from .bg import (  # noqa: F401
+    BG_IDLE, BG_MERGE_EXEC, BG_MERGE_WAIT, BG_MOVE_COPY, BG_MOVE_SH,
+    BG_MOVE_SH_WAIT, BG_MOVE_STABLE, BG_NUM_PHASES, BG_QUAR, BG_SPLIT_EXEC,
+    BG_SPLIT_WAIT, BG_SWITCH_REG, BG_SWITCH_ST, BG_SWITCH_ST_WAIT,
+    FL_MARKED, FL_ST, BgState, BgTable, ReplayOut, active_moves, any_active,
+    bg_step, claimed_keys, free_slots, h_ack_delete, h_ack_insert, h_move_ack,
+    h_move_item, h_move_sh, h_move_sh_ack, h_reg_merged, h_reg_split,
+    h_rep_delete, h_rep_insert, h_switch_server, h_switch_st,
+    h_switch_st_ack, init_bg, init_bg_table, queue_merge, queue_move,
+    queue_split, replay_prepass, set_slot, slot_phases, slot_view)
+from .bg.util import (  # noqa: F401
+    find_by_identity as _find_by_identity,
+    replay_insert as _replay_insert)

@@ -1,7 +1,6 @@
 """The naive load balancer of §7.1, as a host-side policy over the cluster.
 
-One decision per shard per invocation (the paper runs one background thread
-per machine). Policy, verbatim from the paper:
+Policy, verbatim from the paper:
 
   * Split any owned sublist larger than ``split_threshold`` (125) roughly in
     the middle — this bounds the linear-traversal length of the hybrid search.
@@ -10,9 +9,18 @@ per machine). Policy, verbatim from the paper:
   * (Extension, Appendix B) Merge adjacent tiny sublists on the same shard
     when both fall below ``merge_threshold`` — keeps the registry compact.
 
-The Split/Move primitives are the *interface*; this policy is deliberately
-simple and replaceable (the paper calls for workload-specific balancers).
-``Balancer`` is one ``BalancePolicy`` — the client driver loop
+With the slotted background engine (DESIGN.md §10) a pass is no longer
+one-decision-per-shard: the gate is per registry *entry* (an entry already
+claimed by an in-flight Split/Move/Merge is skipped; every other entry is
+fair game), and a shard accepts up to ``bg_slots`` commands per pass. The
+load model is kept honest within a pass — each issued Move immediately
+transfers the sublist's size from source to target in the working
+``loads`` snapshot, so one overloaded pass cannot dogpile every donor
+onto the same least-loaded shard.
+
+The Split/Move/Merge primitives are the *interface*; this policy is
+deliberately simple and replaceable (the paper calls for workload-specific
+balancers). ``Balancer`` is one ``BalancePolicy`` — the client driver loop
 (``repro.api.DiLiClient``) runs any policy with a ``step() -> dict``
 method at a configurable cadence, over any object exposing the balance
 surface (``Cluster`` or an ``api.Backend``: ``n``/``cfg``/``bgs``/
@@ -22,7 +30,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Protocol
 
-from . import background as B
+from . import bg as B
 
 
 class BalancePolicy(Protocol):
@@ -61,41 +69,104 @@ class Balancer:
         total = sum(loads.values())
         mean = total / max(cl.n, 1)
 
+        # per-shard slot budget + per-entry claims of in-flight ops; both
+        # are maintained locally as commands are issued this pass. Snapshot
+        # ``cl.bgs`` once: on ShardMapBackend every access pulls the whole
+        # stacked table device-to-host
+        bgs = cl.bgs
+        free = {s: B.free_slots(bgs[s]) for s in range(cl.n)}
+        claimed = {s: B.claimed_keys(bgs[s]) for s in range(cl.n)}
+
+        # account load already *en route*: an in-flight Move's sublist
+        # still counts against its source until the registry transfer
+        # lands, so without this discount every pass during the (multi-
+        # round) copy re-diagnoses the same overload and dogpiles more
+        # moves onto it
         for s in range(cl.n):
-            if int(cl.bgs[s].phase) != B.BG_IDLE:
-                continue
+            for key, tgt in B.active_moves(bgs[s]):
+                e = next((x for x in owned[s] if x["keymax"] == key), None)
+                if e is not None and 0 <= tgt < cl.n and tgt != s:
+                    loads[s] -= e["size"]
+                    loads[tgt] += e["size"]
+
+        # registry budget for *new* splits this pass. The registry is
+        # global (every split adds an entry on every replica), and a split
+        # whose stabilization finds it full waits in BG_SPLIT_WAIT
+        # forever — so the budget must discount (a) splits issued earlier
+        # in this pass, and (b) splits still in flight from previous
+        # passes on any shard, not just re-read a registry.size those
+        # entries haven't landed in yet.
+        inflight_splits = sum(
+            int(((ph == B.BG_SPLIT_EXEC) | (ph == B.BG_SPLIT_WAIT)).sum())
+            for ph in (B.slot_phases(bgs[s]) for s in range(cl.n)))
+        reg_used = max(int(cl.states[s].registry.size) for s in range(cl.n))
+        reg_room = (cl.cfg.max_sublists - reg_used
+                    - self.registry_headroom - inflight_splits)
+
+        for s in range(cl.n):
             entries = owned[s]
-            # 1) split oversized sublists (registry capacity permitting)
-            reg_room = (cl.cfg.max_sublists - int(cl.states[s].registry.size)
-                        > self.registry_headroom)
-            big = [e for e in entries if e["size"] > self.split_threshold]
-            if big and reg_room:
-                e = max(big, key=lambda x: x["size"])
+
+            def unclaimed(e):
+                return e["keymax"] not in claimed[s] and not e["switched"]
+
+            # 1) split oversized sublists (registry budget permitting)
+            big = sorted((e for e in entries
+                          if e["size"] > self.split_threshold
+                          and unclaimed(e)),
+                         key=lambda x: -x["size"])
+            for e in big:
+                if free[s] <= 0 or reg_room <= 0:
+                    break
                 mid = cl.middle_item(s, e["head_idx"])
-                if mid is not None:
-                    cl.split(s, e["keymax"], mid)
-                    issued["split"] += 1
+                if mid is None:
                     continue
-            # 2) move a sublist off an overloaded shard
-            if cl.n > 1 and loads[s] > self.move_headroom * mean and entries:
+                if cl.split(s, e["keymax"], mid):
+                    issued["split"] += 1
+                    free[s] -= 1
+                    reg_room -= 1
+                    claimed[s].add(e["keymax"])
+
+            # 2) move sublists off an overloaded shard; the working
+            # ``loads`` snapshot is adjusted per issued move so parallel
+            # donors (and repeated moves within this pass) spread over
+            # *currently* least-loaded targets instead of dogpiling the
+            # pass-start minimum
+            while (cl.n > 1 and free[s] > 0
+                   and loads[s] > self.move_headroom * mean):
+                cands = [e for e in entries if unclaimed(e)]
+                if not cands:
+                    break
                 tgt = min(range(cl.n), key=lambda d: loads[d])
-                if tgt != s and loads[s] - loads[tgt] > 1:
-                    # move the sublist that best evens the load — but only
-                    # if it strictly improves the pairwise imbalance (else a
-                    # lone big sublist ping-pongs between shards forever)
-                    gap = (loads[s] - loads[tgt]) / 2
-                    e = min(entries, key=lambda x: abs(x["size"] - gap))
-                    if loads[tgt] + e["size"] < loads[s]:
-                        cl.move(s, e["keymax"], tgt)
-                        issued["move"] += 1
-                        continue
+                if tgt == s or loads[s] - loads[tgt] <= 1:
+                    break
+                # move the sublist that best evens the load — but only
+                # if it strictly improves the pairwise imbalance (else a
+                # lone big sublist ping-pongs between shards forever)
+                gap = (loads[s] - loads[tgt]) / 2
+                e = min(cands, key=lambda x: abs(x["size"] - gap))
+                if loads[tgt] + e["size"] >= loads[s]:
+                    break
+                if not cl.move(s, e["keymax"], tgt):
+                    break
+                issued["move"] += 1
+                free[s] -= 1
+                claimed[s].add(e["keymax"])
+                loads[s] -= e["size"]
+                loads[tgt] += e["size"]
+                entries = [x for x in entries if x is not e]
+
             # 3) merge adjacent runts on the same shard
             if self.merge_threshold > 0:
                 entries_sorted = sorted(entries, key=lambda x: x["keymin"])
                 for a, b in zip(entries_sorted, entries_sorted[1:]):
-                    if (a["keymax"] == b["keymin"]
-                            and a["size"] + b["size"] < self.merge_threshold):
-                        cl.merge(s, a["keymax"], b["keymax"])
-                        issued["merge"] += 1
+                    if free[s] <= 0:
                         break
+                    if (a["keymax"] == b["keymin"]
+                            and a["size"] + b["size"] < self.merge_threshold
+                            and unclaimed(a) and unclaimed(b)):
+                        if cl.merge(s, a["keymax"], b["keymax"]):
+                            issued["merge"] += 1
+                            free[s] -= 1
+                            claimed[s].add(a["keymax"])
+                            claimed[s].add(b["keymax"])
         return issued

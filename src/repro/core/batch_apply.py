@@ -98,6 +98,27 @@ def _count_eq(sorted_keys, query):
             - jnp.searchsorted(sorted_keys, query, side="left"))
 
 
+def batched_alloc(state: ShardState, want):
+    """Vectorized node allocation over a boolean lane mask: free-list pops
+    first, then bump — the exact policy of ``ops._alloc_node``. Shared by
+    the mutation fast-path below and the batched move replay
+    (``bg.replay``). Returns ``(new_idx, rank, n_ins, free_top2,
+    alloc_top2)``; ``new_idx`` is only meaningful where ``want``.
+    """
+    cap = state.pool.key.shape[0]
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    n_ins = jnp.sum(want.astype(jnp.int32))
+    from_free = rank < state.free_top
+    free_pos = jnp.clip(state.free_top - 1 - rank, 0,
+                        state.free_list.shape[0] - 1)
+    new_idx = jnp.where(from_free, state.free_list[free_pos],
+                        state.alloc_top + (rank - state.free_top))
+    new_idx = jnp.clip(new_idx, 0, cap - 1)
+    free_top2 = state.free_top - jnp.minimum(n_ins, state.free_top)
+    alloc_top2 = state.alloc_top + jnp.maximum(n_ins - state.free_top, 0)
+    return new_idx, rank, n_ins, free_top2, alloc_top2
+
+
 def _seg_last_nonzero(start, code):
     """Segmented inclusive scan of 'last nonzero code so far'."""
     def comb(a, b):
@@ -292,19 +313,10 @@ def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
         does_mark = does_mark & alloc_ok
         does_ins = does_ins & alloc_ok
 
-        # ---- batched allocation: free-list pops first, then bump — the
-        # exact policy of ops._alloc_node, vectorized over net inserts.
-        rank = jnp.cumsum(does_ins.astype(jnp.int32)) - 1
-        n_ins = jnp.sum(does_ins.astype(jnp.int32))
-        from_free = rank < state.free_top
-        free_pos = jnp.clip(state.free_top - 1 - rank, 0,
-                            state.free_list.shape[0] - 1)
-        new_idx = jnp.where(from_free, state.free_list[free_pos],
-                            state.alloc_top + (rank - state.free_top))
-        new_idx = jnp.clip(new_idx, 0, cap - 1)
-        free_top2 = state.free_top - jnp.minimum(n_ins, state.free_top)
-        alloc_top2 = state.alloc_top + jnp.maximum(n_ins - state.free_top,
-                                                   0)
+        # ---- batched allocation (shared helper): free-list pops first,
+        # then bump — the exact policy of ops._alloc_node over net inserts.
+        new_idx, rank, n_ins, free_top2, alloc_top2 = batched_alloc(
+            state, does_ins)
 
         # ---- block Lamport bump (DESIGN.md §4b/§8): one clock advance
         # covers the batch; each materialized node gets a unique,

@@ -1,0 +1,134 @@
+"""The slotted background engine: per-round slot stepping + host commands.
+
+``bg_step`` advances every slot of a shard's ``BgTable`` by one phase per
+round (a ``lax.scan`` over the slot axis — one switch compilation serves
+all slots), so one shard can split one sublist while moving a second and
+merging two others in the same rounds. Slots share the shard's state,
+allocator and outbox; they are serialized *within* the round (slot j+1
+sees slot j's state writes), which is exactly the round-linearization
+discipline client ops already follow (DESIGN.md §2/§10).
+
+``queue_split/move/merge`` are the host commands: each claims the first
+idle slot, *unless* the named registry entry is already claimed by any
+active slot (at-most-one-op-per-entry — the paper's per-sublist safety
+argument, enforced per entry instead of per shard). They return
+``(table, ok)``; ``ok`` is False when no slot was free or the entry was
+claimed, and the command was dropped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..types import DiLiConfig, SH_KEY, ShardState
+from .fsm import (BG_IDLE, BG_MERGE_EXEC, BG_MERGE_WAIT, BG_MOVE_COPY,
+                  BG_MOVE_SH, BG_MOVE_STABLE, BG_NUM_PHASES, BG_QUAR,
+                  BG_SPLIT_EXEC, BG_SPLIT_WAIT, BG_SWITCH_REG, BG_SWITCH_ST,
+                  BgTable)
+from .phases import merge as PM
+from .phases import move as PV
+from .phases import split as PS
+
+_PHASES = {
+    BG_SPLIT_EXEC: PS.split_exec,
+    BG_SPLIT_WAIT: PS.split_wait,
+    BG_MOVE_SH: PV.move_sh,
+    BG_MOVE_COPY: PV.move_copy,
+    BG_MOVE_STABLE: PV.move_stable,
+    BG_SWITCH_ST: PV.switch_st_phase,
+    BG_SWITCH_REG: PV.switch_reg,
+    BG_QUAR: PV.quarantine,
+    BG_MERGE_EXEC: PM.merge_exec,
+    BG_MERGE_WAIT: PM.merge_wait,
+}
+# a phase key outside the dispatch range would silently alias the no-op
+# branch (the clip below) — refuse to import in that state
+assert all(0 <= ph < BG_NUM_PHASES for ph in _PHASES), sorted(_PHASES)
+
+
+def bg_step(state: ShardState, table: BgTable, me, outbox, count,
+            cfg: DiLiConfig):
+    """Advance every background slot by one phase this round."""
+    def mk(fn):
+        def br(args):
+            st, b, slot_id, ob, ct = args
+            st, b, ob, ct = fn(st, b, me, slot_id, ob, ct, cfg)
+            return st, b, slot_id, ob, ct
+        return br
+
+    def noop(args):
+        return args
+
+    branches = [mk(_PHASES[ph]) if ph in _PHASES else noop
+                for ph in range(BG_NUM_PHASES)]
+
+    def body(carry, xs):
+        st, ob, ct = carry
+        bg, slot_id = xs
+        st, bg, _, ob, ct = jax.lax.switch(
+            jnp.clip(bg.phase, 0, BG_NUM_PHASES - 1), branches,
+            (st, bg, slot_id, ob, ct))
+        bg = bg._replace(round=bg.round + 1)
+        return (st, ob, ct), bg
+
+    slot_ids = jnp.arange(cfg.bg_slots, dtype=jnp.int32)
+    (state, outbox, count), table = jax.lax.scan(
+        body, (state, outbox, count), (table, slot_ids))
+    return state, table, outbox, count
+
+
+# ============================================================ host commands
+
+def _claim(table: BgTable, key_a, key_b=None):
+    """First idle slot + whether ``key_a``/``key_b`` are unclaimed."""
+    active = table.phase != BG_IDLE
+
+    def taken(k):
+        return jnp.any(active & ((table.entry_key == k)
+                                 | (table.merge_key == k)))
+
+    conflict = taken(key_a)
+    if key_b is not None:
+        conflict = conflict | taken(key_b)
+    j = jnp.argmin(active.astype(jnp.int32))     # first idle slot, if any
+    ok = (~active[j]) & (~conflict)
+    return j, ok
+
+
+def _set_fields(table: BgTable, j, ok, **updates):
+    def one(col, new):
+        return col.at[j].set(jnp.where(ok, jnp.asarray(new, col.dtype),
+                                       col[j]))
+    return table._replace(**{k: one(getattr(table, k), v)
+                             for k, v in updates.items()})
+
+
+def queue_split(table: BgTable, entry_key, sitem_idx):
+    """Host command: split ``entry`` (identified by keymax) at pool idx.
+    Returns (table, ok)."""
+    k = jnp.asarray(entry_key, jnp.int32)
+    j, ok = _claim(table, k)
+    table = _set_fields(table, j, ok, phase=BG_SPLIT_EXEC, entry_key=k,
+                        sitem=sitem_idx, merge_key=SH_KEY)
+    return table, ok
+
+
+def queue_move(table: BgTable, entry_key, target):
+    """Host command: move ``entry`` (identified by keymax) to ``target``.
+    Returns (table, ok)."""
+    k = jnp.asarray(entry_key, jnp.int32)
+    j, ok = _claim(table, k)
+    table = _set_fields(table, j, ok, phase=BG_MOVE_SH, entry_key=k,
+                        target=target, merge_key=SH_KEY)
+    return table, ok
+
+
+def queue_merge(table: BgTable, left_keymax, right_keymax):
+    """Host command: merge two adjacent sublists owned by this shard.
+    Returns (table, ok)."""
+    ka = jnp.asarray(left_keymax, jnp.int32)
+    kb = jnp.asarray(right_keymax, jnp.int32)
+    j, ok = _claim(table, ka, kb)
+    table = _set_fields(table, j, ok, phase=BG_MERGE_EXEC, entry_key=ka,
+                        merge_key=kb)
+    return table, ok

@@ -1,0 +1,160 @@
+"""Background FSM state: phases, flags, and the slotted ``BgTable``.
+
+Each shard runs up to ``cfg.bg_slots`` background operations concurrently
+(the paper assigns one background thread per machine; DESIGN.md §10 extends
+that to B independent ops under a per-registry-entry claim). A slot is one
+``BgState`` (all-scalar leaves); a shard's table is the same NamedTuple
+with ``[B]``-shaped leaves — pytree-compatible with stacking, shard_map and
+checkpointing like every other state container.
+
+Phase graph (per slot)::
+
+   IDLE -> SPLIT_EXEC -> SPLIT_WAIT -> IDLE
+   IDLE -> MOVE_SH -> MOVE_SH_WAIT -> MOVE_COPY -> MOVE_STABLE
+        -> SWITCH_ST [-> SWITCH_ST_WAIT] -> SWITCH_REG -> QUAR -> IDLE
+   IDLE -> MERGE_EXEC -> MERGE_WAIT -> IDLE          (Appendix B)
+
+The *claim* discipline: a non-IDLE slot owns the registry entries named by
+its ``entry_key`` (and ``merge_key`` for merges, sentinel ``SH_KEY``
+otherwise); ``engine.queue_*`` refuses a command whose entry is already
+claimed by any slot, which is what preserves the paper's per-sublist
+safety argument slot-by-slot (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import refs
+from ..types import DiLiConfig, SH_KEY
+
+# ------------------------------------------------------------------ phases
+BG_IDLE = 0
+BG_SPLIT_EXEC = 1
+BG_SPLIT_WAIT = 2
+BG_MOVE_SH = 3
+BG_MOVE_SH_WAIT = 4
+BG_MOVE_COPY = 5
+BG_MOVE_STABLE = 6
+BG_SWITCH_ST = 7
+BG_SWITCH_ST_WAIT = 8
+BG_SWITCH_REG = 9
+BG_QUAR = 10
+BG_MERGE_EXEC = 11
+BG_MERGE_WAIT = 12
+BG_NUM_PHASES = 13   # dispatch-table size: every BG_* above is < this
+
+# MOVE_ITEM / MOVE_ACK flag bits (message field F_A)
+FL_MARKED = 1
+FL_ST = 2
+
+
+class BgState(NamedTuple):
+    """One background op (scalar leaves) — or a whole shard's slotted
+    table when every leaf carries a leading ``[bg_slots]`` axis."""
+    phase: jnp.ndarray       # int32
+    entry_key: jnp.ndarray   # int32 — keymax identifying the claimed entry
+    target: jnp.ndarray      # int32 — destination shard of a Move
+    sitem: jnp.ndarray       # int32 — split item pool idx
+    cursor: jnp.ndarray      # int32 — acked-prefix cursor: last chain node
+                             # whose newLoc is known (contiguously) set
+    send_prev: jnp.ndarray   # int32 — pipelined send cursor: last chain
+                             # node handed to the fabric (ack not awaited)
+    sent: jnp.ndarray        # int32 — MoveItems sent since MOVE_COPY entry
+    acked: jnp.ndarray       # int32
+    st_sent: jnp.ndarray     # int32 bool — the SubTail has been sent
+    st_acked: jnp.ndarray    # int32 bool
+    sh_star: jnp.ndarray     # uint32 — target SubHead ref
+    st_star: jnp.ndarray     # uint32 — target SubTail ref
+    old_head: jnp.ndarray    # int32 — source SubHead pool idx
+    quar_round: jnp.ndarray  # int32
+    round: jnp.ndarray       # int32 — round counter
+    new_slot: jnp.ndarray    # int32 — split: right-half counter slot
+    old_slot: jnp.ndarray    # int32 — split: left-half counter slot
+    split_key: jnp.ndarray   # int32
+    sh_new: jnp.ndarray      # int32 — split: new SubHead pool idx
+    st_new: jnp.ndarray      # int32 — split: new SubTail pool idx
+    old_keymax: jnp.ndarray  # int32 — split: pre-split keymax (right keymax)
+    merge_key: jnp.ndarray   # int32 — merge: right entry keymax (second
+                             # claim); SH_KEY sentinel when not a merge
+
+
+# ``BgTable`` is a type alias, not a distinct class: the slotted table is a
+# ``BgState`` whose leaves are ``[bg_slots]``-shaped.
+BgTable = BgState
+
+
+def init_bg() -> BgState:
+    z = jnp.zeros((), jnp.int32)
+    return BgState(phase=z, entry_key=z, target=z, sitem=z, cursor=z,
+                   send_prev=z, sent=z, acked=z, st_sent=z, st_acked=z,
+                   sh_star=refs.null_ref(), st_star=refs.null_ref(),
+                   old_head=z, quar_round=z, round=z, new_slot=z,
+                   old_slot=z, split_key=z, sh_new=z, st_new=z,
+                   old_keymax=z,
+                   merge_key=jnp.asarray(SH_KEY, jnp.int32))
+
+
+def init_bg_table(cfg: DiLiConfig) -> BgTable:
+    """Fresh all-idle table of ``cfg.bg_slots`` background slots."""
+    one = init_bg()
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.bg_slots,) + x.shape), one)
+
+
+def slot_view(table: BgTable, j) -> BgState:
+    """Slot ``j`` of a table as a scalar-leaf BgState (``j`` may be traced)."""
+    return jax.tree_util.tree_map(lambda col: col[j], table)
+
+
+def set_slot(table: BgTable, j, bg: BgState) -> BgTable:
+    return jax.tree_util.tree_map(
+        lambda col, leaf: col.at[j].set(leaf), table, bg)
+
+
+# ----------------------------------------------------- host-side inspection
+# Accept a single shard's table (leaves [B]) or a stacked one ([S, B]).
+
+def slot_phases(table: BgTable) -> np.ndarray:
+    return np.asarray(table.phase)
+
+
+def any_active(table: BgTable) -> bool:
+    """True if any slot is running a background op."""
+    return bool((slot_phases(table) != BG_IDLE).any())
+
+
+def free_slots(table: BgTable) -> int:
+    return int((slot_phases(table) == BG_IDLE).sum())
+
+
+def claimed_keys(table: BgTable):
+    """Registry-entry keymaxes currently claimed by active slots."""
+    phases = slot_phases(table).reshape(-1)
+    ek = np.asarray(table.entry_key).reshape(-1)
+    mk = np.asarray(table.merge_key).reshape(-1)
+    out = set()
+    for ph, a, b in zip(phases, ek, mk):
+        if ph != BG_IDLE:
+            out.add(int(a))
+            if int(b) != SH_KEY:
+                out.add(int(b))
+    return out
+
+
+def active_moves(table: BgTable):
+    """(entry_keymax, target) of every in-flight Move whose registry
+    transfer has not landed yet — i.e. whose load still counts against
+    the *source* shard. A balancer that ignores these keeps re-issuing
+    moves for load that is already en route."""
+    phases = slot_phases(table).reshape(-1)
+    ek = np.asarray(table.entry_key).reshape(-1)
+    tg = np.asarray(table.target).reshape(-1)
+    pre_transfer = {BG_MOVE_SH, BG_MOVE_SH_WAIT, BG_MOVE_COPY,
+                    BG_MOVE_STABLE, BG_SWITCH_ST, BG_SWITCH_ST_WAIT,
+                    BG_SWITCH_REG}
+    return [(int(k), int(t)) for ph, k, t in zip(phases, ek, tg)
+            if int(ph) in pre_transfer]

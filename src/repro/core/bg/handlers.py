@@ -1,0 +1,370 @@
+"""Message handlers of the background protocol (§5.3-5.4, Alg. 5-7).
+
+All handlers share one signature::
+
+    (state, table, me, row, outbox, count, cfg) ->
+        (state, table, outbox, count)
+
+``table`` is the shard's slotted ``BgTable``. Handlers that complete a
+request issued by a background slot (MOVE_SH_ACK, MOVE_ACK,
+SWITCH_ST_ACK) address the slot named by the row's ``F_SLOT`` lane — the
+request carried it out, the ack echoes it back — so concurrent ops on one
+shard never credit each other's progress. Replicate/registry handlers
+(RepInsert/RepDelete/Reg*) never touch the table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import messages as M
+from .. import refs, registry as reg_ops
+from ..types import SH_KEY, ST_KEY
+from . import util as U
+from .fsm import (BG_IDLE, BG_MOVE_COPY, BG_MOVE_SH_WAIT, BG_SWITCH_REG,
+                  BG_SWITCH_ST, BG_SWITCH_ST_WAIT, FL_MARKED, FL_ST,
+                  slot_view)
+
+
+def _row_slot(table, row):
+    """Bg slot a move/switch ack addresses (clipped against the table)."""
+    return jnp.clip(row[M.F_SLOT], 0, table.phase.shape[0] - 1)
+
+
+def _set_slot_where(table, j, good, **updates):
+    """Apply per-field updates to slot ``j`` when ``good`` (traced)."""
+    def one(col, new):
+        return col.at[j].set(jnp.where(good, new, col[j]))
+    return table._replace(**{k: one(getattr(table, k), v)
+                             for k, v in updates.items()})
+
+
+def h_rep_insert(state, table, me, row, outbox, count, cfg):
+    """RepInsertAfterRecv (Lines 226-231)."""
+    anchor = refs.ref_idx(M.i2ref(row[M.F_REF1]))
+    prev_sid, prev_ts = row[M.F_X2], row[M.F_X3]
+    item_sid, item_ts = row[M.F_SID], row[M.F_TS]
+    key, oldloc, slot = row[M.F_KEY], row[M.F_X1], row[M.F_X4]
+
+    prev_idx, found = U.find_by_identity(state, anchor, prev_sid, prev_ts,
+                                         cfg.max_scan)
+    st2, new_idx, ok = U.replay_insert(
+        state, me, prev_idx, item_ts, key, item_sid, item_ts,
+        jnp.asarray(False), cfg, value=row[M.F_VAL])
+    apply_it = found & ok
+    state = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(apply_it, b, a), state, st2)
+
+    ack = M.make_row(M.MSG_ACK_INSERT, row[M.F_SRC], me,
+                     ref1=M.ref2i(refs.make_ref(me, new_idx)),
+                     sid=item_sid, ts=item_ts, x1=oldloc, x4=slot)
+    outbox, count = M.push(outbox, count, ack, apply_it)
+    # prev's copy not here yet (out-of-order delivery): retry next round.
+    retry_row = row.at[M.F_A].set(row[M.F_A] + 1)
+    retry_row = retry_row.at[M.F_DST].set(me)
+    outbox, count = M.push(outbox, count, retry_row,
+                           (~apply_it) & (row[M.F_A] < cfg.max_retries))
+    return state, table, outbox, count
+
+
+def h_rep_delete(state, table, me, row, outbox, count, cfg):
+    """RepDeleteRecv (Lines 232-239)."""
+    anchor = refs.ref_idx(M.i2ref(row[M.F_REF1]))
+    item_sid, item_ts = row[M.F_SID], row[M.F_TS]
+    oldloc, slot = row[M.F_X1], row[M.F_X4]
+    need_ack = row[M.F_X2] != 0
+
+    idx, found = U.find_by_identity(state, anchor, item_sid, item_ts,
+                                    cfg.max_scan)
+    state = state._replace(pool=state.pool._replace(
+        nxt=U.set_at(state.pool.nxt, idx, refs.with_mark(state.pool.nxt[idx]),
+                     found)))
+    ack = M.make_row(M.MSG_ACK_DELETE, row[M.F_SRC], me, x1=oldloc, x4=slot)
+    outbox, count = M.push(outbox, count, ack, found & need_ack)
+    retry_row = row.at[M.F_A].set(row[M.F_A] + 1)
+    retry_row = retry_row.at[M.F_DST].set(me)
+    outbox, count = M.push(outbox, count, retry_row,
+                           (~found) & (row[M.F_A] < cfg.max_retries))
+    return state, table, outbox, count
+
+
+def h_ack_insert(state, table, me, row, outbox, count, cfg):
+    """InsertReplayResponseRecv (Lines 263-265).
+
+    No marked-while-in-flight race catch is needed here (unlike
+    h_move_ack's Line 210): an item awaiting this ack was born with its
+    left's non-null newLoc (ops.py Line 189), so a remove racing the
+    replay sees node_moving and sends its own RepDelete — whose pair-FIFO
+    channel guarantees it arrives after the replay it chases.
+    """
+    oldloc, slot = row[M.F_X1], row[M.F_X4]
+    sid, ts = row[M.F_SID], row[M.F_TS]
+    same = (state.pool.sid[oldloc] == sid) & (state.pool.ts[oldloc] == ts)
+    state = state._replace(pool=state.pool._replace(
+        newloc=U.set_at(state.pool.newloc, oldloc, M.i2ref(row[M.F_REF1]),
+                        same)))
+    # the deferred endCt increment always lands (balances the op's stCt++)
+    state = state._replace(endct=state.endct.at[slot].add(1))
+    return state, table, outbox, count
+
+
+def h_ack_delete(state, table, me, row, outbox, count, cfg):
+    """RemoveReplayResponseRecv (Lines 266-267)."""
+    state = state._replace(endct=state.endct.at[row[M.F_X4]].add(1))
+    return state, table, outbox, count
+
+
+def h_move_sh(state, table, me, row, outbox, count, cfg):
+    """MoveSHRecv (Lines 215-225): create SH*/ST* + fresh counters."""
+    keymin, keymax = row[M.F_KEY], row[M.F_X1]
+    sh_sid, sh_ts = row[M.F_SID], row[M.F_TS]
+
+    slot = state.ctr_top
+    slot_ok = slot < state.stct.shape[0]
+    state = state._replace(ctr_top=slot + slot_ok.astype(jnp.int32))
+    state, st_idx, ok1 = U.alloc_node(state)
+    state, sh_idx, ok2 = U.alloc_node(state)
+    ok = slot_ok & ok1 & ok2
+
+    pool = state.pool
+    pool = pool._replace(
+        key=U.set_at(U.set_at(pool.key, st_idx, ST_KEY, ok), sh_idx, SH_KEY,
+                     ok),
+        keymax=U.set_at(pool.keymax, st_idx, keymax, ok),
+        ctr=U.set_at(U.set_at(pool.ctr, st_idx, slot, ok), sh_idx, slot, ok),
+        # the SubHead keeps the original's <sId, ts> identity (Line 219)
+        sid=U.set_at(U.set_at(pool.sid, sh_idx, sh_sid, ok), st_idx, me, ok),
+        ts=U.set_at(U.set_at(pool.ts, sh_idx, sh_ts, ok), st_idx,
+                    state.ts_clock, ok),
+        newloc=U.set_at(U.set_at(pool.newloc, sh_idx, refs.null_ref(), ok),
+                        st_idx, refs.null_ref(), ok),
+    )
+    pool = pool._replace(
+        nxt=U.set_at(U.set_at(pool.nxt, sh_idx, refs.make_ref(me, st_idx),
+                              ok),
+                     st_idx, refs.null_ref(), ok))
+    state = state._replace(pool=pool, ts_clock=state.ts_clock + 1)
+    state = U.lamport(state, sh_ts)
+
+    ack = M.make_row(M.MSG_MOVE_SH_ACK, row[M.F_SRC], me,
+                     ref1=M.ref2i(refs.make_ref(me, sh_idx)),
+                     x3=M.ref2i(refs.make_ref(me, st_idx)),
+                     key=keymin, x1=keymax, a=ok.astype(jnp.int32),
+                     slot=row[M.F_SLOT])
+    outbox, count = M.push(outbox, count, ack)
+    return state, table, outbox, count
+
+
+def h_move_sh_ack(state, table, me, row, outbox, count, cfg):
+    """Line 200: head.newLoc = remoteSH; start copying."""
+    j = _row_slot(table, row)
+    bg = slot_view(table, j)
+    waiting = bg.phase == BG_MOVE_SH_WAIT
+    good = waiting & (row[M.F_A] != 0)
+    sh_star = M.i2ref(row[M.F_REF1])
+    state = state._replace(pool=state.pool._replace(
+        newloc=U.set_at(state.pool.newloc, bg.old_head, sh_star, good)))
+    z = jnp.zeros((), jnp.int32)
+    table = _set_slot_where(
+        table, j, good,
+        phase=jnp.asarray(BG_MOVE_COPY, jnp.int32),
+        sh_star=sh_star, st_star=M.i2ref(row[M.F_X3]),
+        cursor=bg.old_head, send_prev=bg.old_head,
+        sent=z, acked=z, st_sent=z, st_acked=z)
+    # nack (target out of nodes / counter slots): abort the move and free
+    # the slot — leaving it in MOVE_SH_WAIT would claim the entry forever
+    # and wedge quiescence
+    table = _set_slot_where(table, j, waiting & (row[M.F_A] == 0),
+                            phase=jnp.asarray(BG_IDLE, jnp.int32))
+    return state, table, outbox, count
+
+
+def h_move_item(state, table, me, row, outbox, count, cfg):
+    """MoveItemRecv (Lines 240-248): replay-insert the copied item.
+
+    Serves both MSG_MOVE_ITEM (SubTail rows, retries) and any
+    MSG_MOVE_ITEMS row the vectorized replay pre-pass bounced — the two
+    kinds share one field layout by construction.
+    """
+    flags = row[M.F_A]
+    is_st = (flags & FL_ST) != 0
+    is_marked = (flags & FL_MARKED) != 0
+    anchor = refs.ref_idx(M.i2ref(row[M.F_REF1]))
+    prev_sid, prev_ts = row[M.F_X2], row[M.F_X3]
+    item_sid, item_ts = row[M.F_SID], row[M.F_TS]
+    key, oldloc = row[M.F_KEY], row[M.F_X1]
+
+    prev_idx, found = U.find_by_identity(state, anchor, prev_sid, prev_ts,
+                                         cfg.max_scan)
+
+    # ---- ST: link the target SubTail into the global chain (Lines 241-247)
+    pool = state.pool
+    n = pool.key.shape[0]
+
+    def walk_to_st(c):
+        idx, steps = c
+        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
+        return jnp.where(pool.key[idx] == ST_KEY, idx, nxt), steps + 1
+
+    def not_st(c):
+        idx, steps = c
+        return (pool.key[idx] != ST_KEY) & (steps < cfg.max_scan)
+
+    st_idx, _ = jax.lax.while_loop(not_st, walk_to_st,
+                                   (prev_idx, jnp.zeros((), jnp.int32)))
+    do_st = found & is_st
+    st_next = M.i2ref(row[M.F_X4])     # source ST's next: the global chain
+    pool = pool._replace(
+        nxt=U.set_at(pool.nxt, st_idx, st_next, do_st),
+        keymax=U.set_at(pool.keymax, st_idx, key, do_st))
+    state = state._replace(pool=pool)
+    ack_ref = refs.make_ref(me, st_idx)
+
+    # ---- ordinary item: replay insert with compTs = prev.ts (Line 248)
+    st2, new_idx, ok = U.replay_insert(
+        state, me, prev_idx, prev_ts, key, item_sid, item_ts, is_marked, cfg,
+        value=row[M.F_VAL])
+    do_item = found & (~is_st) & ok
+    state = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(do_item, b, a), state, st2)
+    ack_ref = jnp.where(is_st, ack_ref, refs.make_ref(me, new_idx))
+
+    done = do_st | do_item
+    ack = M.make_row(M.MSG_MOVE_ACK, row[M.F_SRC], me,
+                     ref1=M.ref2i(ack_ref), sid=item_sid, ts=item_ts,
+                     x1=oldloc, a=flags, slot=row[M.F_SLOT])
+    outbox, count = M.push(outbox, count, ack, done)
+    # bounded retry: the retry count rides in the flag word's high bits
+    retries = flags >> 8
+    retry = row.at[M.F_A].set(flags + 256)
+    retry = retry.at[M.F_DST].set(me)
+    outbox, count = M.push(outbox, count, retry,
+                           (~done) & (retries < cfg.max_retries))
+    return state, table, outbox, count
+
+
+def h_move_ack(state, table, me, row, outbox, count, cfg):
+    """Source side of MoveItem (Lines 208-211): record newLoc, detect races."""
+    oldloc = row[M.F_X1]
+    sid, ts = row[M.F_SID], row[M.F_TS]
+    flags = row[M.F_A]
+    is_st = (flags & FL_ST) != 0
+    sent_marked = (flags & FL_MARKED) != 0
+    new_ref = M.i2ref(row[M.F_REF1])
+
+    same = (state.pool.sid[oldloc] == sid) & (state.pool.ts[oldloc] == ts)
+    state = state._replace(pool=state.pool._replace(
+        newloc=U.set_at(state.pool.newloc, oldloc, new_ref, same)))
+
+    # Line 210: item got marked while the copy was in flight -> RepDelete
+    now_marked = refs.ref_mark(state.pool.nxt[oldloc])
+    race = same & now_marked & (~sent_marked) & (~is_st)
+    rep = M.make_row(M.MSG_REP_DELETE, refs.ref_sid(new_ref), me,
+                     ref1=M.ref2i(refs.unmarked(new_ref)),
+                     sid=sid, ts=ts, x1=oldloc, x2=0, x4=0)
+    # x2=0: no ack needed — the remove already balanced its endCt.
+    outbox, count = M.push(outbox, count, rep, race)
+
+    j = _row_slot(table, row)
+    in_copy = table.phase[j] == BG_MOVE_COPY
+    # NB: the acked-prefix cursor is advanced only by move_copy's
+    # contiguous-prefix walk; advancing it here (to the last ack) would
+    # skip inserts that landed between in-flight batch items.
+    table = _set_slot_where(
+        table, j, in_copy,
+        acked=table.acked[j] + 1,
+        st_acked=jnp.where(is_st, 1, table.st_acked[j]))
+    return state, table, outbox, count
+
+
+def h_switch_st(state, table, me, row, outbox, count, cfg):
+    """SwitchSTRecv (Lines 272-277 + 297-302)."""
+    keymin = row[M.F_KEY]
+    new_sh = M.i2ref(row[M.F_REF1])
+    state, success = U.switch_next_st(state, me, keymin, new_sh)
+    ack = M.make_row(M.MSG_SWITCH_ST_ACK, row[M.F_SRC], me,
+                     a=success.astype(jnp.int32), slot=row[M.F_SLOT])
+    outbox, count = M.push(outbox, count, ack)
+    return state, table, outbox, count
+
+
+def h_switch_st_ack(state, table, me, row, outbox, count, cfg):
+    j = _row_slot(table, row)
+    good = table.phase[j] == BG_SWITCH_ST_WAIT
+    ok = row[M.F_A] != 0
+    table = _set_slot_where(
+        table, j, good,
+        phase=jnp.where(ok, BG_SWITCH_REG, BG_SWITCH_ST).astype(jnp.int32))
+    return state, table, outbox, count
+
+
+def h_reg_split(state, table, me, row, outbox, count, cfg):
+    """RegisterSublistRecv (Lines 159-163) at a replica."""
+    split_key, keymax = row[M.F_KEY], row[M.F_X1]
+    sh_ref = M.i2ref(row[M.F_REF1])
+    reg = state.registry
+    e = reg_ops.get_by_key(reg, keymax)
+    eidx = jnp.clip(e, 0, None)
+    # exact right-half already present (duplicate) — drop
+    dup = (e >= 0) & (reg.keymin[eidx] == split_key) & \
+        (reg.keymax[eidx] == keymax)
+    # parent entry present: split it
+    can = (e >= 0) & (~dup) & (reg.keymin[eidx] < split_key) & \
+        (reg.keymax[eidx] == keymax) & (reg.size < reg.keymin.shape[0])
+    new_reg = reg_ops.add_entry(
+        reg_ops.set_fields(reg, eidx, keymax=split_key),
+        split_key, keymax, sh_ref, refs.null_ref(), 0, 0)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(can, b, a), reg, new_reg))
+    retry = row.at[M.F_A].set(row[M.F_A] + 1)
+    retry = retry.at[M.F_DST].set(me)
+    outbox, count = M.push(outbox, count, retry,
+                           (~can) & (~dup) & (row[M.F_A] < cfg.max_retries))
+    return state, table, outbox, count
+
+
+def h_switch_server(state, table, me, row, outbox, count, cfg):
+    """SwitchServerRecv (Lines 285-287): repoint a registry entry."""
+    keymin, keymax = row[M.F_KEY], row[M.F_X1]
+    sh_ref, st_ref = M.i2ref(row[M.F_REF1]), M.i2ref(row[M.F_X3])
+    reg = state.registry
+    e = reg_ops.get_by_key(reg, keymax)
+    eidx = jnp.clip(e, 0, None)
+    exact = (e >= 0) & (reg.keymin[eidx] == keymin) & \
+        (reg.keymax[eidx] == keymax)
+    i_am_new_owner = refs.ref_sid(sh_ref) == me
+    sh_idx = jnp.clip(refs.ref_idx(sh_ref), 0, state.pool.key.shape[0] - 1)
+    new_ctr = jnp.where(i_am_new_owner, state.pool.ctr[sh_idx], 0)
+    new_reg = reg_ops.set_fields(reg, eidx, subhead=sh_ref, subtail=st_ref,
+                                 ctr=new_ctr, offset=0)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(exact, b, a), reg, new_reg))
+    retry = row.at[M.F_A].set(row[M.F_A] + 1)
+    retry = retry.at[M.F_DST].set(me)
+    outbox, count = M.push(outbox, count, retry,
+                           (~exact) & (row[M.F_A] < cfg.max_retries))
+    return state, table, outbox, count
+
+
+def h_reg_merged(state, table, me, row, outbox, count, cfg):
+    """RegisterMergedSublistRecv (Lines 360-365) at a replica."""
+    key_mid = row[M.F_KEY]
+    reg = state.registry
+    right = U.entry_by_keymax(reg, row[M.F_X1])
+    ridx = jnp.clip(right, 0, None)
+    ok = (right >= 0) & (reg.keymin[ridx] == key_mid)
+    left = U.cover(reg, key_mid)
+    lidx = jnp.clip(left, 0, None)
+    ok = ok & (left >= 0) & (reg.keymax[lidx] == key_mid)
+    new_reg = reg_ops.remove_entry(
+        reg_ops.set_fields(reg, lidx, keymax=reg.keymax[ridx]), ridx)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(ok, b, a), reg, new_reg))
+    # already merged here (idempotent) — drop; otherwise out-of-order with a
+    # pending REG_SPLIT: retry next round
+    merged = (right < 0) & (U.cover(reg, key_mid) >= 0)
+    retry = row.at[M.F_A].set(row[M.F_A] + 1)
+    retry = retry.at[M.F_DST].set(me)
+    outbox, count = M.push(outbox, count, retry,
+                           (~ok) & (~merged) & (row[M.F_A] < cfg.max_retries))
+    return state, table, outbox, count

@@ -1,0 +1,12 @@
+"""Per-phase step functions of the background FSM (one module per op).
+
+Every phase function shares the signature::
+
+    (state, bg, me, slot_id, outbox, count, cfg) ->
+        (state, bg, outbox, count)
+
+``bg`` is one slot's scalar-leaf ``BgState``; ``slot_id`` is the slot's
+index in the shard's ``BgTable``, stamped into outgoing move/switch
+messages so their acks come back to the right slot.
+"""
+from . import merge, move, split  # noqa: F401

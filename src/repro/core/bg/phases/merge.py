@@ -1,0 +1,120 @@
+"""Merge phases (Appendix B, Alg. 7): fold the right sublist into the left."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ... import messages as M
+from ... import refs, registry as reg_ops
+from ...types import ST_KEY
+from .. import util as U
+from ..fsm import BG_IDLE, BG_MERGE_WAIT
+
+
+def merge_exec(state, bg, me, slot_id, outbox, count, cfg):
+    """Merge steps 1-3: neutralize the mid block, link around it."""
+    reg = state.registry
+    le = U.entry_by_keymax(reg, bg.entry_key)      # left entry
+    re_ = U.entry_by_keymax(reg, bg.merge_key)     # right entry
+    lidx, ridx = jnp.clip(le, 0, None), jnp.clip(re_, 0, None)
+    pool = state.pool
+    n = pool.key.shape[0]
+    lslot, rslot = reg.ctr[lidx], reg.ctr[ridx]
+    valid = (le >= 0) & (re_ >= 0) & \
+        (reg.keymax[lidx] == reg.keymin[ridx]) & \
+        (refs.ref_sid(reg.subhead[lidx]) == me) & \
+        (refs.ref_sid(reg.subhead[ridx]) == me) & \
+        (state.stct[lslot] >= 0) & (state.stct[rslot] >= 0)
+
+    key_mid = reg.keymax[lidx]
+    mid_st = refs.ref_idx(reg.subtail[lidx])      # the block to neutralize
+    right_sh = refs.ref_idx(reg.subhead[ridx])
+    right_st_ref = reg.subtail[ridx]
+    old_off_sum = reg.offset[lidx] + reg.offset[ridx]
+
+    # Line 335: neutralize the mid SubTail so traversals cross it
+    pool = pool._replace(
+        keymax=U.set_at(pool.keymax, mid_st, reg.keymin[lidx], valid))
+
+    # Lines 341-344: repoint the right half's counter slots to the left's
+    def cond(c):
+        ctr_col, idx, steps, done = c
+        return (~done) & (steps < cfg.max_scan)
+
+    def body(c):
+        ctr_col, idx, steps, _ = c
+        ctr_col = ctr_col.at[idx].set(lslot)
+        at_st = pool.key[idx] == ST_KEY
+        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
+        return ctr_col, jnp.where(at_st, idx, nxt), steps + 1, at_st
+
+    ctr_col, _, _, _ = jax.lax.while_loop(
+        cond, body, (pool.ctr, jnp.clip(right_sh, 0, n - 1),
+                     jnp.zeros((), jnp.int32), jnp.asarray(False)))
+    pool = pool._replace(ctr=jnp.where(valid, ctr_col, pool.ctr))
+
+    # Lines 346-352 (RDCSS): link leftLast directly to rightFirst. The mid
+    # ST-SH block stays quarantined as a forwarder for stale delegations
+    # (its nxt chain still reaches the merged items).
+    def find_last(c):
+        idx, steps = c
+        nxt_ref = refs.unmarked(pool.nxt[idx])
+        nxt = jnp.clip(refs.ref_idx(nxt_ref), 0, n - 1)
+        at_last = nxt == mid_st
+        return jnp.where(at_last, idx, nxt), steps + 1
+
+    def not_last(c):
+        idx, steps = c
+        nxt = refs.ref_idx(refs.unmarked(pool.nxt[idx]))
+        return (nxt != mid_st) & (steps < cfg.max_scan)
+
+    left_sh = jnp.clip(refs.ref_idx(reg.subhead[lidx]), 0, n - 1)
+    left_last, _ = jax.lax.while_loop(
+        not_last, find_last, (left_sh, jnp.zeros((), jnp.int32)))
+    right_first = refs.unmarked(pool.nxt[jnp.clip(right_sh, 0, n - 1)])
+    ll_mark = pool.nxt[left_last] & jnp.uint32(refs.MARK_BIT)
+    pool = pool._replace(
+        nxt=U.set_at(pool.nxt, left_last, right_first | ll_mark, valid))
+    state = state._replace(pool=pool)
+
+    # Lines 336-338: extend the left entry, drop the right entry (local COW)
+    new_reg = reg_ops.remove_entry(
+        reg_ops.set_fields(reg, lidx, keymax=reg.keymax[ridx],
+                           subtail=right_st_ref),
+        ridx)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(valid, b, a), reg, new_reg))
+
+    bg = bg._replace(
+        phase=jnp.where(valid, BG_MERGE_WAIT, BG_IDLE),
+        entry_key=jnp.where(valid, bg.merge_key, bg.entry_key),
+        split_key=jnp.where(valid, key_mid, bg.split_key),
+        old_slot=jnp.where(valid, lslot, bg.old_slot),
+        new_slot=jnp.where(valid, rslot, bg.new_slot),
+        old_keymax=jnp.where(valid, old_off_sum, bg.old_keymax))
+    return state, bg, outbox, count
+
+
+def merge_wait(state, bg, me, slot_id, outbox, count, cfg):
+    """Alg. 7 Lines 353-358: offset stabilization + broadcast."""
+    a1 = state.stct[bg.old_slot] - state.endct[bg.old_slot]
+    a2 = state.stct[bg.new_slot] - state.endct[bg.new_slot]
+    stable = (a1 + a2) == bg.old_keymax
+    reg = state.registry
+    e = U.entry_by_keymax(reg, bg.entry_key)
+    eidx = jnp.clip(e, 0, None)
+    new_reg = reg_ops.set_fields(reg, eidx, offset=a1)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(stable & (e >= 0), b, a), reg, new_reg))
+
+    row = M.make_row(M.MSG_REG_MERGED, 0, me, key=bg.split_key,
+                     x1=bg.entry_key)
+
+    def send(i, oc):
+        ob, ct = oc
+        return M.push(ob, ct, row.at[M.F_DST].set(i), stable & (i != me))
+
+    outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
+                                      (outbox, count))
+    bg = bg._replace(phase=jnp.where(stable, BG_IDLE, bg.phase))
+    return state, bg, outbox, count

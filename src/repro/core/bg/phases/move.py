@@ -1,0 +1,242 @@
+"""Move phases (§5.4 + Alg. 5): MoveSH, the pipelined batched copy,
+stabilization, Switch, and quarantine.
+
+The copy phase is *pipelined* (DESIGN.md §10): instead of waiting for the
+previous batch's acks before sending the next (the seed's behaviour, ~2
+rounds per batch), the source keeps two cursors —
+
+* ``send_prev``: the last chain node handed to the fabric. Each round it
+  advances over the next chain-contiguous run of up to ``cfg.move_batch``
+  un-replicated items, emitting one ``MSG_MOVE_ITEMS`` row per item
+  without awaiting acks, so an n-item sublist crosses in ceil(n/K) + O(1)
+  rounds.
+* ``cursor``: the acked-prefix cursor, advanced only over the contiguous
+  prefix of items whose ``newLoc`` is known — the safety anchor. Racing
+  inserts can land *behind* ``send_prev`` with a null newLoc (their left
+  was sent but not acked, so they neither self-replicate nor get picked
+  up by the forward walk); they are exactly the nodes a re-walk from
+  ``cursor`` finds once the pipeline drains (sent == acked), so the walk
+  restarts there and ships the stragglers.
+
+The SubTail is sent only when the walk from ``cursor`` reaches it
+directly with nothing in flight — then every chain node before ST has a
+newLoc, every concurrent update replicates (its left's newLoc is set),
+and no item can be missed: the same invariant the seed's stop-and-wait
+loop enforced, reached in O(1) extra rounds instead of O(n/K) ack waits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ... import messages as M
+from ... import refs, registry as reg_ops
+from ...types import NEG_INF_CT, SH_KEY, ST_KEY
+from .. import util as U
+from ..fsm import (BG_IDLE, BG_MOVE_SH_WAIT, BG_MOVE_STABLE, BG_QUAR,
+                   BG_SWITCH_REG, BG_SWITCH_ST, BG_SWITCH_ST_WAIT,
+                   FL_MARKED, FL_ST)
+
+
+def move_sh(state, bg, me, slot_id, outbox, count, cfg):
+    reg = state.registry
+    e = U.entry_by_keymax(reg, bg.entry_key)
+    eidx = jnp.clip(e, 0, None)
+    ok = (e >= 0) & (refs.ref_sid(reg.subhead[eidx]) == me) & \
+        (bg.target != me)
+    head_idx = refs.ref_idx(reg.subhead[eidx])
+    row = M.make_row(M.MSG_MOVE_SH, bg.target, me,
+                     key=reg.keymin[eidx], x1=reg.keymax[eidx],
+                     sid=state.pool.sid[head_idx],
+                     ts=state.pool.ts[head_idx], slot=slot_id)
+    outbox, count = M.push(outbox, count, row, ok)
+    bg = bg._replace(
+        phase=jnp.where(ok, BG_MOVE_SH_WAIT, BG_IDLE),
+        old_head=jnp.where(ok, head_idx, bg.old_head))
+    return state, bg, outbox, count
+
+
+def move_copy(state, bg, me, slot_id, outbox, count, cfg):
+    """One round of the pipelined copy (module docstring)."""
+    pool = state.pool
+    n = pool.key.shape[0]
+    active = bg.st_sent == 0
+
+    # 1. advance the acked-prefix cursor over items with a known newLoc
+    def adv_cond(c):
+        cur, steps = c
+        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[cur])), 0, n - 1)
+        ok = (~refs.is_null(pool.newloc[nxt])) & (pool.key[nxt] != ST_KEY)
+        return active & ok & (steps < cfg.max_scan)
+
+    def adv_body(c):
+        cur, steps = c
+        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[cur])), 0, n - 1)
+        return nxt, steps + 1
+
+    cursor, _ = jax.lax.while_loop(adv_cond, adv_body,
+                                   (bg.cursor, jnp.zeros((), jnp.int32)))
+    anchor = refs.unmarked(pool.newloc[cursor])
+    drained = bg.sent == bg.acked
+
+    # 2. ship the next chain-contiguous run of un-replicated items. The
+    # run ends at the first newLoc'd node (contiguity is what lets the
+    # target replay the whole run in one scatter splice) or at ST.
+    def body(_, c):
+        outbox, count, prev, sent, stop = c
+        curr = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[prev])),
+                        0, n - 1)
+        is_st = pool.key[curr] == ST_KEY
+        has_newloc = ~refs.is_null(pool.newloc[curr])
+        send = active & (~stop) & (~is_st) & (~has_newloc)
+        flags = refs.ref_mark(pool.nxt[curr]).astype(jnp.int32) * FL_MARKED
+        row = M.make_row(
+            M.MSG_MOVE_ITEMS, bg.target, me, a=flags, key=pool.key[curr],
+            ref1=M.ref2i(anchor), sid=pool.sid[curr], ts=pool.ts[curr],
+            x1=curr, x2=pool.sid[prev], x3=pool.ts[prev],
+            x4=M.ref2i(refs.unmarked(pool.nxt[curr])),
+            val=pool.keymax[curr], slot=slot_id)
+        outbox, count = M.push(outbox, count, row, send)
+        sent = sent + send.astype(jnp.int32)
+        stop = stop | is_st | has_newloc
+        prev = jnp.where(send, curr, prev)
+        return outbox, count, prev, sent, stop
+
+    outbox, count, run_prev, nsent, _ = jax.lax.fori_loop(
+        0, cfg.move_batch, body,
+        (outbox, count, bg.send_prev, jnp.zeros((), jnp.int32),
+         jnp.asarray(False)))
+
+    # 3. nothing to send and nothing in flight: either the whole chain is
+    # replicated (walk from the acked-prefix cursor meets ST directly —
+    # ship the SubTail) or the forward walk is past stragglers/newLoc'd
+    # nodes — restart it from the cursor.
+    first_next = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[bg.send_prev])),
+                          0, n - 1)
+    at_end = active & (nsent == 0) & drained
+    send_st = at_end & (pool.key[first_next] == ST_KEY) & \
+        (bg.send_prev == cursor)
+    restart = at_end & (~send_st)
+
+    st_idx = first_next
+    st_flags = (refs.ref_mark(pool.nxt[st_idx]).astype(jnp.int32) * FL_MARKED
+                + FL_ST)
+    st_row = M.make_row(
+        M.MSG_MOVE_ITEM, bg.target, me, a=st_flags,
+        key=pool.keymax[st_idx], ref1=M.ref2i(anchor),
+        sid=pool.sid[st_idx], ts=pool.ts[st_idx],
+        x1=st_idx, x2=pool.sid[cursor], x3=pool.ts[cursor],
+        x4=M.ref2i(refs.unmarked(pool.nxt[st_idx])),
+        val=pool.keymax[st_idx], slot=slot_id)
+    outbox, count = M.push(outbox, count, st_row, send_st)
+
+    bg = bg._replace(
+        cursor=jnp.where(active, cursor, bg.cursor),
+        send_prev=jnp.where(restart, cursor,
+                            jnp.where(active, run_prev, bg.send_prev)),
+        sent=bg.sent + nsent + send_st.astype(jnp.int32),
+        st_sent=jnp.where(send_st, 1, bg.st_sent),
+        phase=jnp.where((bg.st_acked != 0) & (bg.sent == bg.acked),
+                        BG_MOVE_STABLE, bg.phase))
+    return state, bg, outbox, count
+
+
+def move_stable(state, bg, me, slot_id, outbox, count, cfg):
+    """Line 202-204: CAS stCt := -inf once both copies are provably equal."""
+    reg = state.registry
+    e = U.entry_by_keymax(reg, bg.entry_key)
+    eidx = jnp.clip(e, 0, None)
+    slot = reg.ctr[eidx]
+    quiet = (e >= 0) & \
+        (state.stct[slot] == state.endct[slot] + reg.offset[eidx])
+    state = state._replace(
+        stct=jnp.where(quiet, state.stct.at[slot].set(NEG_INF_CT),
+                       state.stct))
+    bg = bg._replace(phase=jnp.where(quiet, BG_SWITCH_ST, bg.phase))
+    return state, bg, outbox, count
+
+
+def switch_st_phase(state, bg, me, slot_id, outbox, count, cfg):
+    """Alg. 5 Lines 269-280: repoint the previous sublist's SubTail."""
+    reg = state.registry
+    e = U.entry_by_keymax(reg, bg.entry_key)
+    eidx = jnp.clip(e, 0, None)
+    keymin = reg.keymin[eidx]
+    no_left = keymin <= SH_KEY
+    left = U.cover(reg, keymin)
+    lidx = jnp.clip(left, 0, None)
+    left_owner = refs.ref_sid(reg.subhead[lidx])
+    local = (~no_left) & (left >= 0) & (left_owner == me)
+    remote = (~no_left) & (left >= 0) & (left_owner != me)
+
+    st2, ok = U.switch_next_st(state, me, keymin, bg.sh_star)
+    state = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(local, b, a), state, st2)
+
+    row = M.make_row(M.MSG_SWITCH_ST, left_owner, me, key=keymin,
+                     ref1=M.ref2i(bg.sh_star), slot=slot_id)
+    outbox, count = M.push(outbox, count, row, remote)
+
+    next_phase = jnp.where(
+        no_left | (local & ok), BG_SWITCH_REG,
+        jnp.where(remote, BG_SWITCH_ST_WAIT, bg.phase))
+    bg = bg._replace(phase=next_phase)
+    return state, bg, outbox, count
+
+
+def switch_reg(state, bg, me, slot_id, outbox, count, cfg):
+    """Alg. 5 Lines 281-284: update own registry, broadcast SwitchServer."""
+    reg = state.registry
+    e = U.entry_by_keymax(reg, bg.entry_key)
+    eidx = jnp.clip(e, 0, None)
+    keymin = reg.keymin[eidx]
+    new_reg = reg_ops.set_fields(reg, eidx, subhead=bg.sh_star,
+                                 subtail=bg.st_star, ctr=0, offset=0)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(e >= 0, b, a), reg, new_reg))
+
+    row = M.make_row(M.MSG_SWITCH_SERVER, 0, me, key=keymin,
+                     x1=bg.entry_key, ref1=M.ref2i(bg.sh_star),
+                     x3=M.ref2i(bg.st_star))
+
+    def send(i, oc):
+        ob, ct = oc
+        return M.push(ob, ct, row.at[M.F_DST].set(i), (e >= 0) & (i != me))
+
+    outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
+                                      (outbox, count))
+    bg = bg._replace(phase=BG_QUAR, quar_round=bg.round)
+    return state, bg, outbox, count
+
+
+def quarantine(state, bg, me, slot_id, outbox, count, cfg):
+    """Free the stale source chain (interior only — the old SubHead keeps
+    forwarding via newLoc; the epoch-based analogue of hazard pointers)."""
+    due = bg.round - bg.quar_round >= cfg.quarantine_rounds
+    pool = state.pool
+    n = pool.key.shape[0]
+
+    def cond(c):
+        flist, ftop, idx, steps, done = c
+        return due & (~done) & (steps < cfg.max_scan)
+
+    def body(c):
+        flist, ftop, idx, steps, _ = c
+        at_st = pool.key[idx] == ST_KEY
+        pos = jnp.clip(ftop, 0, flist.shape[0] - 1)
+        flist = flist.at[pos].set(idx)
+        ftop = ftop + 1
+        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
+        return flist, ftop, nxt, steps + 1, at_st
+
+    start = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[bg.old_head])),
+                     0, n - 1)
+    flist, ftop, _, _, _ = jax.lax.while_loop(
+        cond, body,
+        (state.free_list, state.free_top, start,
+         jnp.zeros((), jnp.int32), jnp.asarray(False)))
+    state = state._replace(
+        free_list=jnp.where(due, flist, state.free_list),
+        free_top=jnp.where(due, ftop, state.free_top))
+    bg = bg._replace(phase=jnp.where(due, BG_IDLE, bg.phase))
+    return state, bg, outbox, count

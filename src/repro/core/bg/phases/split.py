@@ -1,0 +1,125 @@
+"""Split phases (§5.3): insert the ST-SH block, stabilize, register."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ... import messages as M
+from ... import refs, registry as reg_ops
+from ...types import SH_KEY, ST_KEY
+from .. import util as U
+from ..fsm import BG_IDLE, BG_SPLIT_WAIT
+
+
+def split_exec(state, bg, me, slot_id, outbox, count, cfg):
+    """Split steps 1-3 (§5.3): insert the ST-SH block, repoint counters."""
+    reg = state.registry
+    e = U.entry_by_keymax(reg, bg.entry_key)
+    eidx = jnp.clip(e, 0, None)
+    sitem = jnp.clip(bg.sitem, 0, state.pool.key.shape[0] - 1)
+    sitem_key = state.pool.key[sitem]
+    valid = (e >= 0) & (refs.ref_sid(reg.subhead[eidx]) == me) & \
+        (~refs.ref_mark(state.pool.nxt[sitem])) & \
+        (state.pool.ctr[sitem] == reg.ctr[eidx]) & \
+        (sitem_key > reg.keymin[eidx]) & (sitem_key < reg.keymax[eidx]) & \
+        (state.pool.key[sitem] != SH_KEY) & (state.pool.key[sitem] != ST_KEY)
+
+    new_slot = state.ctr_top
+    slot_ok = new_slot < state.stct.shape[0]
+    old_slot = reg.ctr[eidx]
+
+    state2 = state._replace(ctr_top=new_slot + 1)
+    state2, st_idx, ok1 = U.alloc_node(state2)
+    state2, sh_idx, ok2 = U.alloc_node(state2)
+    ok = valid & slot_ok & ok1 & ok2
+
+    pool = state2.pool
+    old_next = pool.nxt[sitem]          # unmarked by ``valid``
+    ts1 = state2.ts_clock
+    pool = pool._replace(
+        key=U.set_at(U.set_at(pool.key, st_idx, ST_KEY, ok), sh_idx, SH_KEY,
+                     ok),
+        keymax=U.set_at(pool.keymax, st_idx, sitem_key, ok),
+        ctr=U.set_at(U.set_at(pool.ctr, st_idx, old_slot, ok), sh_idx,
+                     new_slot, ok),
+        sid=U.set_at(U.set_at(pool.sid, st_idx, me, ok), sh_idx, me, ok),
+        ts=U.set_at(U.set_at(pool.ts, st_idx, ts1, ok), sh_idx, ts1 + 1, ok),
+        newloc=U.set_at(U.set_at(pool.newloc, st_idx, refs.null_ref(), ok),
+                        sh_idx, refs.null_ref(), ok),
+    )
+    # ST -> SH -> old next; then CAS sItem.next := ST (Lines 131-139)
+    pool = pool._replace(nxt=U.set_at(pool.nxt, sh_idx, old_next, ok))
+    pool = pool._replace(
+        nxt=U.set_at(pool.nxt, st_idx, refs.make_ref(me, sh_idx), ok))
+    pool = pool._replace(
+        nxt=U.set_at(pool.nxt, sitem, refs.make_ref(me, st_idx), ok))
+    state2 = state2._replace(pool=pool, ts_clock=ts1 + 2)
+
+    # repoint counter pointers of the right half (Lines 140-146),
+    # old-subtail included
+    n = pool.key.shape[0]
+
+    def cond2(c):
+        ctr_col, idx, steps, done = c
+        return (~done) & (steps < cfg.max_scan)
+
+    def body2(c):
+        ctr_col, idx, steps, _ = c
+        ctr_col = ctr_col.at[idx].set(new_slot)
+        at_st = pool.key[idx] == ST_KEY
+        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
+        return ctr_col, jnp.where(at_st, idx, nxt), steps + 1, at_st
+
+    start = jnp.clip(refs.ref_idx(refs.unmarked(old_next)), 0, n - 1)
+    ctr_col, _, _, _ = jax.lax.while_loop(
+        cond2, body2,
+        (state2.pool.ctr, start, jnp.zeros((), jnp.int32),
+         jnp.asarray(False)))
+    state2 = state2._replace(pool=state2.pool._replace(
+        ctr=jnp.where(ok, ctr_col, state2.pool.ctr)))
+
+    state = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(ok, b, a), state, state2)
+    bg = bg._replace(
+        phase=jnp.where(ok, BG_SPLIT_WAIT, BG_IDLE),
+        new_slot=jnp.where(ok, new_slot, bg.new_slot),
+        old_slot=jnp.where(ok, old_slot, bg.old_slot),
+        split_key=jnp.where(ok, sitem_key, bg.split_key),
+        sh_new=jnp.where(ok, sh_idx, bg.sh_new),
+        st_new=jnp.where(ok, st_idx, bg.st_new),
+        old_keymax=jnp.where(ok, reg.keymax[eidx], bg.old_keymax))
+    return state, bg, outbox, count
+
+
+def split_wait(state, bg, me, slot_id, outbox, count, cfg):
+    """Split step 4 (Lines 147-157): offset stabilization + registry COW."""
+    reg = state.registry
+    e = U.entry_by_keymax(reg, bg.entry_key)
+    eidx = jnp.clip(e, 0, None)
+    a1 = state.stct[bg.new_slot] - state.endct[bg.new_slot]
+    a2 = state.stct[bg.old_slot] - state.endct[bg.old_slot]
+    stable = (e >= 0) & (a1 + a2 == reg.offset[eidx]) & \
+        (reg.size < reg.keymin.shape[0])
+
+    old_subtail = reg.subtail[eidx]
+    sh_ref = refs.make_ref(me, bg.sh_new)
+    st_ref = refs.make_ref(me, bg.st_new)
+    new_reg = reg_ops.add_entry(
+        reg_ops.set_fields(reg, eidx, keymax=bg.split_key, subtail=st_ref,
+                           offset=a2),
+        bg.split_key, bg.old_keymax, sh_ref, old_subtail, bg.new_slot, a1)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(stable, b, a), reg, new_reg))
+
+    row = M.make_row(M.MSG_REG_SPLIT, 0, me, key=bg.split_key,
+                     x1=bg.old_keymax, ref1=M.ref2i(sh_ref))
+
+    def send(i, oc):
+        ob, ct = oc
+        r = row.at[M.F_DST].set(i)
+        return M.push(ob, ct, r, stable & (i != me))
+
+    outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
+                                      (outbox, count))
+    bg = bg._replace(phase=jnp.where(stable, BG_IDLE, bg.phase))
+    return state, bg, outbox, count

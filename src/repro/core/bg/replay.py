@@ -1,0 +1,227 @@
+"""Vectorized replay of a round's batched MoveItem runs (DESIGN.md §10).
+
+The source's pipelined copy phase ships each sublist as chain-contiguous
+runs of ``MSG_MOVE_ITEMS`` rows (K per round per slot). Per-channel FIFO
+keeps each (src, slot) run's rows in send order inside the inbox, so the
+target can replay a whole run with *one* identity walk (find the run
+head's predecessor copy) plus *one* scatter splice — batched node
+allocation (``batch_apply.batched_alloc``), one column scatter, one
+relink — instead of K serial ``replay_insert`` walks through the row
+loop.
+
+Why the splice equals K serial replays: Replay (Lines 249-262) inserts
+item_j after its predecessor's copy, before the first node whose
+ts < comp_ts_j (comp_ts_j = the predecessor's ts, carried in F_X3). For a
+contiguous run spliced after ``prev``, every item's walk starts at the
+same successor node ``old_next`` (each item's predecessor copy is the
+node the previous item just created, whose next is ``old_next``), so the
+serial outcome is "all K directly in run order" exactly when
+``old_next`` is the SubTail or ts(old_next) < min_j comp_ts_j — the
+eligibility screen below. Anything else (run head's predecessor not yet
+here, broken contiguity from interleaved retries, a racing replicate
+with a fresh timestamp sitting at the splice point, allocator pressure)
+bounces the whole run to the serial ``h_move_item`` handler, which is
+the exact per-item algorithm with its own retry loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import messages as M
+from .. import refs
+from ..batch_apply import batched_alloc
+from ..types import DiLiConfig, ST_KEY, ShardState
+from .fsm import FL_MARKED, FL_ST
+
+# bounce the pre-pass wholesale above this many move rows in one round
+# (inboxes are sized for all-to-all fan-in; real rounds carry at most
+# num_shards * bg_slots * move_batch rows plus retries)
+_MAX_LANES = 128
+
+# alloc slack left for the serial path (it owns pool-exhaustion edges)
+_ALLOC_HEADROOM = 8
+
+
+class ReplayOut(NamedTuple):
+    state: ShardState
+    handled: jnp.ndarray     # bool[R] — rows applied here (skip serially)
+    outbox: jnp.ndarray
+    count: jnp.ndarray
+
+
+def replay_prepass(state: ShardState, rows, me, outbox, count,
+                   cfg: DiLiConfig) -> ReplayOut:
+    """Apply the round's eligible MSG_MOVE_ITEMS runs in one sweep."""
+    me = jnp.asarray(me, jnp.int32)
+    R = rows.shape[0]
+    zb = jnp.zeros((R,), bool)
+    if not cfg.move_fastpath:
+        return ReplayOut(state, zb, outbox, count)
+
+    is_mv = rows[:, M.F_KIND] == M.MSG_MOVE_ITEMS
+    n_mv = jnp.sum(is_mv.astype(jnp.int32))
+    k = min(R, _MAX_LANES)
+    gate = (n_mv > 0) & (n_mv <= k)
+
+    def run(_):
+        pool = state.pool
+        cap = pool.key.shape[0]
+        # compact move rows into k lanes, keeping inbox (channel) order
+        sel = jnp.argsort((~is_mv).astype(jnp.int32) * R
+                          + jnp.arange(R, dtype=jnp.int32))[:k]
+        live0 = is_mv[sel]
+        r0 = rows[sel]
+        # group by (src, slot): per-channel FIFO makes each run contiguous
+        # in inbox order once lanes are sorted by group
+        big = jnp.iinfo(jnp.int32).max
+        gkey = jnp.where(live0,
+                         r0[:, M.F_SRC] * cfg.bg_slots
+                         + jnp.clip(r0[:, M.F_SLOT], 0, cfg.bg_slots - 1),
+                         big)
+        s2 = jnp.lexsort((jnp.arange(k, dtype=jnp.int32), gkey))
+        g = gkey[s2]
+        rf = r0[s2]
+        live = live0[s2]
+        start_any = jnp.concatenate(
+            [jnp.ones((1,), bool), g[1:] != g[:-1]])
+        sid_g = jnp.cumsum(start_any.astype(jnp.int32)) - 1
+
+        # contiguity: every non-head lane's predecessor identity must be
+        # the previous lane's item identity
+        psid, pts = rf[:, M.F_X2], rf[:, M.F_X3]
+        isid, its = rf[:, M.F_SID], rf[:, M.F_TS]
+        prev_ok = jnp.concatenate([
+            jnp.ones((1,), bool),
+            (psid[1:] == isid[:-1]) & (pts[1:] == its[:-1])])
+        cont = start_any | prev_ok
+        no_st = (rf[:, M.F_A] & FL_ST) == 0
+
+        # ---- one lock-step identity walk finds every run head's
+        # predecessor copy (only head lanes matter; others ride inertly)
+        anchor = jnp.clip(refs.ref_idx(M.i2ref(rf[:, M.F_REF1])), 0, cap - 1)
+
+        def wcond(c):
+            idx, steps, done = c
+            return (~jnp.all(done)) & (steps < cfg.max_scan)
+
+        def wbody(c):
+            idx, steps, done = c
+            hit = (pool.sid[idx] == psid) & (pool.ts[idx] == pts)
+            at_end = (pool.key[idx] == ST_KEY) | \
+                (refs.is_null(pool.nxt[idx]) & ~hit)
+            nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])),
+                           0, cap - 1)
+            idx = jnp.where(done | hit | at_end, idx, nxt)
+            return idx, steps + 1, done | hit | at_end
+
+        hit0 = (pool.sid[anchor] == psid) & (pool.ts[anchor] == pts)
+        widx, _, _ = jax.lax.while_loop(
+            wcond, wbody, (anchor, jnp.zeros((), jnp.int32), hit0 | ~live))
+        found = (pool.sid[widx] == psid) & (pool.ts[widx] == pts)
+
+        # ---- per-run aggregates (segments of the lane axis)
+        pos = jnp.arange(k, dtype=jnp.int32)
+        lead = jnp.clip(jax.ops.segment_min(pos, sid_g, num_segments=k),
+                        0, k - 1)
+        lastp = jnp.clip(jax.ops.segment_max(pos, sid_g, num_segments=k),
+                         0, k - 1)
+        lead_lane = lead[sid_g]                  # run head lane, per lane
+        prev_copy = widx[lead_lane]
+        seg_found = found[lead_lane]
+        seg_cont = jax.ops.segment_min(cont.astype(jnp.int32), sid_g,
+                                       num_segments=k)[sid_g] > 0
+        seg_no_st = jax.ops.segment_min(no_st.astype(jnp.int32), sid_g,
+                                        num_segments=k)[sid_g] > 0
+
+        # splice point: prev_copy's successor must be the SubTail or older
+        # than every comp_ts of the run (else serial replay would walk
+        # past it — bounce)
+        old_word = pool.nxt[prev_copy]
+        old_ref = refs.unmarked(old_word)
+        old_local = (~refs.is_null(old_ref)) & (refs.ref_sid(old_ref) == me)
+        old_idx = jnp.clip(refs.ref_idx(old_ref), 0, cap - 1)
+        min_comp = jax.ops.segment_min(
+            jnp.where(live, pts, big), sid_g, num_segments=k)[sid_g]
+        splice_ok = old_local & ((pool.key[old_idx] == ST_KEY)
+                                 | (pool.ts[old_idx] < min_comp))
+
+        elig = live & seg_found & seg_cont & seg_no_st & splice_ok
+
+        # distinct-splice screen: two runs claiming one predecessor copy
+        # would make the relink scatter order-dependent — claimed entries
+        # are disjoint, so this never fires in healthy rounds; bounce both
+        # if it somehow does
+        is_head = start_any & live
+        claim = jnp.where(elig & is_head, prev_copy,
+                          cap + jnp.arange(k, dtype=jnp.int32))
+        sc = jnp.sort(claim)
+        dup = (jnp.searchsorted(sc, claim, side="right")
+               - jnp.searchsorted(sc, claim, side="left")) >= 2
+        seg_dup = jax.ops.segment_max(dup.astype(jnp.int32), sid_g,
+                                      num_segments=k)[sid_g] > 0
+        elig = elig & (~seg_dup)
+
+        # allocator pressure: bounce wholesale near the edge — the serial
+        # path owns RES_POOLFULL / retry semantics
+        room = state.free_top + (cap - state.alloc_top)
+        n_want = jnp.sum(elig.astype(jnp.int32))
+        elig = elig & ((n_want + _ALLOC_HEADROOM) <= room)
+
+        # ---- batched alloc + one splice scatter
+        new_idx, _, _, free_top2, alloc_top2 = batched_alloc(state, elig)
+        marked = (rf[:, M.F_A] & FL_MARKED) != 0
+        is_last = pos == lastp[sid_g]
+        next_new = jnp.concatenate([new_idx[1:], new_idx[:1]])
+        succ_ref = jnp.where(is_last, old_ref,
+                             refs.make_ref(me, next_new))
+        node_nxt = refs.with_mark(succ_ref, marked)
+
+        drop = cap
+        at = jnp.where(elig, new_idx, drop)
+        pool2 = pool._replace(
+            key=pool.key.at[at].set(rf[:, M.F_KEY], mode="drop"),
+            ts=pool.ts.at[at].set(its, mode="drop"),
+            sid=pool.sid.at[at].set(isid, mode="drop"),
+            ctr=pool.ctr.at[at].set(pool.ctr[prev_copy], mode="drop"),
+            newloc=pool.newloc.at[at].set(refs.null_ref(), mode="drop"),
+            keymax=pool.keymax.at[at].set(rf[:, M.F_VAL], mode="drop"),
+        )
+        nxt = pool2.nxt.at[at].set(node_nxt, mode="drop")
+        # relink each run's predecessor copy, preserving its own mark
+        head_at = jnp.where(elig & is_head, prev_copy, drop)
+        prev_mark = old_word & jnp.uint32(refs.MARK_BIT)
+        nxt = nxt.at[head_at].set(refs.make_ref(me, new_idx) | prev_mark,
+                                  mode="drop")
+        pool2 = pool2._replace(nxt=nxt)
+
+        # §8 Lamport bump past everything absorbed
+        max_ts = jnp.max(jnp.where(elig, its, jnp.iinfo(jnp.int32).min))
+        clock2 = jnp.maximum(state.ts_clock, max_ts + 1)
+
+        st2 = state._replace(pool=pool2, free_top=free_top2,
+                             alloc_top=alloc_top2, ts_clock=clock2)
+
+        # ---- acks, in lane (channel) order
+        def push_ack(i, oc):
+            ob, ct = oc
+            ack = M.make_row(
+                M.MSG_MOVE_ACK, rf[i, M.F_SRC], me,
+                ref1=M.ref2i(refs.make_ref(me, new_idx[i])),
+                sid=isid[i], ts=its[i], x1=rf[i, M.F_X1], a=rf[i, M.F_A],
+                slot=rf[i, M.F_SLOT])
+            return M.push(ob, ct, ack, elig[i])
+
+        ob2, ct2 = jax.lax.fori_loop(0, k, push_ack, (outbox, count))
+
+        handled_sel = jnp.zeros((k,), bool).at[s2].set(elig)
+        handled = zb.at[sel].set(handled_sel)
+        return st2, handled, ob2, ct2
+
+    def skip(_):
+        return state, zb, outbox, count
+
+    st, handled, ob, ct = jax.lax.cond(gate, run, skip, None)
+    return ReplayOut(state=st, handled=handled, outbox=ob, count=ct)

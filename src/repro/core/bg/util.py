@@ -1,0 +1,143 @@
+"""Shared helpers for the background engine: identity walks, the serial
+Replay insert (Lines 249-262), allocation, and registry lookups.
+
+Replay is implemented faithfully: items are identified by their <sId, ts>
+tuple; an insert replays before the first node whose ts is smaller than the
+inserted item's comparison timestamp (Lemmas 8/9). One adaptation
+(DESIGN.md §8): the receiving shard Lamport-bumps its logical clock on
+every replayed/moved item (clock = max(clock, item_ts + 1)) so that
+timestamps stay comparable across repeated moves of the same sublist —
+x86 DiLi gets this for free only until a sublist changes clock domain
+twice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import refs, registry as reg_ops
+from ..types import DiLiConfig, ST_KEY, ShardState
+
+
+def cover(reg, key):
+    return reg_ops.get_by_key(reg, key)
+
+
+def entry_by_keymax(reg, keymax):
+    """Entry whose keymax equals ``keymax`` (the bg op's stable handle)."""
+    e = cover(reg, keymax)
+    ok = (e >= 0) & (reg.keymax[jnp.clip(e, 0, None)] == keymax)
+    return jnp.where(ok, e, -1)
+
+
+def alloc_node(state: ShardState):
+    has_free = state.free_top > 0
+    free_idx = state.free_list[jnp.clip(state.free_top - 1, 0, None)]
+    bump_ok = state.alloc_top < state.pool.key.shape[0]
+    idx = jnp.where(has_free, free_idx, state.alloc_top)
+    ok = has_free | bump_ok
+    state = state._replace(
+        free_top=state.free_top - has_free.astype(jnp.int32),
+        alloc_top=state.alloc_top + ((~has_free) & bump_ok).astype(jnp.int32))
+    return state, jnp.where(ok, idx, 0), ok
+
+
+def set_at(col, idx, val, do):
+    return jnp.where(do, col.at[idx].set(val), col)
+
+
+def lamport(state: ShardState, ts):
+    return state._replace(ts_clock=jnp.maximum(state.ts_clock, ts + 1))
+
+
+def find_by_identity(state: ShardState, start_idx, sid, ts, bound):
+    """Walk the chain from ``start_idx`` for the node with <sId, ts>.
+
+    Returns (idx, found). Stops at SubTail / null / ``bound`` steps.
+    Used by Replay (Lines 227-230) and RepDelete (Lines 232-234).
+    """
+    pool = state.pool
+    n = pool.key.shape[0]
+
+    def cond(c):
+        idx, steps, done = c
+        return (~done) & (steps < bound)
+
+    def body(c):
+        idx, steps, _ = c
+        hit = (pool.sid[idx] == sid) & (pool.ts[idx] == ts)
+        at_end = (pool.key[idx] == ST_KEY) | \
+                 refs.is_null(pool.nxt[idx]) & ~hit
+        nxt_idx = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[idx])), 0, n - 1)
+        idx2 = jnp.where(hit | at_end, idx, nxt_idx)
+        return idx2, steps + 1, hit | at_end
+
+    idx0 = jnp.clip(start_idx, 0, n - 1)
+    hit0 = (pool.sid[idx0] == sid) & (pool.ts[idx0] == ts)
+    idx, _, done = jax.lax.while_loop(
+        cond, body, (idx0, jnp.zeros((), jnp.int32), hit0))
+    found = (pool.sid[idx] == sid) & (pool.ts[idx] == ts)
+    return idx, found
+
+
+def replay_insert(state: ShardState, me, prev_idx, comp_ts, key, item_sid,
+                  item_ts, is_marked, cfg: DiLiConfig, value=0):
+    """Replay algorithm Lines 249-262: insert after ``prev``, before the
+    first node whose ts < comp_ts. Returns (state, new_idx, ok)."""
+    pool = state.pool
+    n = pool.key.shape[0]
+
+    def cond(c):
+        curr_prev, curr, steps = c
+        go = (pool.ts[curr] >= comp_ts) & (pool.key[curr] != ST_KEY)
+        return go & (steps < cfg.max_scan)
+
+    def body(c):
+        curr_prev, curr, steps = c
+        nxt = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[curr])), 0, n - 1)
+        return curr, nxt, steps + 1
+
+    first = jnp.clip(refs.ref_idx(refs.unmarked(pool.nxt[prev_idx])), 0, n - 1)
+    curr_prev, curr, _ = jax.lax.while_loop(
+        cond, body, (prev_idx, first, jnp.zeros((), jnp.int32)))
+
+    state, new_idx, ok = alloc_node(state)
+    pool = state.pool
+    prev_nxt = pool.nxt[curr_prev]
+    prev_mark = prev_nxt & jnp.uint32(refs.MARK_BIT)
+    item_next = refs.with_mark(refs.make_ref(me, curr), is_marked)
+
+    pool = pool._replace(
+        key=set_at(pool.key, new_idx, key, ok),
+        ts=set_at(pool.ts, new_idx, item_ts, ok),
+        sid=set_at(pool.sid, new_idx, item_sid, ok),
+        ctr=set_at(pool.ctr, new_idx, pool.ctr[curr_prev], ok),
+        newloc=set_at(pool.newloc, new_idx, refs.null_ref(), ok),
+        keymax=set_at(pool.keymax, new_idx, value, ok),
+    )
+    pool = pool._replace(nxt=set_at(pool.nxt, new_idx, item_next, ok))
+    # Line 260: preserve currPrev's own deletion mark when relinking.
+    pool = pool._replace(nxt=set_at(
+        pool.nxt, curr_prev, refs.make_ref(me, new_idx) | prev_mark, ok))
+    state = state._replace(pool=pool)
+    state = lamport(state, item_ts)
+    return state, new_idx, ok
+
+
+def switch_next_st(state, me, keymin, new_sh):
+    """switchNextST (Lines 297-302) on the local shard. Returns (state, ok)."""
+    reg = state.registry
+    left = reg_ops.get_by_key(reg, keymin)
+    lidx = jnp.clip(left, 0, None)
+    owner_ok = (left >= 0) & (refs.ref_sid(reg.subhead[lidx]) == me)
+    st_idx = refs.ref_idx(reg.subtail[lidx])
+    st_idx = jnp.clip(st_idx, 0, state.pool.key.shape[0] - 1)
+    slot = state.pool.ctr[st_idx]
+    state = state._replace(
+        stct=jnp.where(owner_ok, state.stct.at[slot].add(1), state.stct))
+    live = owner_ok & (state.stct[slot] >= 0)
+    state = state._replace(pool=state.pool._replace(
+        nxt=set_at(state.pool.nxt, st_idx, new_sh, live)))
+    state = state._replace(
+        endct=jnp.where(live, state.endct.at[slot].add(1), state.endct))
+    return state, live

@@ -23,7 +23,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from . import background as B
+from . import bg as B
 from . import messages as M
 from .shard import shard_round
 from .types import DiLiConfig, ShardState
@@ -62,7 +62,7 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
     All arguments are stacked over the leading shard axis and sharded over
     the mesh's flattened device axes. ``comp_src`` is the shard that
     executed each completed op (route-correction feedback for the client
-    API). ``stats`` is int32[4] per shard, computed on-device so the host
+    API). ``stats`` is int32[6] per shard, computed on-device so the host
     driver never pulls the routed inbox:
 
       0  out_count — attempted outbox pushes (detects ``bucket_by_dst``
@@ -70,6 +70,9 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
       1  live rows routed to this shard (quiescence signal)
       2  delegated MSG_OP rows routed to this shard
       3  max delegation-hop count among those rows
+      4  background slots still busy after the round (quiescence +
+         rebalance-concurrency signal)
+      5  MoveItems replayed by the batched scatter splice this round
     """
     num = cfg.num_shards
     assert num == mesh.devices.size, (num, mesh.devices.size)
@@ -96,6 +99,8 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
             jnp.sum(live).astype(jnp.int32),
             jnp.sum(is_op).astype(jnp.int32),
             jnp.max(jnp.where(is_op, rows[:, M.F_X2], 0)).astype(jnp.int32),
+            out.bg_active,
+            out.move_hits,
         ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),
@@ -124,7 +129,7 @@ def service_input_specs(cfg: DiLiConfig, num_shards: int, in_cap: int):
     """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
     from .types import init_shard
     proto_state = jax.eval_shape(lambda: init_shard(cfg, 0))
-    proto_bg = jax.eval_shape(B.init_bg)
+    proto_bg = jax.eval_shape(lambda: B.init_bg_table(cfg))
 
     def stackit(sds):
         return jax.ShapeDtypeStruct((num_shards,) + sds.shape, sds.dtype)

@@ -31,6 +31,12 @@ MSG_SWITCH_ST_ACK = 12
 MSG_REG_SPLIT = 13      # RegisterSublist broadcast after Split        L159
 MSG_SWITCH_SERVER = 14  # SwitchServer registry update broadcast       L285
 MSG_REG_MERGED = 15     # RegisterMergedSublist broadcast              L360
+MSG_MOVE_ITEMS = 16     # MoveItem batch member: one row of a chain-
+                        # contiguous run the target may replay in a
+                        # single scatter sweep (DESIGN.md §10); field
+                        # layout is identical to MSG_MOVE_ITEM, so the
+                        # serial handler is the universal fallback
+N_KINDS = 17            # dispatch-table size (shard_round lax.switch)
 
 # ---------------------------------------------------------------- layout
 # field meanings are per-kind; see docstrings at the emit sites.
@@ -47,7 +53,10 @@ F_X2 = 9       # hops / prev_sid / ok flag
 F_X3 = 10      # prev_ts / secondary ref (bitcast)
 F_X4 = 11      # spare (client slot for MSG_OP)
 F_VAL = 12     # item payload value (page slot etc.) — rides with inserts
-FIELDS = 13
+F_SLOT = 13    # background slot id (BgTable row) a move/switch message
+               # belongs to; echoed by acks so concurrent background ops
+               # on one shard credit the right slot
+FIELDS = 14
 
 MSG_DTYPE = jnp.int32
 
@@ -85,6 +94,7 @@ def push(outbox, count, row, do: bool | jnp.ndarray = True):
 
 
 def make_row(kind, dst, src, *, a=0, key=0, ref1=0, sid=0, ts=0,
-             x1=0, x2=0, x3=0, x4=0, val=0):
-    vals = [kind, dst, src, a, key, ref1, sid, ts, x1, x2, x3, x4, val]
+             x1=0, x2=0, x3=0, x4=0, val=0, slot=0):
+    vals = [kind, dst, src, a, key, ref1, sid, ts, x1, x2, x3, x4, val,
+            slot]
     return jnp.stack([jnp.asarray(v, MSG_DTYPE) for v in vals])

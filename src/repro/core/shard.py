@@ -1,4 +1,6 @@
-"""One shard's round: process inbox, apply client ops, advance background op.
+"""One shard's round: process inbox, apply client ops, advance the
+background slot table (up to ``cfg.bg_slots`` concurrent Split/Move/Merge
+ops per shard — DESIGN.md §10).
 
 The round is the unit of linearization (DESIGN.md §2). Handlers are
 dispatched per message kind with ``lax.switch`` — a single jit compilation
@@ -25,8 +27,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import background as B
 from . import batch_apply as BA
+from . import bg as B
 from . import messages as M
 from . import ops as O
 from .types import DiLiConfig, RES_PENDING, ShardState
@@ -34,7 +36,7 @@ from .types import DiLiConfig, RES_PENDING, ShardState
 
 class RoundOut(NamedTuple):
     state: ShardState
-    bg: B.BgState
+    bg: B.BgTable
     outbox: jnp.ndarray      # [cap, FIELDS]
     out_count: jnp.ndarray
     comp_slot: jnp.ndarray   # [K] client slots completed this round (-1 pad)
@@ -46,6 +48,9 @@ class RoundOut(NamedTuple):
                              # registry cache; DESIGN.md §9)
     fast_hits: jnp.ndarray   # int32 — finds answered by the fast-path
     mut_hits: jnp.ndarray    # int32 — mutations applied by the fast-path
+    bg_active: jnp.ndarray   # int32 — background slots busy after the round
+    move_hits: jnp.ndarray   # int32 — MoveItems replayed by the batched
+                             # scatter splice (vs the serial walk)
 
 
 def _handle_op(state, bg, me, row, outbox, count, cfg):
@@ -89,6 +94,9 @@ _HANDLERS = {
     M.MSG_MOVE_SH: _wrap_bg(B.h_move_sh),
     M.MSG_MOVE_SH_ACK: _wrap_bg(B.h_move_sh_ack),
     M.MSG_MOVE_ITEM: _wrap_bg(B.h_move_item),
+    # batch-run member the replay pre-pass bounced: same field layout, so
+    # the serial per-item replay is the universal fallback
+    M.MSG_MOVE_ITEMS: _wrap_bg(B.h_move_item),
     M.MSG_MOVE_ACK: _wrap_bg(B.h_move_ack),
     M.MSG_SWITCH_ST: _wrap_bg(B.h_switch_st),
     M.MSG_SWITCH_ST_ACK: _wrap_bg(B.h_switch_st_ack),
@@ -96,11 +104,11 @@ _HANDLERS = {
     M.MSG_SWITCH_SERVER: _wrap_bg(B.h_switch_server),
     M.MSG_REG_MERGED: _wrap_bg(B.h_reg_merged),
 }
-_N_KINDS = 16
+_N_KINDS = M.N_KINDS
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
+def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
                 cfg: DiLiConfig) -> RoundOut:
     """``inbox``/``client``: [*, FIELDS] int32 rows, MSG_NONE-padded."""
     me = jnp.asarray(me, jnp.int32)
@@ -117,6 +125,16 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
                            run_mut=cfg.mut_fastpath)
     state = pre.state
 
+    # migration rounds get their own pre-pass (mutually exclusive with the
+    # client one — any move row makes the round non-benign for §4/§4b):
+    # chain-contiguous MSG_MOVE_ITEMS runs are replayed in one scatter
+    # splice and their MOVE_ACKs pushed ahead of the serial rows'
+    # messages. Acks interact with the source only through per-slot
+    # counters and newLoc writes, so their position among the round's
+    # other outbox rows is not semantically ordered (DESIGN.md §10).
+    mrp = B.replay_prepass(state, rows, me, outbox, count, cfg)
+    state, outbox, count = mrp.state, mrp.outbox, mrp.count
+
     # Stable-partition the rows the serial pass must execute to the front,
     # so it runs a *dynamic* trip count: padding costs nothing (rounds are
     # usually mostly MSG_NONE), and fast-path-answered rows never enter
@@ -125,7 +143,8 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
     # either, so removing them leaves the remaining rows' serial order (and
     # with it per-(src,dst) FIFO) intact. The composite key skip*n + i is
     # unique, so the sort is order-preserving on the kept rows.
-    skip = (rows[:, M.F_KIND] == M.MSG_NONE) | pre.find_elig | pre.mut_elig
+    skip = (rows[:, M.F_KIND] == M.MSG_NONE) | pre.find_elig \
+        | pre.mut_elig | mrp.handled
     order = jnp.argsort(skip.astype(jnp.int32) * n_rows
                         + jnp.arange(n_rows, dtype=jnp.int32))
     rows = rows[order]
@@ -172,4 +191,7 @@ def shard_round(state: ShardState, bg: B.BgState, me, inbox, client,
     return RoundOut(state=state, bg=bg, outbox=outbox, out_count=count,
                     comp_slot=cslots, comp_val=cvals, comp_src=csrcs,
                     fast_hits=jnp.sum(pre.find_elig).astype(jnp.int32),
-                    mut_hits=jnp.sum(pre.mut_elig).astype(jnp.int32))
+                    mut_hits=jnp.sum(pre.mut_elig).astype(jnp.int32),
+                    bg_active=jnp.sum(bg.phase != B.BG_IDLE)
+                    .astype(jnp.int32),
+                    move_hits=jnp.sum(mrp.handled).astype(jnp.int32))

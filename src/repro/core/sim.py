@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from . import background as B
+from . import bg as B
 from . import messages as M
 from . import refs
 from .shard import shard_round
@@ -218,7 +218,8 @@ class Cluster:
                 st.registry, key_lo - 1, key_hi,
                 refs.make_ref(0, 0), refs.make_ref(0, 1), 0, 0)
             self.states[s] = st._replace(registry=reg)
-        self.bgs: List[B.BgState] = [B.init_bg() for _ in range(self.n)]
+        self.bgs: List[B.BgTable] = [B.init_bg_table(cfg)
+                                     for _ in range(self.n)]
         self.in_cap = max(cfg.mailbox_cap * self.n, cfg.batch_size * 2)
         self.inboxes = [np.zeros((0, M.FIELDS), np.int32)
                         for _ in range(self.n)]
@@ -233,7 +234,8 @@ class Cluster:
         self.delay_prob = delay_prob
         self.rng = np.random.default_rng(seed)
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
-                      "fast_hits": 0, "mut_hits": 0, "delegated": 0}
+                      "fast_hits": 0, "mut_hits": 0, "delegated": 0,
+                      "move_hits": 0, "max_bg_active": 0}
 
     # ------------------------------------------------------------ client API
     def submit(self, shard: int, kinds: Sequence[int],
@@ -304,6 +306,9 @@ class Cluster:
             self.bgs[s] = out.bg
             self.stats["fast_hits"] += int(out.fast_hits)
             self.stats["mut_hits"] += int(out.mut_hits)
+            self.stats["move_hits"] += int(out.move_hits)
+            self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
+                                              int(out.bg_active))
             cnt = int(out.out_count)
             self.stats["max_outbox"] = max(self.stats["max_outbox"], cnt)
             if cnt > cfg.mailbox_cap:
@@ -363,14 +368,14 @@ class Cluster:
         for _ in range(max_rounds):
             self.step()
             busy = any(b.shape[0] for b in self.backlog)
-            busy = busy or any(int(bg.phase) != B.BG_IDLE for bg in self.bgs)
+            busy = busy or any(B.any_active(bg) for bg in self.bgs)
             busy = busy or bool(self._pending_ops)
             if not busy:
                 return
         raise RuntimeError(
             f"cluster did not quiesce: backlog="
             f"{[b.shape[0] for b in self.backlog]} "
-            f"bg={[int(bg.phase) for bg in self.bgs]} "
+            f"bg={[B.slot_phases(bg).tolist() for bg in self.bgs]} "
             f"pending={len(self._pending_ops)}")
 
     # ----------------------------------------------------------- inspection
@@ -392,14 +397,21 @@ class Cluster:
         return registry_entries(self.states[s])
 
     # ---------------------------------------------------------- bg commands
-    def split(self, s: int, entry_keymax: int, sitem_idx: int) -> None:
-        self.bgs[s] = B.queue_split(self.bgs[s], entry_keymax, sitem_idx)
+    # Each returns True if a slot accepted the command, False if it was
+    # dropped (no idle slot, or the entry is claimed by an in-flight op) —
+    # the balancer uses the verdict to keep its load model honest.
+    def split(self, s: int, entry_keymax: int, sitem_idx: int) -> bool:
+        self.bgs[s], ok = B.queue_split(self.bgs[s], entry_keymax, sitem_idx)
+        return bool(ok)
 
-    def move(self, s: int, entry_keymax: int, target: int) -> None:
-        self.bgs[s] = B.queue_move(self.bgs[s], entry_keymax, target)
+    def move(self, s: int, entry_keymax: int, target: int) -> bool:
+        self.bgs[s], ok = B.queue_move(self.bgs[s], entry_keymax, target)
+        return bool(ok)
 
-    def merge(self, s: int, left_keymax: int, right_keymax: int) -> None:
-        self.bgs[s] = B.queue_merge(self.bgs[s], left_keymax, right_keymax)
+    def merge(self, s: int, left_keymax: int, right_keymax: int) -> bool:
+        self.bgs[s], ok = B.queue_merge(self.bgs[s], left_keymax,
+                                        right_keymax)
+        return bool(ok)
 
     def middle_item(self, s: int, head_idx: int) -> Optional[int]:
         """Pool idx of the middle live item of a sublist (split point)."""

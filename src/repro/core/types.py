@@ -41,7 +41,14 @@ class DiLiConfig(NamedTuple):
     batch_size: int = 64             # client ops per shard per round
     mailbox_cap: int = 64            # delegation/replicate slots per shard-pair round
     split_threshold: int = 125       # the paper's load-balancer threshold (§7.1)
-    move_batch: int = 8              # MoveItem messages in flight per round
+    move_batch: int = 8              # MoveItems packed per round per slot (K)
+    bg_slots: int = 2                # concurrent background ops per shard (B):
+                                     # one BgTable row each, at most one op
+                                     # per registry entry (DESIGN.md §10)
+    move_fastpath: bool = True       # vectorized target-side replay of a
+                                     # round's chain-contiguous MOVE_ITEMS
+                                     # runs (one scatter splice instead of
+                                     # K serial replay walks)
     quarantine_rounds: int = 4       # rounds before a switched chain is freed
     max_retries: int = 64            # replay requeue bound (tests assert << this)
     find_fastpath: bool = True       # batched FIND pre-pass (DESIGN.md §4)

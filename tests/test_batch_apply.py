@@ -214,11 +214,11 @@ def test_removed_while_copy_in_flight_stays_removed():
     caught = None
     for _ in range(60):
         cl.step()
-        bg = cl.bgs[0]
+        bg = cl.bgs[0]          # slotted table; the move runs in slot 0
         ack_queued = any(int(row[M.F_KIND]) == M.MSG_MOVE_ACK
                          for row in cl.backlog[0])
-        if int(bg.phase) == B.BG_MOVE_COPY and \
-                int(bg.sent) > int(bg.acked) and not ack_queued:
+        if int(bg.phase[0]) == B.BG_MOVE_COPY and \
+                int(bg.sent[0]) > int(bg.acked[0]) and not ack_queued:
             st = cl.states[0]
             pk = np.asarray(st.pool.key)
             nl = np.asarray(st.pool.newloc)

@@ -1,0 +1,238 @@
+"""Slotted background engine: concurrent Split+Move+Merge on one shard,
+entry claims, the batched migration pipeline, and the background shim."""
+import numpy as np
+import pytest
+
+from repro.core import background as B          # the compat shim, on purpose
+from repro.core import bg
+from repro.core import messages as M
+from repro.core import refs
+from repro.core.oracle import OracleList
+from repro.core.sim import Cluster, make_op_row
+from repro.core.types import DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE
+
+
+def mkcfg(**kw):
+    base = dict(num_shards=2, pool_capacity=4096, max_sublists=32,
+                max_ctrs=32, max_scan=4096, batch_size=32, mailbox_cap=256,
+                move_batch=4, bg_slots=3)
+    base.update(kw)
+    return DiLiConfig(**base)
+
+
+def submit_and_expect(cl, oracle, shard, kinds, keys):
+    ids = cl.submit(shard, kinds, keys)
+    exp = oracle.apply_batch(kinds, keys)
+    return list(zip(ids, exp))
+
+
+def check(cl, expected):
+    for op_id, exp in expected:
+        assert op_id in cl.results, f"op {op_id} never completed"
+        got = cl.results[op_id]
+        assert got in (0, 1), f"op {op_id} error code {got}"
+        assert bool(got) == exp, f"op {op_id}: got {got}, want {exp}"
+
+
+def _grow_sublists(cl, oracle, keys, want):
+    """Insert ``keys`` then split shard 0's largest sublist until it owns
+    ``want`` sublists."""
+    exp = submit_and_expect(cl, oracle, 0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet(600)
+    check(cl, exp)
+    for _ in range(want * 2):
+        owned = [e for e in cl.sublists(0) if e["owner"] == 0]
+        if len(owned) >= want:
+            break
+        e = max(owned, key=lambda x: x["size"])
+        mid = cl.middle_item(0, e["head_idx"])
+        assert mid is not None
+        assert cl.split(0, e["keymax"], mid)
+        cl.run_until_quiet(600)
+    owned = sorted((e for e in cl.sublists(0) if e["owner"] == 0),
+                   key=lambda x: x["keymin"])
+    assert len(owned) >= want, owned
+    return owned
+
+
+@pytest.mark.parametrize("delay,move_fastpath", [
+    (0.0, True), (0.3, True), (0.3, False)])
+def test_concurrent_split_move_merge_same_shard(delay, move_fastpath):
+    """Oracle differential: one shard runs a Split, a Move and a Merge
+    in-flight *simultaneously* (3 slots) under client churn and channel
+    delays — full result parity and an identical final key set."""
+    cfg = mkcfg(move_fastpath=move_fastpath)
+    cl = Cluster(cfg, seed=11, delay_prob=delay)
+    oracle = OracleList()
+    keys = list(range(2, 242, 2))
+    owned = _grow_sublists(cl, oracle, keys, want=4)
+
+    e_merge_l, e_merge_r = owned[0], owned[1]
+    e_move, e_split = owned[2], owned[3]
+    assert e_merge_l["keymax"] == e_merge_r["keymin"]
+
+    assert cl.merge(0, e_merge_l["keymax"], e_merge_r["keymax"])
+    assert cl.move(0, e_move["keymax"], 1)
+    mid = cl.middle_item(0, e_split["head_idx"])
+    assert mid is not None
+    assert cl.split(0, e_split["keymax"], mid)
+    assert bg.free_slots(cl.bgs[0]) == 0     # all three slots busy
+
+    rng = np.random.default_rng(5)
+    all_exp = []
+    max_active = 0
+    for i in range(14):
+        kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], 8,
+                           p=[0.2, 0.4, 0.4]).tolist()
+        ks = rng.integers(1, 260, 8).tolist()
+        all_exp += submit_and_expect(cl, oracle, i % 2, kinds, ks)
+        cl.step()
+        max_active = max(max_active,
+                         int((bg.slot_phases(cl.bgs[0]) != bg.BG_IDLE).sum()))
+    cl.run_until_quiet(2000)
+
+    # the acceptance bar: at least two background ops genuinely in flight
+    # on one shard at once, with full oracle parity
+    assert max_active >= 2, max_active
+    assert cl.stats["max_bg_active"] >= 2
+    check(cl, all_exp)
+    assert cl.all_keys() == sorted(oracle.snapshot())
+    # the moved sublist switched ownership everywhere
+    movers = [e for s in range(2) for e in cl.sublists(s)
+              if e["keymax"] == e_move["keymax"]]
+    assert movers and all(e["owner"] == 1 for e in movers)
+    if move_fastpath and delay == 0.0:
+        # quiet channels: every MoveItem should ride the scatter splice
+        assert cl.stats["move_hits"] > 0
+
+
+def test_entry_claims_are_exclusive():
+    """At most one background op per registry entry: a second command on a
+    claimed entry is refused until the first completes."""
+    cfg = mkcfg()
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    owned = _grow_sublists(cl, oracle, list(range(5, 165, 2)), want=2)
+    e = owned[0]
+
+    assert cl.move(0, e["keymax"], 1)
+    # same entry: refused regardless of free slots
+    assert bg.free_slots(cl.bgs[0]) == cfg.bg_slots - 1
+    mid = cl.middle_item(0, e["head_idx"])
+    assert cl.split(0, e["keymax"], mid) is False
+    assert cl.move(0, e["keymax"], 1) is False
+    assert e["keymax"] in bg.claimed_keys(cl.bgs[0])
+    # a different entry is fair game
+    other = owned[1]
+    mid2 = cl.middle_item(0, other["head_idx"])
+    assert cl.split(0, other["keymax"], mid2)
+
+    cl.run_until_quiet(800)
+    assert bg.free_slots(cl.bgs[0]) == cfg.bg_slots
+    assert bg.claimed_keys(cl.bgs[0]) == set()
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+def test_no_free_slot_drops_command():
+    """With every slot claimed, further commands are refused (and report
+    it) instead of silently overwriting an in-flight op."""
+    cfg = mkcfg(bg_slots=1)
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    owned = _grow_sublists(cl, oracle, list(range(5, 165, 2)), want=2)
+    assert cl.move(0, owned[0]["keymax"], 1)
+    assert cl.split(0, owned[1]["keymax"],
+                    cl.middle_item(0, owned[1]["head_idx"])) is False
+    cl.run_until_quiet(800)
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+def test_move_nack_frees_slot_and_claim():
+    """A MoveSH nack (target out of counter slots) must abort the move and
+    free the slot — not wedge it in MOVE_SH_WAIT with the entry claimed
+    forever (quiescence would never clear)."""
+    import jax.numpy as jnp
+    cfg = mkcfg()
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    owned = _grow_sublists(cl, oracle, list(range(5, 105, 2)), want=1)
+    # exhaust the target's counter slots: h_move_sh must ack with a=0
+    cl.states[1] = cl.states[1]._replace(
+        ctr_top=jnp.asarray(cfg.max_ctrs, jnp.int32))
+    assert cl.move(0, owned[0]["keymax"], 1)
+    cl.run_until_quiet(400)          # would raise if the slot stayed busy
+    assert bg.free_slots(cl.bgs[0]) == cfg.bg_slots
+    assert bg.claimed_keys(cl.bgs[0]) == set()
+    # the move aborted: ownership unchanged, data intact
+    assert all(e["owner"] == 0 for e in cl.sublists(0))
+    assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+def test_stale_delegation_through_quarantine_during_batched_copy():
+    """Regression: an op carrying a stale subhead hint (the pre-Switch
+    chain) must still forward through the quarantined block via newLoc —
+    while a *second* move's batched copy is in flight on the same shard."""
+    cfg = mkcfg(quarantine_rounds=64, move_batch=8)
+    cl = Cluster(cfg)
+    oracle = OracleList()
+    owned = _grow_sublists(cl, oracle, list(range(4, 244, 3)), want=2)
+    e_a, e_b = owned[0], owned[1]
+    old_head_a = e_a["head_idx"]
+    probe_key = next(k for k in sorted(oracle.snapshot())
+                     if e_a["keymin"] < k <= e_a["keymax"])
+
+    # move A; run until its chain is switched away (stCt < 0) but still
+    # quarantined on shard 0 (quarantine_rounds is large)
+    assert cl.move(0, e_a["keymax"], 1)
+    for _ in range(200):
+        cl.step()
+        if any(e["keymax"] == e_a["keymax"] and e["switched"]
+               for e in cl.sublists(0)):
+            break
+    else:
+        pytest.fail("move A never reached the quarantine window")
+
+    # start move B: a batched copy in flight on the same shard
+    assert cl.move(0, e_b["keymax"], 1)
+
+    # inject an op whose hint is the *old* (quarantined) subhead of A —
+    # exactly what a delegation raced by the Switch would carry
+    row = make_op_row(0, OP_FIND, probe_key, 0, slot=1 << 20)
+    row[M.F_REF1] = np.int64(int(refs.make_ref(0, old_head_a))).astype(
+        np.int32)
+    cl.backlog[0] = np.concatenate([cl.backlog[0], row[None]], axis=0)
+    exp = oracle.apply(OP_FIND, probe_key)
+
+    cl.run_until_quiet(2000)
+    assert (1 << 20) in cl.results
+    assert bool(cl.results[1 << 20]) == exp is True
+    assert cl.all_keys() == sorted(oracle.snapshot())
+    for s in range(2):
+        assert all(e["owner"] == 1 for e in cl.sublists(s))
+
+
+def test_background_shim_reexports():
+    """``repro.core.background`` must keep the pre-decomposition surface:
+    old imports (tests, notebooks, downstream tools) stay working."""
+    for name in ("BgState", "BgTable", "init_bg", "init_bg_table",
+                 "bg_step", "queue_split", "queue_move", "queue_merge",
+                 "h_rep_insert", "h_rep_delete", "h_ack_insert",
+                 "h_ack_delete", "h_move_sh", "h_move_sh_ack",
+                 "h_move_item", "h_move_ack", "h_switch_st",
+                 "h_switch_st_ack", "h_reg_split", "h_switch_server",
+                 "h_reg_merged", "BG_IDLE", "BG_SPLIT_EXEC",
+                 "BG_SPLIT_WAIT", "BG_MOVE_SH", "BG_MOVE_SH_WAIT",
+                 "BG_MOVE_COPY", "BG_MOVE_STABLE", "BG_SWITCH_ST",
+                 "BG_SWITCH_ST_WAIT", "BG_SWITCH_REG", "BG_QUAR",
+                 "BG_MERGE_EXEC", "BG_MERGE_WAIT", "BG_NUM_PHASES",
+                 "FL_MARKED", "FL_ST", "any_active", "free_slots",
+                 "claimed_keys", "slot_phases"):
+        assert hasattr(B, name), f"shim lost {name}"
+        assert getattr(B, name) is getattr(bg, name), name
+    # phase ids must all fit the dispatch table (satellite: adding a phase
+    # outside the range would silently alias the no-op branch)
+    from repro.core.bg.engine import _PHASES
+    assert all(0 <= ph < B.BG_NUM_PHASES for ph in _PHASES)
+    # the slotted table really is cfg.bg_slots wide
+    cfg = mkcfg(bg_slots=5)
+    assert B.init_bg_table(cfg).phase.shape == (5,)
