@@ -7,6 +7,8 @@
   bgops  Split and Move latency under insert load (paper §C / Fig. 4)
   kernels hybrid_search + paged_attention micro-bench vs jnp reference
   lmstep small-LM train-step walltime (framework overhead sanity)
+  nemesis throughput under lossy/duplicating/reordering channels via the
+         reliable transport, vs the direct-routing baseline (DESIGN.md §11)
 
 Prints ``name,metric,value`` CSV rows; ``python -m benchmarks.run [names]``.
 Each benchmark additionally persists a ``BENCH_<name>.json`` artifact (rows
@@ -559,8 +561,55 @@ def lmstep():
     emit("lmstep", "smoke_tokens_per_s", round(tok / ms * 1e3))
 
 
+# ----------------------------------------------------------------- nemesis
+
+def nemesis(n_load=800, n_ops=1600, key_space=3000):
+    """Throughput under adversarial channels (DESIGN.md §11).
+
+    One 4-server client-driven run per fault level: ``off`` is the
+    direct-routing baseline (no transport), ``p0.00`` is the reliable
+    transport with a zero-fault wire (pure seq/ack/dedup overhead), and
+    ``p0.05`` / ``p0.20`` drop+duplicate+reorder that fraction of frames
+    (delay rides at p/2). The interesting rows are the *ratios*: what a
+    lossy fabric costs end-to-end once retransmission and dedup absorb
+    it, and how much retransmit traffic the wire added.
+    """
+    from repro.core.net import NemesisConfig
+    load_kinds, load_keys = load_phase(n_load, key_space, seed=5)
+    kinds, keys = mixed_phase(n_ops, key_space, 0.5, seed=6)
+    base = None
+    for p in (None, 0.0, 0.05, 0.20):
+        label = "off" if p is None else f"p{int(p * 100):02d}"
+        nem = None if p is None else NemesisConfig(
+            drop_prob=p, dup_prob=p, reorder_prob=p,
+            delay_prob=p / 2, delay_rounds=3)
+        backend = LocalBackend(_bench_cfg(4), seed=0, nemesis=nem)
+        # low split threshold so the load spreads across all 4 servers
+        # and the op stream actually crosses the (lossy) wire —
+        # delegations, results, move replicates and registry broadcasts
+        bal = Balancer(backend, split_threshold=max(20, n_load // 12),
+                       rng=backend.balancer_rng)
+        client = DiLiClient(backend, balance=bal)
+        _drive_client(client, load_kinds, load_keys, 64)
+        client.settle(max_rounds=8000)    # spread sublists over servers
+        r0 = backend.stats["rounds"]
+        dt = _drive_client(client, kinds, keys, 64)
+        thr = len(kinds) / dt
+        base = base or thr
+        emit("nemesis", f"{label}_ops_per_s", round(thr))
+        emit("nemesis", f"{label}_rounds", backend.stats["rounds"] - r0)
+        emit("nemesis", f"{label}_vs_off", round(thr / base, 3))
+        if nem is not None:
+            net = backend.net
+            emit("nemesis", f"{label}_retransmits", net.stats["retransmits"])
+            emit("nemesis", f"{label}_dup_dropped", net.stats["dup_dropped"])
+            emit("nemesis", f"{label}_wire_dropped",
+                 net.nemesis.stats["dropped"])
+
+
 ALL = {"fig3a": fig3a, "fig3b": fig3b, "bgops": bgops,
-       "rebalance": rebalance, "kernels": kernels, "lmstep": lmstep}
+       "rebalance": rebalance, "kernels": kernels, "lmstep": lmstep,
+       "nemesis": nemesis}
 
 # shrunken workloads for the CI smoke lane (--tiny): same code paths,
 # minutes -> seconds. Benches without parameters run as-is.
@@ -569,6 +618,7 @@ TINY = {
     "fig3b": dict(n_load=200, n_ops=400, key_space=1000),
     "bgops": dict(n_keys=300, key_space=1200),
     "rebalance": dict(n_keys=125, n_churn=200, key_space=1000),
+    "nemesis": dict(n_load=200, n_ops=400, key_space=1000),
 }
 
 

@@ -85,12 +85,16 @@ class LocalBackend:
 
     def __init__(self, cfg: Optional[DiLiConfig] = None, *,
                  cluster: Optional[Cluster] = None, seed: int = 0,
-                 delay_prob: float = 0.0,
+                 delay_prob: float = 0.0, nemesis=None,
+                 retransmit_after: int = 4, net_window: int = 4096,
                  key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
         if cluster is None:
             if cfg is None:
                 raise ValueError("LocalBackend needs a DiLiConfig or Cluster")
             cluster = Cluster(cfg, seed=seed, delay_prob=delay_prob,
+                              nemesis=nemesis,
+                              retransmit_after=retransmit_after,
+                              net_window=net_window,
                               key_lo=key_lo, key_hi=key_hi)
         self.cluster = cluster
         self.cfg = cluster.cfg
@@ -130,9 +134,21 @@ class LocalBackend:
             comps.append((op_id, val, src))
         return comps
 
+    @property
+    def net(self):
+        """The reliable transport, or None when routing is direct."""
+        return self.cluster.net
+
+    @property
+    def balancer_rng(self):
+        """Balancer child stream of the run's root SeedSequence."""
+        return self.cluster.balancer_rng
+
     def quiescent(self) -> bool:
         cl = self.cluster
         if any(b.shape[0] for b in cl.backlog):
+            return False
+        if cl.net is not None and not cl.net.idle():
             return False
         return not any(B.any_active(bg) for bg in cl.bgs)
 
@@ -190,11 +206,16 @@ class ShardMapBackend:
 
     def __init__(self, cfg: DiLiConfig, *, mesh=None,
                  cap_pair: Optional[int] = None, seed: int = 0,
+                 nemesis=None, retransmit_after: int = 4,
+                 net_window: int = 4096,
                  key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
         import jax
         import jax.numpy as jnp
         from jax.sharding import Mesh
-        from repro.core.distributed import make_dili_round, stack_states
+        from repro.core.distributed import (make_dili_round,
+                                            make_dili_round_hostroute,
+                                            stack_states)
+        from repro.core.net import Nemesis, Transport
         self._jnp = jnp
         self._jax = jax
         self.cfg = cfg
@@ -223,10 +244,34 @@ class ShardMapBackend:
         # synchronized registry replicas everywhere else
         boot = Cluster(cfg, seed=seed, key_lo=key_lo, key_hi=key_hi)
         self._states, self._bgs = stack_states(boot.states, boot.bgs)
-        self._rnd = make_dili_round(mesh, cfg, cap_pair=self.cap_pair)
-        self.in_cap = cfg.num_shards * self.cap_pair
-        self._inbox = jnp.zeros((cfg.num_shards, self.in_cap, M.FIELDS),
-                                jnp.int32)
+        # same child-stream layout as Cluster: (delay, nemesis, balancer)
+        self.seed = seed
+        root = np.random.SeedSequence(seed)
+        _, nemesis_ss, balancer_ss = root.spawn(3)
+        self.balancer_rng = np.random.default_rng(balancer_ss)
+        self.nemesis_config = nemesis
+        self.net = None
+        self.round_trace: List[str] = []
+        if nemesis is not None:
+            # nemesis lives on the wire between outboxes and inboxes, so
+            # routing crosses the host: the round skips its on-device
+            # all_to_all and the Transport does delivery
+            self.net = Transport(
+                cfg.num_shards,
+                Nemesis(nemesis, np.random.default_rng(nemesis_ss)),
+                retransmit_after=retransmit_after, window=net_window)
+            self._rnd = make_dili_round_hostroute(mesh, cfg)
+            self.in_cap = max(cfg.mailbox_cap * cfg.num_shards,
+                              cfg.batch_size * 2)
+            self._net_backlog = [np.zeros((0, M.FIELDS), np.int32)
+                                 for _ in range(cfg.num_shards)]
+        else:
+            self._rnd = make_dili_round(mesh, cfg, cap_pair=self.cap_pair)
+            self.in_cap = cfg.num_shards * self.cap_pair
+            # the persistent device inbox feeds the all_to_all round;
+            # the hostroute path builds a fresh host inbox each round
+            self._inbox = jnp.zeros(
+                (cfg.num_shards, self.in_cap, M.FIELDS), jnp.int32)
         self._inflight_msgs = 0
         self._queues: List[deque] = [deque() for _ in range(cfg.num_shards)]
         self._ids = OpIdAllocator()
@@ -251,13 +296,88 @@ class ShardMapBackend:
             ids.append(slot)
         return ids
 
-    def step(self) -> List[Completion]:
+    def _feed_client(self) -> np.ndarray:
         cfg = self.cfg
         client = np.zeros((self.n, cfg.batch_size, M.FIELDS), np.int32)
         for s in range(self.n):
             q = self._queues[s]
             for b in range(min(len(q), cfg.batch_size)):
                 client[s, b] = q.popleft()
+        return client
+
+    def _check_overflow(self, out_counts) -> None:
+        """Shared overflow discipline of both round paths (the same check
+        ``Cluster.step`` applies): a count past ``mailbox_cap`` means rows
+        were silently not stored — raise, never truncate."""
+        over = max(out_counts)
+        self.stats["max_outbox"] = max(self.stats["max_outbox"], over)
+        if over > self.cfg.mailbox_cap:
+            s = int(np.argmax(np.asarray(out_counts)))
+            raise OutboxOverflow(
+                f"shard {s} emitted {over} messages in round "
+                f"{self.round_no}, mailbox_cap={self.cfg.mailbox_cap} — "
+                f"raise mailbox_cap or reduce the per-round feed")
+
+    def _harvest(self, cs, cv, cr) -> List[Completion]:
+        """Completions of one round as (op_id, result, src) with id
+        recycling — shared by both round paths."""
+        comps: List[Completion] = []
+        cs, cv, cr = np.asarray(cs), np.asarray(cv), np.asarray(cr)
+        done = cs >= 0
+        for slot, val, src in zip(cs[done], cv[done], cr[done]):
+            comps.append((int(slot), int(val), int(src)))
+            self._ids.release(int(slot))
+        return comps
+
+    def _step_hostroute(self) -> List[Completion]:
+        """One round on the nemesis path: device round (no all_to_all),
+        host-side transport routing of the raw outboxes."""
+        from repro.core.net import trace_entry
+        cfg = self.cfg
+        client = self._feed_client()
+        inbox = np.zeros((self.n, self.in_cap, M.FIELDS), np.int32)
+        for s in range(self.n):
+            feed = self._net_backlog[s][:self.in_cap]
+            self._net_backlog[s] = self._net_backlog[s][self.in_cap:]
+            inbox[s, :feed.shape[0]] = feed
+        out = self._rnd(self._states, self._bgs,
+                        self._jnp.asarray(inbox),
+                        self._jnp.asarray(client))
+        self._states, self._bgs, outbox, cs, cv, cr, rstats = out
+        self._host_states = None
+        rstats = np.asarray(rstats)
+        out_counts = [int(c) for c in rstats[:, 0]]
+        self._check_overflow(out_counts)
+        self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
+                                          int(rstats[:, 1].max()))
+        self.stats["move_hits"] += int(rstats[:, 2].sum())
+        self.stats["fast_hits"] += int(rstats[:, 3].sum())
+        self.stats["mut_hits"] += int(rstats[:, 4].sum())
+        outbox = np.asarray(outbox)
+        per_src = []
+        for s in range(self.n):
+            rows = outbox[s][:out_counts[s]]
+            hops = rows[rows[:, M.F_KIND] == M.MSG_OP, M.F_X2]
+            if hops.size:
+                self.stats["max_hops"] = max(self.stats["max_hops"],
+                                             int(hops.max()))
+                self.stats["delegated"] += int(hops.size)
+            per_src.append((s, rows))
+        self.net.route_round(self._net_backlog, per_src, self.round_no)
+        comps = self._harvest(cs, cv, cr)
+        self.round_trace.append(trace_entry(
+            self.round_no, comps, out_counts,
+            extra=sum(b.shape[0] for b in self._net_backlog)
+            + self.net.in_flight()))
+        self.round_no += 1
+        self.stats["rounds"] += 1
+        return comps
+
+    def step(self) -> List[Completion]:
+        if self.net is not None:
+            return self._step_hostroute()
+        cfg = self.cfg
+        client = self._feed_client()
         out = self._rnd(self._states, self._bgs, self._inbox,
                         self._jnp.asarray(client))
         self._states, self._bgs, self._inbox, cs, cv, cr, rstats = out
@@ -266,14 +386,7 @@ class ShardMapBackend:
         # inbox itself never crosses to host on the hot path; see
         # make_dili_round's docstring for the lane layout)
         rstats = np.asarray(rstats)
-        over = int(rstats[:, 0].max())
-        self.stats["max_outbox"] = max(self.stats["max_outbox"], over)
-        if over > cfg.mailbox_cap:
-            s = int(rstats[:, 0].argmax())
-            raise OutboxOverflow(
-                f"shard {s} emitted {over} messages in round "
-                f"{self.round_no}, mailbox_cap={cfg.mailbox_cap} — raise "
-                f"mailbox_cap or reduce the per-round feed")
+        self._check_overflow([int(c) for c in rstats[:, 0]])
         self._inflight_msgs = int(rstats[:, 1].sum())
         self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
                                           int(rstats[:, 4].max()))
@@ -283,18 +396,20 @@ class ShardMapBackend:
             self.stats["delegated"] += delegated
             self.stats["max_hops"] = max(self.stats["max_hops"],
                                          int(rstats[:, 3].max()))
-        comps: List[Completion] = []
-        cs, cv, cr = np.asarray(cs), np.asarray(cv), np.asarray(cr)
-        done = cs >= 0
-        for slot, val, src in zip(cs[done], cv[done], cr[done]):
-            comps.append((int(slot), int(val), int(src)))
-            self._ids.release(int(slot))
+        comps = self._harvest(cs, cv, cr)
         self.round_no += 1
         self.stats["rounds"] += 1
         return comps
 
     def quiescent(self) -> bool:
-        if self._inflight_msgs or any(len(q) for q in self._queues):
+        if any(len(q) for q in self._queues):
+            return False
+        if self.net is not None:
+            if any(b.shape[0] for b in self._net_backlog):
+                return False
+            if not self.net.idle():
+                return False
+        elif self._inflight_msgs:
             return False
         phases = np.asarray(self._bgs.phase)
         return bool((phases == B.BG_IDLE).all())

@@ -99,6 +99,15 @@ class DiLiClient:
             max_inflight = max(
                 1, self.cfg.mailbox_cap - bg_budget
                 - self.cfg.num_shards - 4)
+            if getattr(backend, "net", None) is not None:
+                # Lossy-wire headroom (DESIGN.md §11): the transport can
+                # release a multi-round backlog of frames in one round
+                # (retransmit bursts after a partition heals, delayed
+                # frames coming due together), concentrating handler
+                # replies that a clean run spreads out — so in-flight ops
+                # claim only half the budget, leaving the rest for
+                # retransmit-burst fan-out.
+                max_inflight = max(1, max_inflight // 2)
         self.max_inflight = int(max_inflight)
         self._queue: deque = deque()                 # unadmitted OpFutures
         self._inflight: Dict[int, OpFuture] = {}     # op_id -> future
@@ -277,5 +286,6 @@ class DiLiClient:
 def local_client(cfg, **kw) -> DiLiClient:
     """Convenience: a ``DiLiClient`` over a fresh ``LocalBackend``."""
     backend_kw = {k: kw.pop(k) for k in
-                  ("seed", "delay_prob", "key_lo", "key_hi") if k in kw}
+                  ("seed", "delay_prob", "nemesis", "retransmit_after",
+                   "net_window", "key_lo", "key_hi") if k in kw}
     return DiLiClient(LocalBackend(cfg, **backend_kw), **kw)

@@ -18,6 +18,14 @@ transfers the sublist's size from source to target in the working
 ``loads`` snapshot, so one overloaded pass cannot dogpile every donor
 onto the same least-loaded shard.
 
+The load model reads sublist sizes and the BgTable's in-flight moves —
+state advanced by move/switch *acks*. Under a lossy wire those acks ride
+the reliable transport (DESIGN.md §11), whose per-lane dedup window
+guarantees each ack reaches its handler exactly once, so ``acked``
+counters (and with them the ``active_moves`` load discount) can never be
+double-counted by duplicated deliveries; the balancer needs no defensive
+clamping of its own.
+
 The Split/Move/Merge primitives are the *interface*; this policy is
 deliberately simple and replaceable (the paper calls for workload-specific
 balancers). ``Balancer`` is one ``BalancePolicy`` — the client driver loop
@@ -48,13 +56,19 @@ class BalancePolicy(Protocol):
 class Balancer:
     def __init__(self, cluster, *, split_threshold: Optional[int] = None,
                  move_headroom: float = 1.10, merge_threshold: int = 0,
-                 registry_headroom: int = 4):
+                 registry_headroom: int = 4, rng=None):
         self.cl = cluster
         self.split_threshold = (split_threshold if split_threshold is not None
                                 else cluster.cfg.split_threshold)
         self.move_headroom = move_headroom
         self.merge_threshold = merge_threshold
         self.registry_headroom = registry_headroom
+        # Move-target tie-break stream. None keeps the historical
+        # lowest-index tie-break; passing the backend's ``balancer_rng``
+        # (a child of the run's root SeedSequence) makes randomized
+        # policies a pure function of the run seed — required for the
+        # byte-identical (seed, config) replay contract (DESIGN.md §11).
+        self.rng = rng
 
     def _owned(self, s: int):
         return [e for e in self.cl.sublists(s) if e["owner"] == s
@@ -136,7 +150,13 @@ class Balancer:
                 cands = [e for e in entries if unclaimed(e)]
                 if not cands:
                     break
-                tgt = min(range(cl.n), key=lambda d: loads[d])
+                order = list(range(cl.n))
+                if self.rng is not None:
+                    # seeded tie-break among equally-loaded targets; the
+                    # min() below is stable, so shuffling only reorders
+                    # ties (load ranking is untouched)
+                    self.rng.shuffle(order)
+                tgt = min(order, key=lambda d: loads[d])
                 if tgt == s or loads[s] - loads[tgt] <= 1:
                     break
                 # move the sublist that best evens the load — but only

@@ -11,6 +11,14 @@ SWITCH_ST_ACK) address the slot named by the row's ``F_SLOT`` lane — the
 request carried it out, the ack echoes it back — so concurrent ops on one
 shard never credit each other's progress. Replicate/registry handlers
 (RepInsert/RepDelete/Reg*) never touch the table.
+
+Delivery contract: handlers assume exactly-once, per-(src,dst)-FIFO
+message delivery. Several are *not* duplicate-safe (the endCt bumps in
+h_ack_insert/h_ack_delete, the acked cursor in h_move_ack, whose Line-210
+race check could fire a spurious RepDelete at a live copy if re-run after
+the move completes) — under a lossy wire that contract is provided by the
+reliable transport's dedup window (core/net, DESIGN.md §11), which is why
+none of them need defensive re-delivery guards of their own.
 """
 from __future__ import annotations
 

@@ -23,6 +23,13 @@ directly with nothing in flight — then every chain node before ST has a
 newLoc, every concurrent update replicates (its left's newLoc is set),
 and no item can be missed: the same invariant the seed's stop-and-wait
 loop enforced, reached in O(1) extra rounds instead of O(n/K) ack waits.
+
+``sent``/``acked`` accounting assumes each MSG_MOVE_ITEMS row produces
+exactly one MOVE_ACK: under a lossy wire the reliable transport
+(core/net, DESIGN.md §11) retransmits lost rows and dedups duplicated
+acks, so the drained test (``sent == acked``) stays exact — a dropped
+ack cannot wedge the pipeline and a duplicated one cannot let the ST
+ship early.
 """
 from __future__ import annotations
 

@@ -2,7 +2,10 @@
 
 The source's pipelined copy phase ships each sublist as chain-contiguous
 runs of ``MSG_MOVE_ITEMS`` rows (K per round per slot). Per-channel FIFO
-keeps each (src, slot) run's rows in send order inside the inbox, so the
+keeps each (src, slot) run's rows in send order inside the inbox — under
+a lossy wire this is *provided* by the reliable transport's per-lane
+sequencing and dedup (core/net, DESIGN.md §11), so the eligibility
+screen below never sees a duplicated or reordered run row — and the
 target can replay a whole run with *one* identity walk (find the run
 head's predecessor copy) plus *one* scatter splice — batched node
 allocation (``batch_apply.batched_alloc``), one column scatter, one

@@ -119,6 +119,53 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
     return jax.jit(fn)
 
 
+def make_dili_round_hostroute(mesh: Mesh, cfg: DiLiConfig):
+    """The SPMD round *without* the on-device ``all_to_all``: outboxes come
+    back to the host, which routes them through ``core.net.Transport`` (the
+    nemesis-enabled path — the adversary lives on the wire between
+    outboxes and inboxes, so routing must cross the host).
+
+    (states, bgs, inbox, client) ->
+        (states, bgs, outbox, comp_slot, comp_val, comp_src, stats)
+
+    ``outbox`` is the raw [S, mailbox_cap, FIELDS] per-shard outbox;
+    ``stats`` is int32[5] per shard: out_count, bg_active, move_hits,
+    fast_hits, mut_hits. Delegation stats (hops) are computed host-side
+    from the outbox rows themselves — the host sees every frame on this
+    path.
+    """
+    num = cfg.num_shards
+    assert num == mesh.devices.size, (num, mesh.devices.size)
+    axes = tuple(mesh.axis_names)
+
+    def per_shard(state, bg, inbox, client):
+        state = jax.tree_util.tree_map(lambda x: x[0], state)
+        bg = jax.tree_util.tree_map(lambda x: x[0], bg)
+        me = jax.lax.axis_index(axes)
+        out = shard_round(state, bg, me, inbox[0], client[0], cfg)
+        stats = jnp.stack([
+            out.out_count,
+            out.bg_active,
+            out.move_hits,
+            out.fast_hits,
+            out.mut_hits,
+        ])
+        add1 = lambda x: x[None]
+        return (jax.tree_util.tree_map(add1, out.state),
+                jax.tree_util.tree_map(add1, out.bg),
+                out.outbox[None],
+                out.comp_slot[None], out.comp_val[None],
+                out.comp_src[None], stats[None])
+
+    pspec = P(axes)
+    fn = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(pspec, pspec, pspec, pspec),
+        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec),
+        check_rep=False)
+    return jax.jit(fn)
+
+
 def stack_states(states, bgs):
     st = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
     bg = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *bgs)

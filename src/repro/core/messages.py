@@ -8,6 +8,12 @@ pair — exactly the paper's "communication takes a finite number of steps"
 condition of conditional lock-freedom (Definition 1).
 
 A message is a row of ``FIELDS`` int32 lanes. Refs (uint32) are bitcast.
+
+The reliable-and-FIFO channel property is *provided*, not assumed: when a
+``core.net.Transport`` is interposed (any nemesis-enabled run), the raw
+wire may drop, duplicate, reorder and delay frames, and the transport's
+seq/ack/dedup machinery (DESIGN.md §11) restores exactly-once in-order
+delivery per (src, dst) pair before rows reach ``shard_round``.
 """
 from __future__ import annotations
 
@@ -36,7 +42,12 @@ MSG_MOVE_ITEMS = 16     # MoveItem batch member: one row of a chain-
                         # single scatter sweep (DESIGN.md §10); field
                         # layout is identical to MSG_MOVE_ITEM, so the
                         # serial handler is the universal fallback
-N_KINDS = 17            # dispatch-table size (shard_round lax.switch)
+MSG_NET_ACK = 17        # transport-level cumulative ack (DESIGN.md §11):
+                        # consumed by core.net.Transport at the receiving
+                        # host, never delivered to shard_round. It still
+                        # gets a (no-op) dispatch branch so a leaked frame
+                        # cannot clip onto a real handler.
+N_KINDS = 18            # dispatch-table size (shard_round lax.switch)
 
 # ---------------------------------------------------------------- layout
 # field meanings are per-kind; see docstrings at the emit sites.
@@ -56,7 +67,12 @@ F_VAL = 12     # item payload value (page slot etc.) — rides with inserts
 F_SLOT = 13    # background slot id (BgTable row) a move/switch message
                # belongs to; echoed by acks so concurrent background ops
                # on one shard credit the right slot
-FIELDS = 14
+F_SEQ = 14     # per-(src,dst)-lane sequence number stamped by the
+               # reliable transport (core.net, DESIGN.md §11); 0 for
+               # frames that never crossed a transport (direct routing,
+               # self-retries) and for unsequenced MSG_NET_ACK frames.
+               # For MSG_NET_ACK, F_A carries the cumulative ack cursor.
+FIELDS = 15
 
 MSG_DTYPE = jnp.int32
 
@@ -94,7 +110,7 @@ def push(outbox, count, row, do: bool | jnp.ndarray = True):
 
 
 def make_row(kind, dst, src, *, a=0, key=0, ref1=0, sid=0, ts=0,
-             x1=0, x2=0, x3=0, x4=0, val=0, slot=0):
+             x1=0, x2=0, x3=0, x4=0, val=0, slot=0, seq=0):
     vals = [kind, dst, src, a, key, ref1, sid, ts, x1, x2, x3, x4, val,
-            slot]
+            slot, seq]
     return jnp.stack([jnp.asarray(v, MSG_DTYPE) for v in vals])

@@ -1,0 +1,22 @@
+"""Reliable transport + deterministic nemesis (DESIGN.md §11).
+
+Layout:
+
+* ``transport`` — per-(src,dst) sequence lanes, dedup windows,
+  cumulative acks, bounded retransmit ring: exactly-once in-order
+  delivery over a lossy wire;
+* ``nemesis``   — the seeded adversary (drop/dup/reorder/delay,
+  partitions, per-link overrides), a pure function of
+  ``(seed, NemesisConfig)``;
+* ``digest``    — state / round-trace fingerprints for byte-identical
+  replay checks.
+
+Both execution backends route through one ``Transport`` when a
+``NemesisConfig`` is attached (``core.sim.Cluster(nemesis=...)``,
+``api.ShardMapBackend(nemesis=...)``); with no nemesis the legacy
+direct routing paths are untouched (zero overhead).
+"""
+from .digest import state_digest, trace_digest, trace_entry  # noqa: F401
+from .nemesis import (LinkFaults, Nemesis, NemesisConfig,  # noqa: F401
+                      Partition)
+from .transport import Transport, TransportOverflow  # noqa: F401

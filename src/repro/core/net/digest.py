@@ -1,0 +1,43 @@
+"""Deterministic digests for replay checking (DESIGN.md §11).
+
+``state_digest`` fingerprints a shard state (or any pytree of arrays);
+``trace_entry`` compresses one round's observable outcome. Two runs from
+the same ``(seed, config)`` must produce identical round traces — the
+single-seed reproducibility contract the nemesis harness rests on.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Iterable, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def state_digest(*pytrees) -> str:
+    """SHA-256 over every array leaf (shape + dtype + bytes) of the given
+    pytrees, order-stable. Identical digests == identical states."""
+    h = hashlib.sha256()
+    for tree in pytrees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            arr = np.asarray(leaf)
+            h.update(str(arr.shape).encode())
+            h.update(str(arr.dtype).encode())
+            h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def trace_entry(round_no: int, completions: Sequence[Tuple[int, int, int]],
+                out_counts: Iterable[int], extra: int = 0) -> str:
+    """One round's observable outcome, as a stable compact string."""
+    comp = ",".join(f"{s}:{v}:{r}" for s, v, r in sorted(completions))
+    outs = ",".join(str(int(c)) for c in out_counts)
+    return f"r{round_no}|c[{comp}]|o[{outs}]|x{extra}"
+
+
+def trace_digest(trace: List[str]) -> str:
+    h = hashlib.sha256()
+    for line in trace:
+        h.update(line.encode())
+        h.update(b"\n")
+    return h.hexdigest()

@@ -1,0 +1,235 @@
+"""Reliable transport: exactly-once, in-order delivery over a lossy wire.
+
+The DiLi protocol (handlers, replay pre-passes, pacing budgets) is built
+on a reliable-FIFO-per-(src,dst) channel contract. This module *provides*
+that contract over a wire that may drop, duplicate, reorder and delay
+frames (the nemesis), so at-least-once delivery with duplicates collapses
+to exactly-once *effects*:
+
+  * **Sender** — every (src, dst) lane stamps frames with a monotone
+    sequence number (``F_SEQ``), retains unacked frames in a bounded
+    retransmit ring, and re-ships frames whose last transmission is older
+    than ``retransmit_after`` rounds.
+  * **Receiver** — per lane, a cumulative cursor (all seqs ``<= cursor``
+    delivered) plus an out-of-order dedup window. A frame at or below the
+    cursor, or already buffered, is a duplicate and is dropped; anything
+    newer is buffered and the *contiguous prefix* above the cursor is
+    released — so handlers see each frame exactly once, in send order,
+    no matter what the wire did.
+  * **Acks** — receivers emit cumulative ``MSG_NET_ACK`` frames (one per
+    lane per round with traffic, re-emitted on duplicate arrival so a
+    lost ack heals). Acks are unsequenced — cumulative and idempotent —
+    and ride the same lossy wire.
+
+A wire frame is ``(src, dst, row)``: the lane identity travels out-of-band
+of the int32 row because ``F_SRC`` is protocol metadata (for ``MSG_OP`` it
+names the *reply* shard, not the emitter). ``F_SEQ`` is stamped into the
+row itself so delivered rows are self-describing in dumps.
+
+Loopback (src == dst) frames bypass the transport: a shard's self-retry
+is machine-local memory, not a network link.
+
+The transport is host-side ``numpy`` shared by both backends: the
+simulator interposes it in ``Cluster.step`` routing, and
+``ShardMapBackend`` routes host-side (instead of the on-device
+``all_to_all``) when a nemesis is attached.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .. import messages as M
+from .nemesis import Frame, Nemesis
+
+
+class TransportOverflow(RuntimeError):
+    """A lane's unacked retransmit ring exceeded ``window`` frames.
+
+    Raised loudly (like ``sim.OutboxOverflow``) instead of dropping the
+    oldest frame: a silently un-retransmittable frame is a protocol
+    message that will never arrive, which deadlocks quiescence. Fix:
+    raise ``window``, lower the fault rates, or pace the feed.
+    """
+
+
+class _Lane:
+    """Sender + receiver state for one directed (src, dst) pair."""
+
+    __slots__ = ("next_seq", "unacked", "last_ship", "acked",
+                 "cursor", "pending", "ack_due")
+
+    def __init__(self):
+        # sender side
+        self.next_seq = 1
+        self.unacked: Dict[int, np.ndarray] = {}    # seq -> stamped row
+        self.last_ship: Dict[int, int] = {}         # seq -> round shipped
+        self.acked = 0                              # highest cumulative ack
+        # receiver side
+        self.cursor = 0                             # delivered prefix
+        self.pending: Dict[int, np.ndarray] = {}    # ooo dedup window
+        self.ack_due = False                        # emit cumulative ack
+
+
+class Transport:
+    """One cluster-wide reliable transport instance (see module docstring).
+
+    ``ship_round`` returns per-destination row batches in a deterministic
+    order (lanes ascending by source, each lane's released contiguous
+    prefix in sequence order) — any deterministic inter-lane interleave
+    is legal; pair-FIFO is what the protocol needs.
+    """
+
+    def __init__(self, num_shards: int, nemesis: Optional[Nemesis] = None,
+                 *, retransmit_after: int = 4, window: int = 4096):
+        self.n = int(num_shards)
+        self.nemesis = nemesis
+        self.retransmit_after = max(1, int(retransmit_after))
+        self.window = int(window)
+        self._lanes: Dict[Tuple[int, int], _Lane] = {}
+        self._staged: List[Frame] = []      # fresh frames this round
+        self.stats = {"sent": 0, "retransmits": 0, "acks": 0,
+                      "dup_dropped": 0, "delivered": 0}
+
+    def _lane(self, src: int, dst: int) -> _Lane:
+        key = (src, dst)
+        lane = self._lanes.get(key)
+        if lane is None:
+            lane = self._lanes[key] = _Lane()
+        return lane
+
+    # ---------------------------------------------------------------- send
+    def send(self, src: int, rows: np.ndarray) -> List[np.ndarray]:
+        """Stage one shard's outbox rows for this round's wire.
+
+        ``src`` is the *emitting* shard (the lane identity); rows keep
+        whatever ``F_SRC`` the protocol wrote. Returns loopback rows
+        (dst == src) for the caller to deliver directly — they never
+        touch the wire.
+        """
+        loopback: List[np.ndarray] = []
+        for row in np.asarray(rows, np.int32):
+            dst = int(row[M.F_DST])
+            if dst == src:
+                loopback.append(row.copy())
+                continue
+            lane = self._lane(src, dst)
+            if len(lane.unacked) >= self.window:
+                raise TransportOverflow(
+                    f"lane ({src}->{dst}) has {len(lane.unacked)} unacked "
+                    f"frames (window={self.window}): the wire is losing "
+                    f"more than retransmission can absorb")
+            stamped = row.copy()
+            stamped[M.F_SEQ] = lane.next_seq
+            lane.unacked[lane.next_seq] = stamped
+            lane.next_seq += 1
+            self._staged.append((src, dst, stamped))
+            self.stats["sent"] += 1
+        return loopback
+
+    # ---------------------------------------------------------------- ship
+    def ship_round(self, round_no: int) -> List[np.ndarray]:
+        """Route one round: fresh frames + due retransmissions + acks go
+        through the nemesis; survivors are acked and deduped per lane.
+        Returns ``deliveries`` — ``deliveries[dst]`` is a [K, FIELDS]
+        array of rows released to shard ``dst``, in order."""
+        wire: List[Frame] = []
+        for src, dst, row in self._staged:
+            self._lane(src, dst).last_ship[int(row[M.F_SEQ])] = round_no
+            wire.append((src, dst, row))
+        self._staged = []
+        # due retransmissions (shipped but never cumulatively acked)
+        for (src, dst), lane in sorted(self._lanes.items()):
+            for seq in sorted(lane.unacked):
+                shipped = lane.last_ship.get(seq)
+                if shipped is not None and \
+                        round_no - shipped >= self.retransmit_after:
+                    lane.last_ship[seq] = round_no
+                    wire.append((src, dst, lane.unacked[seq]))
+                    self.stats["retransmits"] += 1
+        # cumulative acks for lanes with (re)arrivals; an ack for lane
+        # (src, dst) travels the reverse link (dst, src)
+        for (src, dst), lane in sorted(self._lanes.items()):
+            if lane.ack_due:
+                lane.ack_due = False
+                ack = np.zeros((M.FIELDS,), np.int32)
+                ack[M.F_KIND] = M.MSG_NET_ACK
+                ack[M.F_DST] = src
+                ack[M.F_SRC] = dst
+                ack[M.F_A] = lane.cursor
+                wire.append((dst, src, ack))
+                self.stats["acks"] += 1
+
+        if self.nemesis is not None:
+            wire = self.nemesis.perturb(wire, round_no)
+
+        # receive: ack processing + per-lane dedup/buffer
+        touched = set()
+        for src, dst, row in wire:
+            if int(row[M.F_KIND]) == M.MSG_NET_ACK:
+                lane = self._lane(dst, src)     # the lane being acked
+                cum = int(row[M.F_A])
+                if cum > lane.acked:
+                    lane.acked = cum
+                    for seq in [q for q in lane.unacked if q <= cum]:
+                        del lane.unacked[seq]
+                        lane.last_ship.pop(seq, None)
+                continue
+            lane = self._lane(src, dst)
+            seq = int(row[M.F_SEQ])
+            lane.ack_due = True                 # re-ack even duplicates
+            if seq <= lane.cursor or seq in lane.pending:
+                self.stats["dup_dropped"] += 1
+                continue
+            lane.pending[seq] = row.copy()
+            touched.add((src, dst))
+
+        # release each touched lane's contiguous prefix, lanes in
+        # deterministic (src asc) order per destination
+        deliveries: List[List[np.ndarray]] = [[] for _ in range(self.n)]
+        for (src, dst) in sorted(touched):
+            lane = self._lane(src, dst)
+            while lane.cursor + 1 in lane.pending:
+                lane.cursor += 1
+                deliveries[dst].append(lane.pending.pop(lane.cursor))
+                self.stats["delivered"] += 1
+        return [np.stack(rows).astype(np.int32) if rows
+                else np.zeros((0, M.FIELDS), np.int32)
+                for rows in deliveries]
+
+    # --------------------------------------------------------------- route
+    def route_round(self, backlogs: List[np.ndarray],
+                    per_src_rows, round_no: int) -> None:
+        """Route one round's outbox rows into per-destination host
+        backlogs: loopback rows go straight to their own backlog, the
+        rest cross the wire (send + ship + deliver). One home for the
+        routing sequence — ``Cluster.step`` and
+        ``ShardMapBackend._step_hostroute`` both call it, so the two
+        backends the differential harness compares cannot drift.
+
+        ``per_src_rows``: iterable of (src shard, [K, FIELDS] rows).
+        ``backlogs`` is mutated in place.
+        """
+        for s, rows in per_src_rows:
+            loop = self.send(s, rows)
+            if loop:
+                backlogs[s] = np.concatenate(
+                    [backlogs[s], np.stack(loop)], axis=0)
+        for d, rows in enumerate(self.ship_round(round_no)):
+            if rows.size:
+                backlogs[d] = np.concatenate([backlogs[d], rows], axis=0)
+
+    # --------------------------------------------------------------- state
+    def in_flight(self) -> int:
+        """Frames whose delivery is not yet certain to be settled:
+        unacked (possibly lost; will retransmit), buffered out-of-order,
+        staged this round, or held by the nemesis' delay stage."""
+        total = len(self._staged) + sum(
+            len(l.unacked) + len(l.pending) for l in self._lanes.values())
+        if self.nemesis is not None:
+            total += self.nemesis.in_flight()
+        return total
+
+    def idle(self) -> bool:
+        return self.in_flight() == 0

@@ -12,6 +12,14 @@ With ``delay_prob > 0`` (deterministic under ``seed``) whole (src,dst)
 channels are held back for a round to exercise out-of-order-across-pairs
 delivery (replay retries must heal).
 
+With ``nemesis=NemesisConfig(...)`` the cluster routes through the
+reliable transport (``core.net``, DESIGN.md §11): the wire below it may
+drop, duplicate, reorder and delay frames, and the transport's
+seq/ack/dedup machinery restores exactly-once in-order delivery. Every
+random stream (channel delays, nemesis, balancer tie-breaks) is spawned
+from one root ``SeedSequence``, so an entire run — including its
+per-round ``round_trace`` — is a pure function of ``(seed, config)``.
+
 The shard_map/TPU backend with ``all_to_all`` routing lives in
 ``distributed.py``; it runs the same ``shard_round``.
 """
@@ -25,6 +33,7 @@ import numpy as np
 from . import bg as B
 from . import messages as M
 from . import refs
+from .net import Nemesis, NemesisConfig, Transport, trace_entry
 from .shard import shard_round
 from .types import (DiLiConfig, KEY_MAX, KEY_MIN, OP_FIND, OP_INSERT,
                     OP_REMOVE, SH_KEY, ST_KEY, ShardState, init_shard)
@@ -200,6 +209,9 @@ def registry_entries(state: ShardState):
 class Cluster:
     def __init__(self, cfg: DiLiConfig, *, seed: int = 0,
                  delay_prob: float = 0.0,
+                 nemesis: Optional[NemesisConfig] = None,
+                 retransmit_after: int = 4, net_window: int = 4096,
+                 trace: Optional[bool] = None,
                  key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
         self.cfg = cfg
         self.n = cfg.num_shards
@@ -232,7 +244,36 @@ class Cluster:
         self._pending_ops: Dict[int, Tuple[int, int]] = {}
         self.round_no = 0
         self.delay_prob = delay_prob
-        self.rng = np.random.default_rng(seed)
+        # One splittable root: independent child streams for channel
+        # delays, the nemesis, and balancer tie-breaks — adding a consumer
+        # to one stream never perturbs another, so the whole run (and its
+        # round_trace) is a pure function of (seed, config).
+        self.seed = seed
+        root = np.random.SeedSequence(seed)
+        delay_ss, nemesis_ss, balancer_ss = root.spawn(3)
+        self.rng = np.random.default_rng(delay_ss)
+        self.balancer_rng = np.random.default_rng(balancer_ss)
+        self.nemesis_config = nemesis
+        self.net: Optional[Transport] = None
+        if nemesis is not None:
+            if delay_prob > 0.0:
+                # the legacy channel-hold knob is replaced wholesale by
+                # transport routing; accepting both would silently run
+                # weaker fault injection than asked for
+                raise ValueError(
+                    "delay_prob and nemesis are mutually exclusive — "
+                    "use NemesisConfig.delay_prob for delays under the "
+                    "reliable transport")
+            self.net = Transport(
+                self.n, Nemesis(nemesis, np.random.default_rng(nemesis_ss)),
+                retransmit_after=retransmit_after, window=net_window)
+        # per-round observable-outcome trace, the byte-identical-replay
+        # witness. Default: on for nemesis runs (where the (seed, config)
+        # repro contract needs it), off on the clean fast path (a per-
+        # round string append for nothing).
+        self.trace_enabled = (nemesis is not None) if trace is None \
+            else bool(trace)
+        self.round_trace: List[str] = []
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
                       "move_hits": 0, "max_bg_active": 0}
@@ -301,6 +342,7 @@ class Cluster:
         ndone = 0
         self.last_completions = []
         new_msgs: List[np.ndarray] = []
+        out_counts: List[int] = []
         for s, out in enumerate(outs):
             self.states[s] = out.state
             self.bgs[s] = out.bg
@@ -310,6 +352,7 @@ class Cluster:
             self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
                                               int(out.bg_active))
             cnt = int(out.out_count)
+            out_counts.append(cnt)
             self.stats["max_outbox"] = max(self.stats["max_outbox"], cnt)
             if cnt > cfg.mailbox_cap:
                 # not an assert: under ``python -O`` a dropped message
@@ -321,7 +364,7 @@ class Cluster:
                     f"mailbox_cap or reduce the per-round feed")
             ob = np.asarray(out.outbox)[:cnt]
             if ob.size:
-                new_msgs.append(ob)
+                new_msgs.append((s, ob))
                 hops = ob[ob[:, M.F_KIND] == M.MSG_OP, M.F_X2]
                 if hops.size:
                     self.stats["max_hops"] = max(self.stats["max_hops"],
@@ -339,8 +382,15 @@ class Cluster:
                 ndone += 1
 
         # ------------------------------------------------ route (FIFO/pair)
-        if new_msgs:
-            allm = np.concatenate(new_msgs, axis=0)
+        if self.net is not None:
+            # reliable transport over the (possibly nemesis-perturbed)
+            # wire: loopback rows bypass it, everything else is
+            # sequenced, retransmitted and delivered exactly once in
+            # per-lane order. Runs even on quiet rounds so retransmit
+            # timers, acks and delayed frames keep moving.
+            self.net.route_round(self.backlog, new_msgs, self.round_no)
+        elif new_msgs:
+            allm = np.concatenate([ob for _, ob in new_msgs], axis=0)
             for d in range(self.n):
                 mine = allm[allm[:, M.F_DST] == d]
                 if self.delay_prob > 0.0 and mine.size:
@@ -355,6 +405,11 @@ class Cluster:
                 else:
                     self.backlog[d] = np.concatenate(
                         [self.backlog[d], mine], axis=0)
+        if self.trace_enabled:
+            self.round_trace.append(trace_entry(
+                self.round_no, self.last_completions, out_counts,
+                extra=sum(b.shape[0] for b in self.backlog)
+                + (self.net.in_flight() if self.net is not None else 0)))
         self.round_no += 1
         self.stats["rounds"] += 1
         return ndone
@@ -370,13 +425,15 @@ class Cluster:
             busy = any(b.shape[0] for b in self.backlog)
             busy = busy or any(B.any_active(bg) for bg in self.bgs)
             busy = busy or bool(self._pending_ops)
+            busy = busy or (self.net is not None and not self.net.idle())
             if not busy:
                 return
         raise RuntimeError(
             f"cluster did not quiesce: backlog="
             f"{[b.shape[0] for b in self.backlog]} "
             f"bg={[B.slot_phases(bg).tolist() for bg in self.bgs]} "
-            f"pending={len(self._pending_ops)}")
+            f"pending={len(self._pending_ops)} "
+            f"net={self.net.in_flight() if self.net is not None else 0}")
 
     # ----------------------------------------------------------- inspection
     def shard_chain(self, s: int, head_idx: int, include_meta=False):

@@ -1,0 +1,150 @@
+"""Shared nemesis differential harness (DESIGN.md §11).
+
+One workload, importable by the tests and runnable as a script (the
+ShardMap backend needs ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set before jax imports, so multi-device runs go through a subprocess):
+
+  * seed a key range, then drive rounds of mixed find/insert/remove
+    through ``DiLiClient`` (per-key FIFO admission is what makes the
+    sequential oracle the right referee — raw ``Cluster.submit`` has no
+    cross-round same-key ordering, so multi-round nemesis delays could
+    legally reorder concurrent same-key ops);
+  * a ``Balancer`` (low split threshold + merges, seeded tie-breaks)
+    races splits/moves/merges against the op stream;
+  * every op's result and the final key set are checked against the
+    oracle, and the backend must quiesce.
+
+``python tests/nemesis_harness.py <backend> <n_ops> <seed> [<seed>...]``
+runs one differential per seed and prints ``OK <backend> seed=<s> ...``
+lines; any failure prints the ``(seed, config)`` repro and exits 1.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+
+def small_cfg(num_shards=4, *, big=True):
+    from repro.core.types import DiLiConfig
+    if big:
+        return DiLiConfig(num_shards=num_shards, pool_capacity=4096,
+                          max_sublists=32, max_ctrs=32, max_scan=4096,
+                          batch_size=16, mailbox_cap=256, move_batch=8)
+    # shard_map-sized: smaller pools keep the per-device round cheap on
+    # a host-platform CPU mesh
+    return DiLiConfig(num_shards=num_shards, pool_capacity=1024,
+                      max_sublists=16, max_ctrs=16, max_scan=1024,
+                      batch_size=8, mailbox_cap=64, move_batch=4)
+
+
+def default_nemesis(p=0.15):
+    from repro.core.net import NemesisConfig
+    return NemesisConfig(drop_prob=p, dup_prob=p, reorder_prob=p,
+                         delay_prob=p / 2, delay_rounds=3)
+
+
+def make_backend(kind: str, cfg, seed: int, nemesis):
+    if kind == "local":
+        from repro.api import LocalBackend
+        return LocalBackend(cfg, seed=seed, nemesis=nemesis)
+    if kind == "shardmap":
+        from repro.api import ShardMapBackend
+        return ShardMapBackend(cfg, seed=seed, nemesis=nemesis)
+    raise ValueError(f"unknown backend kind {kind!r}")
+
+
+def run_differential(backend_kind: str, seed: int, nemesis, *,
+                     n_ops: int = 600, key_space: int = 500,
+                     num_shards: int = 4, ops_per_round: int = 8,
+                     split_threshold: int = 24,
+                     drain_rounds: int = 12000, keep_backend: bool = False):
+    """One full differential run; returns a result dict (raises on a
+    drain timeout, asserts nothing itself — callers check the fields)."""
+    from repro.api import DiLiClient
+    from repro.core.balancer import Balancer
+    from repro.core.oracle import OracleList
+    from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
+
+    cfg = small_cfg(num_shards, big=(backend_kind == "local"))
+    backend = make_backend(backend_kind, cfg, seed, nemesis)
+    bal = Balancer(backend, split_threshold=split_threshold,
+                   merge_threshold=6, rng=backend.balancer_rng)
+    client = DiLiClient(backend, balance=bal, balance_every=3)
+    oracle = OracleList()
+    rng = np.random.default_rng(seed + 1)
+
+    n_load = min(max(key_space // 4, 20), 150)
+    base = rng.permutation(np.arange(1, key_space))[:n_load].tolist()
+    load = client.insert_batch(base)
+    oracle.apply_batch([OP_INSERT] * len(base), base)
+    client.drain(drain_rounds, run_balance=True)
+
+    futs, exps = [load], [[True] * len(base)]
+    done = 0
+    while done < n_ops:
+        k = min(ops_per_round, n_ops - done)
+        kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], k).tolist()
+        keys = rng.integers(1, key_space, k).tolist()
+        futs.append(client.submit(kinds, keys))
+        exps.append(oracle.apply_batch(kinds, keys))
+        client.pump()
+        done += k
+    client.drain(drain_rounds)
+
+    mismatches = []
+    for batch, exp in zip(futs, exps):
+        for fut, (got, e) in zip(batch, zip(batch.results(), exp)):
+            if bool(got) != e:
+                mismatches.append((fut.kind, fut.key, e, got))
+    final = backend.all_keys()
+    return {
+        "mismatches": mismatches,
+        "keys_match": final == sorted(oracle.snapshot()),
+        "final_keys": final,
+        "oracle_keys": sorted(oracle.snapshot()),
+        "quiescent": backend.quiescent(),
+        "rounds": backend.cluster.round_no if backend_kind == "local"
+        else backend.round_no,
+        "net_stats": dict(backend.net.stats),
+        "nemesis_stats": dict(backend.net.nemesis.stats),
+        "trace": (backend.cluster.round_trace
+                  if backend_kind == "local" else backend.round_trace),
+        "backend": backend if keep_backend else None,
+    }
+
+
+def check(res: dict, repro: str) -> None:
+    assert not res["mismatches"], \
+        f"result mismatches {res['mismatches'][:5]} — repro {repro}"
+    assert res["keys_match"], \
+        (f"final key sets diverged — repro {repro}\n"
+         f"extra={sorted(set(res['final_keys'])-set(res['oracle_keys']))} "
+         f"missing={sorted(set(res['oracle_keys'])-set(res['final_keys']))}")
+    assert res["quiescent"], f"backend did not quiesce — repro {repro}"
+
+
+def main(argv) -> int:
+    kind, n_ops, seeds = argv[0], int(argv[1]), [int(s) for s in argv[2:]]
+    nemesis = default_nemesis()
+    failures = []
+    for seed in seeds:
+        repro = nemesis.repro(seed)
+        try:
+            res = run_differential(kind, seed, nemesis, n_ops=n_ops)
+            check(res, repro)
+            print(f"OK {kind} seed={seed} rounds={res['rounds']} "
+                  f"net={res['net_stats']}", flush=True)
+        except AssertionError as e:
+            print(f"FAIL {kind} {repro}\n{e}", flush=True)
+            failures.append({"seed": seed, "config": nemesis.to_dict(),
+                             "backend": kind, "error": str(e)})
+    if failures:
+        print("FAILING-SEEDS " + json.dumps(failures), flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,288 @@
+"""Nemesis integration tests (DESIGN.md §11).
+
+N1  Corpus replay: every checked-in (seed, config) schedule in
+    tests/nemesis_corpus.json passes the full differential (results +
+    final key set vs the sequential oracle, quiescence) — hunt-found
+    failures get their repro line added there.
+N2  Duplicate-delivery idempotence: re-delivering every recorded message
+    kind (including a full batched MSG_MOVE_ITEMS run and stale slot
+    acks after the MOVE completed) leaves the state hash unchanged —
+    at-least-once delivery collapses to exactly-once effects.
+N3  Single-seed reproducibility: two runs from one (seed, config) produce
+    byte-identical round traces; a run killed mid-flight and restarted
+    reproduces the same trace prefix.
+N4  Partition heal: a multi-round partition stalls cross-cut traffic,
+    retransmission delivers everything after the cut lifts.
+N5  Backend parity under fire: the ShardMap backend passes the same
+    differential through host-routed transport (subprocess: needs a
+    multi-device XLA host platform).
+N6  Soak: many-seed differentials, scaled up by NEMESIS_SOAK_* env vars
+    in the nemesis-soak CI job; failing seeds are written as artifacts.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from nemesis_harness import (default_nemesis, make_backend,
+                             run_differential, check, small_cfg)
+from repro.core import messages as M
+from repro.core.net import NemesisConfig, state_digest
+from repro.core.sim import Cluster
+from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "nemesis_corpus.json")
+
+with open(CORPUS) as f:
+    _corpus = json.load(f)["entries"]
+
+
+# ------------------------------------------------------------- N1: corpus
+
+@pytest.mark.parametrize("entry", _corpus, ids=[e["name"] for e in _corpus])
+def test_corpus_schedule(entry):
+    config = NemesisConfig.from_dict(entry["config"])
+    repro = f"corpus:{entry['name']} {config.repro(entry['seed'])}"
+    res = run_differential("local", entry["seed"], config,
+                           n_ops=entry["n_ops"])
+    check(res, repro)
+    # the schedule must actually have exercised the wire
+    assert res["net_stats"]["sent"] > 0, repro
+
+
+# ------------------------------------------------- N2: idempotence matrix
+
+def _scripted_move_workload():
+    """A deterministic 2-shard run (transport on, zero faults) covering
+    the protocol's message kinds: split, two moves (the second's left
+    neighbor lives remotely → remote SwitchST), racing ops during the
+    copies (replicates), a merge on the target, and cross-shard client
+    ops (delegation + results). Returns (cluster, recorded frames)."""
+    cfg = small_cfg(2)._replace(move_batch=2)
+    cl = Cluster(cfg, seed=1, nemesis=NemesisConfig())
+    rec = []
+    orig = cl.net.nemesis.perturb
+
+    def spy(frames, round_no):
+        rec.extend((s, d, row.copy()) for s, d, row in frames)
+        return orig(frames, round_no)
+
+    cl.net.nemesis.perturb = spy
+
+    keys = list(range(10, 210, 5))
+    cl.submit(0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet(600)
+
+    subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+    mid = cl.middle_item(0, subs[0]["head_idx"])
+    assert cl.split(0, subs[0]["keymax"], mid)
+    cl.run_until_quiet(600)
+
+    def move_with_races(entry_idx, racing_lo, racing_hi):
+        subs = sorted((e for e in cl.sublists(0) if e["owner"] == 0),
+                      key=lambda e: e["keymin"])
+        assert cl.move(0, subs[entry_idx]["keymax"], 1)
+        rng = np.random.default_rng(9)
+        for _ in range(12):
+            ks = rng.integers(racing_lo, racing_hi, 2).tolist()
+            cl.submit(0, [OP_INSERT, OP_REMOVE], ks)
+            cl.step()
+        cl.run_until_quiet(800)
+
+    move_with_races(0, 10, 100)      # left half; local switch
+    move_with_races(0, 100, 210)     # remaining half; left now on 1 →
+                                     # remote SwitchST + ack
+    subs1 = sorted((e for e in cl.sublists(1) if e["owner"] == 1),
+                   key=lambda e: e["keymin"])
+    assert len(subs1) >= 2
+    assert cl.merge(1, subs1[0]["keymax"], subs1[1]["keymax"])
+    cl.run_until_quiet(600)
+
+    # cross-shard client traffic: submitted at 0, owned by 1
+    cl.submit(0, [OP_FIND] * 4, [20, 60, 120, 180])
+    cl.run_until_quiet(600)
+    return cl, rec
+
+
+def _digest(cl):
+    """State hash modulo the BgTable's free-running per-round tick
+    (``bg.round`` advances every round even at rest; with all slots idle
+    it has no other effect)."""
+    bgs = [b._replace(round=np.zeros_like(np.asarray(b.round)))
+           for b in cl.bgs]
+    return state_digest(cl.states, bgs)
+
+
+def test_duplicate_delivery_idempotence_matrix():
+    cl, rec = _scripted_move_workload()
+    data = [f for f in rec if int(f[2][M.F_KIND]) != M.MSG_NET_ACK]
+    kinds = {int(f[2][M.F_KIND]) for f in data}
+    # the workload must cover the full protocol surface, incl. the
+    # batched MSG_MOVE_ITEMS runs and every ack kind
+    required = {M.MSG_OP, M.MSG_RESULT, M.MSG_MOVE_SH, M.MSG_MOVE_SH_ACK,
+                M.MSG_MOVE_ITEMS, M.MSG_MOVE_ITEM, M.MSG_MOVE_ACK,
+                M.MSG_SWITCH_ST, M.MSG_SWITCH_ST_ACK, M.MSG_SWITCH_SERVER,
+                M.MSG_REG_SPLIT, M.MSG_REG_MERGED}
+    assert required <= kinds, f"missing kinds: {sorted(required - kinds)}"
+
+    d0 = _digest(cl)
+    for kind in sorted(kinds):
+        frames = [f for f in data if int(f[2][M.F_KIND]) == kind]
+        before = cl.net.stats["dup_dropped"]
+        # re-deliver the kind's entire recorded traffic twice — every
+        # frame is a duplicate (its seq is at or below the lane cursor)
+        # and must be absorbed by the transport's dedup window
+        cl.net._staged.extend(frames)
+        cl.net._staged.extend(frames)
+        cl.step()
+        cl.run_until_quiet(200)
+        assert cl.net.stats["dup_dropped"] >= before + 2 * len(frames), kind
+        assert _digest(cl) == d0, \
+            f"kind {kind} re-delivery changed state"
+
+
+def test_stale_slot_ack_after_move_is_inert():
+    """A *fresh* (new-seq) MOVE_ACK addressed at a now-idle background
+    slot — the handler-level guard, beyond transport dedup: slot credits
+    are phase-gated and the newLoc write is idempotent by identity."""
+    cl, rec = _scripted_move_workload()
+    acks = [f for f in rec
+            if int(f[2][M.F_KIND]) == M.MSG_MOVE_ACK][:4]
+    assert acks
+    d0 = _digest(cl)
+    for src, dst, row in acks:
+        fresh = row.copy()
+        fresh[M.F_SEQ] = 0              # never crossed a transport
+        cl.backlog[dst] = np.concatenate(
+            [cl.backlog[dst], fresh[None]], axis=0)
+    cl.run_until_quiet(200)
+    assert _digest(cl) == d0
+
+
+# --------------------------------------------- N3: (seed, config) replay
+
+def _scripted_run(seed, config, rounds):
+    cfg = small_cfg(2)
+    cl = Cluster(cfg, seed=seed, nemesis=config)
+    rng = np.random.default_rng(42)      # workload stream, fixed
+    keys = list(range(5, 150, 3))
+    cl.submit(0, [OP_INSERT] * len(keys), keys)
+    for r in range(rounds):
+        if r == 10:
+            subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+            if subs:
+                mid = cl.middle_item(0, subs[0]["head_idx"])
+                if mid is not None:
+                    cl.split(0, subs[0]["keymax"], mid)
+        if r == 25:
+            subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+            if subs:
+                cl.move(0, subs[-1]["keymax"], 1)
+        kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], 4).tolist()
+        cl.submit(r % 2, kinds, rng.integers(1, 200, 4).tolist())
+        cl.step()
+    return cl
+
+
+def test_same_seed_runs_produce_identical_round_traces():
+    config = default_nemesis(0.2)
+    a = _scripted_run(3, config, 80)
+    b = _scripted_run(3, config, 80)
+    assert a.round_trace == b.round_trace
+    assert state_digest(a.states, a.bgs) == state_digest(b.states, b.bgs)
+    c = _scripted_run(4, config, 80)
+    assert a.round_trace != c.round_trace
+
+
+def test_killed_and_restarted_schedule_replays_byte_identically():
+    """Kill a run mid-flight (messages in fabric, move in progress);
+    a fresh run from the same (seed, config) reproduces the dead run's
+    trace as an exact prefix — the repro contract for failing seeds."""
+    config = default_nemesis(0.2)
+    dead = _scripted_run(7, config, 30)      # killed at round 30
+    assert not dead.net.idle() or any(
+        b.shape[0] for b in dead.backlog)    # genuinely mid-flight
+    full = _scripted_run(7, config, 80)
+    assert full.round_trace[:len(dead.round_trace)] == dead.round_trace
+
+
+# --------------------------------------------------- N4: partition heal
+
+def test_partition_stalls_then_heals():
+    from repro.core.net import Partition
+    config = NemesisConfig(drop_prob=0.05,
+                           partitions=(Partition(5, 30, (0,)),))
+    res = run_differential("local", 17, config, n_ops=200,
+                           num_shards=2, keep_backend=True)
+    check(res, config.repro(17))
+    nem = res["backend"].net.nemesis
+    assert nem.stats["partitioned"] > 0      # the cut really fired
+    assert res["net_stats"]["retransmits"] > 0
+
+
+# ------------------------------------------- N5: ShardMap backend parity
+
+@pytest.mark.slow
+def test_shardmap_backend_survives_nemesis():
+    """Scaled by NEMESIS_SOAK_SHARDMAP_SEEDS / NEMESIS_SOAK_OPS in the
+    nemesis-soak CI job (the harness script prints a FAILING-SEEDS json
+    line on failure, captured below as an artifact)."""
+    n_seeds = int(os.environ.get("NEMESIS_SOAK_SHARDMAP_SEEDS", "2"))
+    n_ops = int(os.environ.get("NEMESIS_SOAK_OPS", "200"))
+    seeds = [str(11 + i) for i in range(n_seeds)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, os.path.join("tests", "nemesis_harness.py"),
+         "shardmap", str(n_ops)] + seeds,
+        env=env, capture_output=True, text=True,
+        timeout=600 * max(1, n_seeds), cwd=REPO)
+    if r.returncode != 0:
+        for line in r.stdout.splitlines():
+            if line.startswith("FAILING-SEEDS "):
+                outdir = os.path.join(REPO, "nemesis_failures")
+                os.makedirs(outdir, exist_ok=True)
+                with open(os.path.join(outdir, "shardmap_soak.json"),
+                          "w") as f:
+                    f.write(line[len("FAILING-SEEDS "):])
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert r.stdout.count("OK shardmap") == n_seeds
+
+
+# ----------------------------------------------------------- N6: soak
+
+@pytest.mark.slow
+def test_nemesis_soak_many_seeds():
+    """Differential sweep over distinct seeds at drop/dup/reorder
+    p in {0.05, 0.2}. The nemesis-soak CI job scales this to >=25
+    distinct seeds x 10k ops (NEMESIS_SOAK_SEEDS is per fault level /
+    NEMESIS_SOAK_OPS); failing seeds are dumped under nemesis_failures/
+    for artifact upload and corpus check-in."""
+    per_level = int(os.environ.get("NEMESIS_SOAK_SEEDS", "2"))
+    n_ops = int(os.environ.get("NEMESIS_SOAK_OPS", "600"))
+    failures = []
+    for li, p in enumerate((0.05, 0.2)):
+        config = default_nemesis(p)
+        for seed in range(1000 + 500 * li, 1000 + 500 * li + per_level):
+            repro = config.repro(seed)
+            try:
+                res = run_differential("local", seed, config, n_ops=n_ops)
+                check(res, repro)
+            except AssertionError as e:
+                failures.append({"seed": seed, "config": config.to_dict(),
+                                 "backend": "local", "error": str(e)})
+    if failures:
+        outdir = os.path.join(REPO, "nemesis_failures")
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir, "local_soak.json")
+        with open(path, "w") as f:
+            json.dump(failures, f, indent=1)
+        pytest.fail(f"{len(failures)} failing seeds written to {path}: "
+                    + ", ".join(str(x["seed"]) for x in failures))

@@ -1,0 +1,229 @@
+"""Unit tests for the reliable transport + nemesis (core/net, DESIGN.md §11).
+
+The contract under test: whatever the wire does (drop, duplicate,
+reorder, delay, partition), every frame a sender stages is delivered to
+its destination exactly once, in per-(src,dst)-lane order — and the
+whole schedule is a pure function of (seed, config).
+"""
+import numpy as np
+import pytest
+
+from repro.core import messages as M
+from repro.core.net import (LinkFaults, Nemesis, NemesisConfig, Partition,
+                            Transport, TransportOverflow)
+
+
+def mkrow(src, dst, payload, kind=M.MSG_OP):
+    row = np.zeros((M.FIELDS,), np.int32)
+    row[M.F_KIND] = kind
+    row[M.F_SRC] = src
+    row[M.F_DST] = dst
+    row[M.F_KEY] = payload
+    return row
+
+
+def nemesis(config, seed=0):
+    return Nemesis(config, np.random.default_rng(seed))
+
+
+def pump(tp, start, rounds):
+    """Drive empty rounds; collect deliveries per destination."""
+    got = [[] for _ in range(tp.n)]
+    for r in range(start, start + rounds):
+        for d, rows in enumerate(tp.ship_round(r)):
+            got[d].extend(rows)
+    return got
+
+
+def payloads(rows):
+    return [int(r[M.F_KEY]) for r in rows]
+
+
+# ------------------------------------------------------------- clean wire
+
+def test_clean_wire_delivers_in_order_and_goes_idle():
+    tp = Transport(2)
+    tp.send(0, np.stack([mkrow(0, 1, p) for p in (10, 11, 12)]))
+    got = pump(tp, 0, 6)
+    assert payloads(got[1]) == [10, 11, 12]
+    assert got[0] == []         # only transport acks flow back
+    assert tp.idle(), tp.in_flight()
+    assert tp.stats["delivered"] == 3
+    assert tp.stats["retransmits"] == 0
+
+
+def test_loopback_bypasses_the_wire():
+    tp = Transport(2)
+    loop = tp.send(0, np.stack([mkrow(0, 0, 5), mkrow(0, 1, 6)]))
+    assert payloads(loop) == [5]
+    assert tp.stats["sent"] == 1       # only the cross-shard frame staged
+    got = pump(tp, 0, 4)
+    assert payloads(got[1]) == [6]
+
+
+def test_seq_stamped_per_lane():
+    tp = Transport(3)
+    tp.send(0, np.stack([mkrow(0, 1, 1), mkrow(0, 2, 2), mkrow(0, 1, 3)]))
+    tp.send(2, np.stack([mkrow(2, 1, 4)]))
+    got = pump(tp, 0, 4)
+    seqs = {(int(r[M.F_SRC]), int(r[M.F_KEY])): int(r[M.F_SEQ])
+            for r in got[1] + got[2]}
+    # per-lane monotone from 1: lane (0,1) got 1,2; lanes (0,2), (2,1) got 1
+    assert seqs == {(0, 1): 1, (0, 3): 2, (0, 2): 1, (2, 4): 1}
+
+
+# ------------------------------------------------------------ lossy wire
+
+def test_drops_heal_by_retransmission():
+    cfg = NemesisConfig(drop_prob=0.5)
+    tp = Transport(2, nemesis(cfg, seed=3), retransmit_after=2)
+    n = 40
+    tp.send(0, np.stack([mkrow(0, 1, p) for p in range(n)]))
+    got = pump(tp, 0, 120)
+    assert payloads(got[1]) == list(range(n))
+    assert tp.idle()
+    assert tp.stats["retransmits"] > 0
+    assert tp.nemesis.stats["dropped"] > 0
+
+
+def test_duplicates_are_suppressed_exactly_once_delivery():
+    cfg = NemesisConfig(dup_prob=1.0)     # every frame delivered twice
+    tp = Transport(2, nemesis(cfg), retransmit_after=2)
+    tp.send(0, np.stack([mkrow(0, 1, p) for p in range(10)]))
+    got = pump(tp, 0, 20)
+    assert payloads(got[1]) == list(range(10))
+    assert tp.stats["dup_dropped"] >= 10
+    assert tp.idle()
+
+
+def test_reordering_is_straightened_per_lane():
+    cfg = NemesisConfig(reorder_prob=0.8)
+    tp = Transport(3, nemesis(cfg, seed=1), retransmit_after=3)
+    for r in range(6):
+        tp.send(0, np.stack([mkrow(0, 1, 100 + 6 * r + i)
+                             for i in range(6)]))
+        tp.send(2, np.stack([mkrow(2, 1, 900 + r)]))
+        tp.ship_round(r)
+    got = pump(tp, 6, 60)
+    all_lane0 = [p for p in payloads(got[1]) if p < 900]
+    all_lane2 = [p for p in payloads(got[1]) if p >= 900]
+    # pre-pumped rounds also delivered some; recollect from scratch instead
+    # by checking monotonicity of what arrived during the drain
+    assert all_lane0 == sorted(all_lane0)
+    assert all_lane2 == sorted(all_lane2)
+    assert tp.idle()
+
+
+def test_delay_holds_frames_then_releases_in_order():
+    cfg = NemesisConfig(delay_prob=1.0, delay_rounds=4)
+    tp = Transport(2, nemesis(cfg, seed=2), retransmit_after=50)
+    tp.send(0, np.stack([mkrow(0, 1, p) for p in (1, 2, 3)]))
+    first = tp.ship_round(0)
+    assert payloads(first[1]) == []       # all held
+    assert not tp.idle()
+    got = pump(tp, 1, 12)
+    assert payloads(got[1]) == [1, 2, 3]
+    assert tp.nemesis.stats["delayed"] >= 3
+
+
+def test_partition_cuts_then_heals():
+    cfg = NemesisConfig(partitions=(Partition(0, 10, (0,)),))
+    tp = Transport(2, nemesis(cfg), retransmit_after=2)
+    tp.send(0, np.stack([mkrow(0, 1, p) for p in (7, 8)]))
+    during = pump(tp, 0, 10)              # rounds 0..9: cut
+    assert payloads(during[1]) == []
+    assert tp.nemesis.stats["partitioned"] > 0
+    after = pump(tp, 10, 10)              # healed: retransmits land
+    assert payloads(after[1]) == [7, 8]
+    assert tp.idle()
+
+
+def test_delayed_frames_respect_partitions_at_release():
+    """A frame held by the delay stage that comes due mid-cut is cut —
+    the delay stage must not smuggle frames through a partition."""
+    cfg = NemesisConfig(delay_prob=1.0, delay_rounds=1,
+                        partitions=(Partition(1, 20, (0,)),))
+    tp = Transport(2, nemesis(cfg, seed=0), retransmit_after=3)
+    tp.send(0, np.stack([mkrow(0, 1, 9)]))
+    arrived_at = None
+    for r in range(40):
+        rows = tp.ship_round(r)[1]
+        if len(rows):
+            arrived_at = r
+            break
+    assert arrived_at is not None and arrived_at >= 20, arrived_at
+    assert tp.nemesis.stats["partitioned"] > 0
+
+
+def test_link_overrides_scope_faults_to_one_link():
+    # only the 0->1 link drops; 0->2 is clean
+    cfg = NemesisConfig(link_overrides=(
+        ((0, 1), LinkFaults(drop_prob=1.0)),))
+    tp = Transport(3, nemesis(cfg), retransmit_after=100)
+    tp.send(0, np.stack([mkrow(0, 1, 1), mkrow(0, 2, 2)]))
+    got = pump(tp, 0, 4)
+    assert payloads(got[1]) == []
+    assert payloads(got[2]) == [2]
+
+
+def test_ack_loss_heals_sender_ring_eventually_drains():
+    # acks travel the reverse link and are dropped hard; data is clean.
+    # Retransmits of delivered frames are dup-dropped but re-arm the
+    # receiver's cumulative ack until one survives.
+    cfg = NemesisConfig(link_overrides=(
+        ((1, 0), LinkFaults(drop_prob=0.8)),))
+    tp = Transport(2, nemesis(cfg, seed=11), retransmit_after=2)
+    tp.send(0, np.stack([mkrow(0, 1, p) for p in range(5)]))
+    got = pump(tp, 0, 200)
+    assert payloads(got[1]) == list(range(5))
+    assert tp.idle(), tp.in_flight()
+    assert tp.stats["dup_dropped"] > 0
+
+
+# ---------------------------------------------------------- misc contract
+
+def test_window_overflow_raises_loudly():
+    cfg = NemesisConfig(drop_prob=1.0)    # nothing is ever delivered
+    tp = Transport(2, nemesis(cfg), window=8)
+    with pytest.raises(TransportOverflow):
+        for r in range(4):
+            tp.send(0, np.stack([mkrow(0, 1, p) for p in range(4)]))
+            tp.ship_round(r)
+
+
+def test_net_ack_frames_never_reach_inboxes():
+    tp = Transport(2)
+    tp.send(0, np.stack([mkrow(0, 1, 1)]))
+    for r in range(8):
+        for rows in tp.ship_round(r):
+            assert all(int(x[M.F_KIND]) != M.MSG_NET_ACK for x in rows)
+    assert tp.stats["acks"] > 0           # acks flowed, invisibly
+
+
+def test_same_seed_same_schedule():
+    cfg = NemesisConfig(drop_prob=0.3, dup_prob=0.3, reorder_prob=0.3,
+                        delay_prob=0.2, delay_rounds=3)
+
+    def run(seed):
+        tp = Transport(2, nemesis(cfg, seed), retransmit_after=2)
+        log = []
+        for r in range(40):
+            if r < 10:
+                tp.send(0, np.stack([mkrow(0, 1, 10 * r + i)
+                                     for i in range(3)]))
+            for d, rows in enumerate(tp.ship_round(r)):
+                log.append((r, d, payloads(rows)))
+        return log, dict(tp.stats), dict(tp.nemesis.stats)
+
+    a, b, c = run(7), run(7), run(8)
+    assert a == b                          # byte-identical replay
+    assert a != c                          # the seed actually matters
+
+
+def test_config_round_trips_through_json_dict():
+    cfg = NemesisConfig(
+        drop_prob=0.1, dup_prob=0.2, reorder_prob=0.3, delay_prob=0.05,
+        delay_rounds=4, partitions=(Partition(5, 9, (0, 2)),),
+        link_overrides=(((1, 0), LinkFaults(drop_prob=0.9)),))
+    assert NemesisConfig.from_dict(cfg.to_dict()) == cfg
+    assert "seed=3" in cfg.repro(3)

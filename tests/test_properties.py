@@ -10,12 +10,16 @@ P3  Registry: get_by_key returns the covering entry for any sorted layout.
 P4  Counters: after quiescence every live sublist has stCt - endCt ==
     offset (the Move-termination precondition is observable).
 P5  Hybrid-search kernel == oracle on arbitrary registry layouts.
+P6  Nemesis linearizability: any op stream x any NemesisConfig (drop/
+    dup/reorder/delay) x the balancer's bg schedule => oracle parity,
+    exact final key set, and quiescence; shrunk failures print a
+    (seed, config) repro line for tests/nemesis_corpus.json.
 """
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import HealthCheck, given, settings, strategies as st
+from hypothesis import HealthCheck, given, note, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -79,6 +83,41 @@ def test_linearizable_under_background_ops(seed, ops, move_at, split_at,
     for op_id, exp in expected.items():
         assert bool(cl.results[op_id]) == exp
     assert cl.all_keys() == sorted(oracle.snapshot())
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(
+    seed=st.integers(0, 100_000),
+    drop=st.floats(0.0, 0.2),
+    dup=st.floats(0.0, 0.2),
+    reorder=st.floats(0.0, 0.2),
+    delay=st.floats(0.0, 0.15),
+    delay_rounds=st.integers(1, 4),
+    split_threshold=st.sampled_from([16, 24, 48]),
+    n_ops=st.integers(40, 120),
+)
+def test_linearizable_under_nemesis(seed, drop, dup, reorder, delay,
+                                    delay_rounds, split_threshold, n_ops):
+    """P6: random op streams x random fault schedules x bg churn. The
+    ``DiLiClient`` drives the stream (per-key FIFO admission is the
+    ordering contract the sequential oracle referees); the balancer's
+    split/move/merge commands ride along. Failures print the
+    ``(seed, config)`` pair — replay it byte-identically, then check it
+    into tests/nemesis_corpus.json."""
+    from nemesis_harness import check, run_differential
+    from repro.core.net import NemesisConfig
+
+    config = NemesisConfig(drop_prob=drop, dup_prob=dup,
+                           reorder_prob=reorder, delay_prob=delay,
+                           delay_rounds=delay_rounds)
+    repro = config.repro(seed)
+    note(f"repro line: {repro}")
+    res = run_differential("local", seed, config, n_ops=n_ops,
+                           num_shards=2, key_space=300,
+                           split_threshold=split_threshold)
+    check(res, repro)
 
 
 @settings(max_examples=25, deadline=None)
