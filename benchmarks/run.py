@@ -127,12 +127,13 @@ def _drive_backend(backend, kinds, keys, batch, *, balancer=None,
     return time.perf_counter() - t0
 
 
-def _bench_cfg(n_shards, *, batch=64, fastpath=True):
+def _bench_cfg(n_shards, *, batch=64, fastpath=True, block_probe=False):
     return DiLiConfig(num_shards=n_shards, pool_capacity=1 << 15,
                       max_sublists=256, max_ctrs=256, max_scan=1 << 15,
                       batch_size=batch, mailbox_cap=512,
                       split_threshold=125, move_batch=32,
-                      find_fastpath=fastpath, mut_fastpath=fastpath)
+                      find_fastpath=fastpath, mut_fastpath=fastpath,
+                      block_probe=block_probe)
 
 
 def _make_client(n_shards, *, split: bool, batch=64, fastpath=True,
@@ -152,11 +153,14 @@ def _settle(backend, balancer, *, max_passes=200):
 
 
 def _dili_throughput(n_shards, kinds, keys, *, split: bool,
-                     load_kinds, load_keys, batch=64, fastpath=True):
+                     load_kinds, load_keys, batch=64, fastpath=True,
+                     block_probe=False):
     """``fastpath`` toggles BOTH batched pre-passes (find §4 + mutation
-    §4b); False is the serial-only scan baseline."""
+    §4b); False is the serial-only scan baseline. ``block_probe`` layers
+    the packed-block kernel probe (DESIGN.md §12) over the pre-passes."""
     backend = LocalBackend(_bench_cfg(n_shards, batch=batch,
-                                      fastpath=fastpath))
+                                      fastpath=fastpath,
+                                      block_probe=block_probe))
     bal = Balancer(backend) if split else None
     # load phase (timed separately from the measured mixed phase)
     _drive_backend(backend, load_kinds, load_keys, batch, balancer=bal)
@@ -196,6 +200,24 @@ def fig3a(n_load=2000, n_ops=4000, key_space=8000):
         emit("fig3a", f"dili_scan_r{read_pct}_ops_per_s", round(thr_scan))
         emit("fig3a", f"fastpath_over_scan_r{read_pct}",
              round(thr_dili / thr_scan, 2))
+
+        # packed-block kernel probe over the same mix (DESIGN.md §12):
+        # block-probe vs pointer-walk probe_batch vs serial scan, plus
+        # the fraction of pre-pass answers the kernel served
+        thr_blk, cb = _dili_throughput(1, kinds, keys, split=True,
+                                       load_kinds=load_kinds,
+                                       load_keys=load_keys,
+                                       block_probe=True)
+        emit("fig3a", f"dili_blk_r{read_pct}_ops_per_s", round(thr_blk))
+        emit("fig3a", f"dili_blk_r{read_pct}_blk_hits", cb.stats["blk_hits"])
+        emit("fig3a", f"dili_blk_r{read_pct}_hit_rate",
+             round(cb.stats["blk_hits"]
+                   / max(1, cb.stats["fast_hits"] + cb.stats["mut_hits"]),
+                   3))
+        emit("fig3a", f"blockprobe_over_scan_r{read_pct}",
+             round(thr_blk / thr_scan, 2))
+        emit("fig3a", f"blockprobe_over_fastpath_r{read_pct}",
+             round(thr_blk / thr_dili, 2))
 
         thr_harris, _ = _dili_throughput(1, kinds, keys, split=False,
                                          load_kinds=load_kinds,

@@ -279,7 +279,7 @@ class ShardMapBackend:
         self.round_no = 0
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
-                      "move_hits": 0, "max_bg_active": 0}
+                      "move_hits": 0, "blk_hits": 0, "max_bg_active": 0}
 
     # ------------------------------------------------------------- protocol
     @property
@@ -353,6 +353,7 @@ class ShardMapBackend:
         self.stats["move_hits"] += int(rstats[:, 2].sum())
         self.stats["fast_hits"] += int(rstats[:, 3].sum())
         self.stats["mut_hits"] += int(rstats[:, 4].sum())
+        self.stats["blk_hits"] += int(rstats[:, 5].sum())
         outbox = np.asarray(outbox)
         per_src = []
         for s in range(self.n):
@@ -391,6 +392,7 @@ class ShardMapBackend:
         self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
                                           int(rstats[:, 4].max()))
         self.stats["move_hits"] += int(rstats[:, 5].sum())
+        self.stats["blk_hits"] += int(rstats[:, 6].sum())
         delegated = int(rstats[:, 2].sum())
         if delegated:
             self.stats["delegated"] += delegated

@@ -72,10 +72,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import blocks as BL
 from . import messages as M
 from . import refs
 from .ops import pool_slot, resolve_route
-from .traverse import probe_batch
+from .traverse import ProbeOut, probe_batch
 from .types import (DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE, RES_FALSE,
                     RES_TRUE, ShardState)
 
@@ -90,6 +91,8 @@ class PreOut(NamedTuple):
     find_elig: jnp.ndarray   # bool[R] — FIND answered here
     mut_elig: jnp.ndarray    # bool[R] — INSERT/REMOVE applied here
     res: jnp.ndarray         # int32[R] (valid where find_elig | mut_elig)
+    blk_hits: jnp.ndarray    # int32 — eligible lanes whose stage-2 probe
+                             # was the packed-block kernel (DESIGN.md §12)
 
 
 def _count_eq(sorted_keys, query):
@@ -141,8 +144,9 @@ def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
     n = key.shape[0]
     zb = jnp.zeros((n,), bool)
     zi = jnp.zeros((n,), jnp.int32)
+    z0 = jnp.zeros((), jnp.int32)
     if not (run_find or run_mut):
-        return PreOut(state, zb, zb, zi)
+        return PreOut(state, zb, zb, zi, z0)
 
     is_op = kind == M.MSG_OP
     benign = jnp.zeros(kind.shape, bool)
@@ -187,7 +191,25 @@ def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
         cand_k = cand[sel]
         key_k = key[sel]
         op_k = op[sel]
+        ent_k = rt.entry[sel]
         pr = probe_batch(state, rt.head_idx[sel], key[sel], me, bound)
+
+        # packed-block stage-2 probe (DESIGN.md §12): lanes whose entry
+        # has a valid block are answered by the hybrid-search kernel's
+        # window instead of the pointer walk; everything the block can't
+        # vouch for (dirty/moving/switched rows, hint-vs-registry
+        # disagreement) keeps the probe_batch verdict and, failing that,
+        # bounces to the exact serial search.
+        use_blk = jnp.zeros((k,), bool)
+        if cfg.block_probe:
+            b_ok, b_present, b_left, b_right = BL.probe_blocks(
+                state, ent_k, rt.sh_ref[sel], key_k, me, cfg)
+            use_blk = cand_k & b_ok
+            pr = ProbeOut(
+                ok=pr.ok | use_blk,
+                present=jnp.where(use_blk, b_present, pr.present),
+                left=jnp.where(use_blk, b_left, pr.left),
+                right=jnp.where(use_blk, b_right, pr.right))
 
         pool = state.pool
         cap = pool.key.shape[0]
@@ -210,7 +232,8 @@ def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
             elig_k = cand_k & pr.ok & whole
             res_k = jnp.where(pr.present, RES_TRUE, RES_FALSE)
             return (state, zb.at[sel].set(elig_k), zb,
-                    zi.at[sel].set(res_k.astype(jnp.int32)))
+                    zi.at[sel].set(res_k.astype(jnp.int32)),
+                    jnp.sum(elig_k & use_blk).astype(jnp.int32))
 
         # ---- group fold: sort lanes by (key, original row position) so
         # each key group is a contiguous segment in serial order. Padding
@@ -368,6 +391,21 @@ def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
         bump = jax.ops.segment_sum(jnp.where(w, n_fired, 0), slot,
                                    num_segments=state.stct.shape[0])
 
+        # ---- packed-block invalidation (DESIGN.md §12): a group that
+        # changed its chain (net insert or net mark) dirties its entry's
+        # block row. A fired group can carry entry == -1 — a hinted lane
+        # routed by a replica that doesn't cover the key yet — and then
+        # the mutated chain can't be attributed, so the whole mirror
+        # drops. Counter-only groups (insert+remove folding to a net
+        # no-op) leave membership intact and dirty nothing.
+        ent_lead = ent_k[s2][lead]
+        chain_mut = does_ins | does_mark
+        mblk = state.blk.valid.shape[0]
+        dirty_at = jnp.where(chain_mut & (ent_lead >= 0), ent_lead, mblk)
+        blk_valid = state.blk.valid.at[dirty_at].set(False, mode="drop")
+        blk_valid = jnp.where(jnp.any(chain_mut & (ent_lead < 0)),
+                              jnp.zeros_like(blk_valid), blk_valid)
+
         st2 = state._replace(
             pool=pool,
             stct=state.stct + bump,
@@ -375,6 +413,7 @@ def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
             free_top=free_top2,
             alloc_top=alloc_top2,
             ts_clock=clock2,
+            blk=state.blk._replace(valid=blk_valid),
         )
 
         # ---- scatter lane verdicts back to rows
@@ -385,10 +424,12 @@ def round_prepass(state: ShardState, rows, me, cfg: DiLiConfig,
         is_find_k = op_k == OP_FIND
         felig = zb.at[sel].set(elig_k & is_find_k)
         melig = zb.at[sel].set(elig_k & (~is_find_k))
-        return st2, felig, melig, zi.at[sel].set(res_k)
+        hits = jnp.sum(elig_k & use_blk).astype(jnp.int32)
+        return st2, felig, melig, zi.at[sel].set(res_k), hits
 
     def skip(_):
-        return state, zb, zb, zi
+        return state, zb, zb, zi, z0
 
-    st, felig, melig, res = jax.lax.cond(gate, run, skip, None)
-    return PreOut(state=st, find_elig=felig, mut_elig=melig, res=res)
+    st, felig, melig, res, bh = jax.lax.cond(gate, run, skip, None)
+    return PreOut(state=st, find_elig=felig, mut_elig=melig, res=res,
+                  blk_hits=bh)

@@ -84,6 +84,12 @@ def merge_exec(state, bg, me, slot_id, outbox, count, cfg):
         ridx)
     state = state._replace(registry=jax.tree_util.tree_map(
         lambda a, b: jnp.where(valid, b, a), reg, new_reg))
+    # packed-block compaction point (DESIGN.md §12): the relink changed
+    # the left chain AND remove_entry shifted entry indexing — drop the
+    # whole entry-indexed mirror.
+    state = state._replace(blk=state.blk._replace(
+        valid=jnp.where(valid, jnp.zeros_like(state.blk.valid),
+                        state.blk.valid)))
 
     bg = bg._replace(
         phase=jnp.where(valid, BG_MERGE_WAIT, BG_IDLE),

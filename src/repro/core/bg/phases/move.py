@@ -36,6 +36,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ... import blocks as BL
 from ... import messages as M
 from ... import refs, registry as reg_ops
 from ...types import NEG_INF_CT, SH_KEY, ST_KEY
@@ -57,6 +58,12 @@ def move_sh(state, bg, me, slot_id, outbox, count, cfg):
                      sid=state.pool.sid[head_idx],
                      ts=state.pool.ts[head_idx], slot=slot_id)
     outbox, count = M.push(outbox, count, row, ok)
+    # packed-block compaction point (DESIGN.md §12): the entry is about to
+    # start moving (items gain newLoc as copies land) — drop its block now
+    # so no block probe answers a lane the serial path would treat as
+    # moving; the row stays invalid until after the Switch (the rebuild
+    # rejects moving/switched chains).
+    state = state._replace(blk=BL.invalidate_entry(state.blk, eidx, ok))
     bg = bg._replace(
         phase=jnp.where(ok, BG_MOVE_SH_WAIT, BG_IDLE),
         old_head=jnp.where(ok, head_idx, bg.old_head))

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ... import blocks as BL
 from ... import messages as M
 from ... import refs, registry as reg_ops
 from ...types import SH_KEY, ST_KEY
@@ -77,6 +78,11 @@ def split_exec(state, bg, me, slot_id, outbox, count, cfg):
          jnp.asarray(False)))
     state2 = state2._replace(pool=state2.pool._replace(
         ctr=jnp.where(ok, ctr_col, state2.pool.ctr)))
+    # packed-block compaction point (DESIGN.md §12): the mid ST-SH block
+    # now sits inside entry e's chain, so its packed mirror is stale; the
+    # row stays invalid until split_wait lands the registry update (the
+    # rebuild's subtail-identity check rejects the mid-split chain).
+    state2 = state2._replace(blk=BL.invalidate_entry(state2.blk, eidx))
 
     state = jax.tree_util.tree_map(
         lambda a, b: jnp.where(ok, b, a), state, state2)
@@ -110,6 +116,11 @@ def split_wait(state, bg, me, slot_id, outbox, count, cfg):
         bg.split_key, bg.old_keymax, sh_ref, old_subtail, bg.new_slot, a1)
     state = state._replace(registry=jax.tree_util.tree_map(
         lambda a, b: jnp.where(stable, b, a), reg, new_reg))
+    # add_entry shifts every entry index at/after the insertion point —
+    # blocks are entry-indexed, so the whole mirror drops (DESIGN.md §12)
+    state = state._replace(blk=state.blk._replace(
+        valid=jnp.where(stable, jnp.zeros_like(state.blk.valid),
+                        state.blk.valid)))
 
     row = M.make_row(M.MSG_REG_SPLIT, 0, me, key=bg.split_key,
                      x1=bg.old_keymax, ref1=M.ref2i(sh_ref))

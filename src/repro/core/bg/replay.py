@@ -204,8 +204,20 @@ def replay_prepass(state: ShardState, rows, me, outbox, count,
         max_ts = jnp.max(jnp.where(elig, its, jnp.iinfo(jnp.int32).min))
         clock2 = jnp.maximum(state.ts_clock, max_ts + 1)
 
+        # packed-block compaction point (DESIGN.md §12): the splice grows
+        # clone chains that are not registered entries yet, so no valid
+        # block row can mirror them — but the scatter touches the shared
+        # pool, and attribution is per-run, not per-entry; drop the whole
+        # mirror (shard_round's blanket rule would too — this keeps the
+        # invariant local to the writer).
+        any_spliced = jnp.any(elig)
         st2 = state._replace(pool=pool2, free_top=free_top2,
-                             alloc_top=alloc_top2, ts_clock=clock2)
+                             alloc_top=alloc_top2, ts_clock=clock2,
+                             blk=state.blk._replace(
+                                 valid=jnp.where(any_spliced,
+                                                 jnp.zeros_like(
+                                                     state.blk.valid),
+                                                 state.blk.valid)))
 
         # ---- acks, in lane (channel) order
         def push_ack(i, oc):

@@ -62,7 +62,7 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
     All arguments are stacked over the leading shard axis and sharded over
     the mesh's flattened device axes. ``comp_src`` is the shard that
     executed each completed op (route-correction feedback for the client
-    API). ``stats`` is int32[6] per shard, computed on-device so the host
+    API). ``stats`` is int32[7] per shard, computed on-device so the host
     driver never pulls the routed inbox:
 
       0  out_count — attempted outbox pushes (detects ``bucket_by_dst``
@@ -73,6 +73,8 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
       4  background slots still busy after the round (quiescence +
          rebalance-concurrency signal)
       5  MoveItems replayed by the batched scatter splice this round
+      6  fast-path lanes answered via the packed-block kernel probe
+         (DESIGN.md §12)
     """
     num = cfg.num_shards
     assert num == mesh.devices.size, (num, mesh.devices.size)
@@ -101,6 +103,7 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
             jnp.max(jnp.where(is_op, rows[:, M.F_X2], 0)).astype(jnp.int32),
             out.bg_active,
             out.move_hits,
+            out.blk_hits,
         ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),
@@ -129,10 +132,10 @@ def make_dili_round_hostroute(mesh: Mesh, cfg: DiLiConfig):
         (states, bgs, outbox, comp_slot, comp_val, comp_src, stats)
 
     ``outbox`` is the raw [S, mailbox_cap, FIELDS] per-shard outbox;
-    ``stats`` is int32[5] per shard: out_count, bg_active, move_hits,
-    fast_hits, mut_hits. Delegation stats (hops) are computed host-side
-    from the outbox rows themselves — the host sees every frame on this
-    path.
+    ``stats`` is int32[6] per shard: out_count, bg_active, move_hits,
+    fast_hits, mut_hits, blk_hits. Delegation stats (hops) are computed
+    host-side from the outbox rows themselves — the host sees every frame
+    on this path.
     """
     num = cfg.num_shards
     assert num == mesh.devices.size, (num, mesh.devices.size)
@@ -149,6 +152,7 @@ def make_dili_round_hostroute(mesh: Mesh, cfg: DiLiConfig):
             out.move_hits,
             out.fast_hits,
             out.mut_hits,
+            out.blk_hits,
         ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),

@@ -45,6 +45,11 @@ class Route(NamedTuple):
     head_moved: jnp.ndarray  # bool — subhead's sublist switched away (stCt<0)
     head_newloc: jnp.ndarray # uint32 forwarding Ref when head_moved
     no_route: jnp.ndarray    # bool — registry has no covering entry
+    entry: jnp.ndarray       # int32 covering registry entry on this shard's
+                             # replica (-1 if none) — the packed-block row
+                             # a block-probe lane addresses; hinted lanes
+                             # may route fine with entry == -1 on a stale
+                             # replica, so callers must not require it
 
 
 def pool_slot(state: ShardState, idx):
@@ -80,7 +85,7 @@ def resolve_route(state: ShardState, key, sh_hint, me) -> Route:
     head_newloc = refs.unmarked(state.pool.newloc[safe_head])
     return Route(sh_ref=sh_ref, owner=owner, head_idx=head_idx,
                  head_moved=head_moved, head_newloc=head_newloc,
-                 no_route=no_route)
+                 no_route=no_route, entry=jnp.asarray(entry, jnp.int32))
 
 
 def _alloc_node(state: ShardState):

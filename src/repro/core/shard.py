@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from . import batch_apply as BA
 from . import bg as B
+from . import blocks as BL
 from . import messages as M
 from . import ops as O
 from .types import DiLiConfig, RES_PENDING, ShardState
@@ -51,6 +52,10 @@ class RoundOut(NamedTuple):
     bg_active: jnp.ndarray   # int32 — background slots busy after the round
     move_hits: jnp.ndarray   # int32 — MoveItems replayed by the batched
                              # scatter splice (vs the serial walk)
+    blk_hits: jnp.ndarray    # int32 — fast-path lanes whose stage-2 probe
+                             # was the packed-block hybrid-search kernel
+                             # (subset of fast_hits + mut_hits;
+                             # DESIGN.md §12)
 
 
 def _handle_op(state, bg, me, row, outbox, count, cfg):
@@ -116,6 +121,13 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     n_rows = rows.shape[0]
     outbox, count = M.empty_outbox(cfg.mailbox_cap)
 
+    # rebuild dirty packed blocks against round-start state, BEFORE any
+    # mutation — a block validated here mirrors exactly the state both
+    # pre-passes classify against (DESIGN.md §12). Off, the mirror stays
+    # all-invalid and costs nothing.
+    if cfg.block_probe:
+        state = BL.refresh_blocks(state, me, cfg)
+
     # one combined pre-pass: answers eligible FINDs from round-start state
     # and applies eligible INSERT/REMOVEs against it (eligible finds never
     # share a key with a mutation, so their relative order is immaterial),
@@ -145,6 +157,16 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     # unique, so the sort is order-preserving on the kept rows.
     skip = (rows[:, M.F_KIND] == M.MSG_NONE) | pre.find_elig \
         | pre.mut_elig | mrp.handled
+    # blanket packed-block invalidation trigger (DESIGN.md §12): any row
+    # the serial loop will execute, other than pure result routing and
+    # transport acks, may mutate a chain or shift the registry's entry
+    # indexing — per-entry attribution is done where the writer knows the
+    # entry (fast-path apply, bg phase hooks); everything else drops the
+    # whole mirror below.
+    kind0 = rows[:, M.F_KIND]
+    serial_mut = jnp.any((~skip) & (kind0 != M.MSG_NONE)
+                         & (kind0 != M.MSG_RESULT)
+                         & (kind0 != M.MSG_NET_ACK))
     order = jnp.argsort(skip.astype(jnp.int32) * n_rows
                         + jnp.arange(n_rows, dtype=jnp.int32))
     rows = rows[order]
@@ -187,11 +209,22 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     _, state, bg, outbox, count, cslots, cvals, csrcs = jax.lax.while_loop(
         cond, body, init)
 
+    bg_busy = jnp.any(bg.phase != B.BG_IDLE)
     state, bg, outbox, count = B.bg_step(state, bg, me, outbox, count, cfg)
+    bg_busy = bg_busy | jnp.any(bg.phase != B.BG_IDLE)
+
+    # blanket invalidation: serial mutating rows, any bg slot active
+    # around bg_step, or a replayed move splice — a stale valid bit here
+    # would let next round's block probe answer from a chain that changed.
+    dirty_all = serial_mut | bg_busy | jnp.any(mrp.handled)
+    state = state._replace(blk=state.blk._replace(
+        valid=jnp.where(dirty_all, jnp.zeros_like(state.blk.valid),
+                        state.blk.valid)))
     return RoundOut(state=state, bg=bg, outbox=outbox, out_count=count,
                     comp_slot=cslots, comp_val=cvals, comp_src=csrcs,
                     fast_hits=jnp.sum(pre.find_elig).astype(jnp.int32),
                     mut_hits=jnp.sum(pre.mut_elig).astype(jnp.int32),
                     bg_active=jnp.sum(bg.phase != B.BG_IDLE)
                     .astype(jnp.int32),
-                    move_hits=jnp.sum(mrp.handled).astype(jnp.int32))
+                    move_hits=jnp.sum(mrp.handled).astype(jnp.int32),
+                    blk_hits=pre.blk_hits)

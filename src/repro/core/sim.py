@@ -276,7 +276,7 @@ class Cluster:
         self.round_trace: List[str] = []
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
-                      "move_hits": 0, "max_bg_active": 0}
+                      "move_hits": 0, "blk_hits": 0, "max_bg_active": 0}
 
     # ------------------------------------------------------------ client API
     def submit(self, shard: int, kinds: Sequence[int],
@@ -349,6 +349,7 @@ class Cluster:
             self.stats["fast_hits"] += int(out.fast_hits)
             self.stats["mut_hits"] += int(out.mut_hits)
             self.stats["move_hits"] += int(out.move_hits)
+            self.stats["blk_hits"] += int(out.blk_hits)
             self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
                                               int(out.bg_active))
             cnt = int(out.out_count)

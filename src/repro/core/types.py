@@ -66,6 +66,16 @@ class DiLiConfig(NamedTuple):
                                      # pool room (free slots + bump space)
                                      # falls within this margin of the
                                      # batch's allocation demand
+    block_probe: bool = False        # packed-block stage-2 probe: answer
+                                     # fast-path lanes via the Pallas
+                                     # hybrid-search kernel over per-entry
+                                     # key blocks (DESIGN.md §12); lanes
+                                     # whose block is stale bounce to
+                                     # probe_batch and the serial search
+    block_cap: int = 160             # keys per packed block (>= the split
+                                     # threshold + insert slack, like
+                                     # fast_scan_bound; fuller sublists
+                                     # simply never validate a block)
 
 
 class Pool(NamedTuple):
@@ -98,6 +108,24 @@ class Registry(NamedTuple):
     size: jnp.ndarray     # int32[] live entry count
 
 
+class Blocks(NamedTuple):
+    """Packed-block mirror of the owned sublists (DESIGN.md §12): per
+    registry entry, a contiguous sorted copy of the chain's live keys plus
+    their pool slots — the Braginsky & Petrank chunked-sublist layout the
+    paper's §8 points at, and the operand ``kernels/hybrid_search`` sweeps.
+
+    A block is a *cache*, never the source of truth: ``valid[e]`` means
+    row e byte-mirrors entry e's chain as of this round's start. Any
+    mutation that could touch a chain or shift the registry clears valid
+    bits (per-entry where the writer knows the entry, wholesale otherwise)
+    — staleness is detectable, not silent.
+    """
+    keys: jnp.ndarray    # int32[M, C] sorted live keys, padding = ST_KEY
+    idx: jnp.ndarray     # int32[M, C] pool slot of each key (valid where
+                         #             keys != ST_KEY)
+    valid: jnp.ndarray   # bool[M]
+
+
 class ShardState(NamedTuple):
     """Everything one 'server' (device) owns."""
     pool: Pool
@@ -109,6 +137,8 @@ class ShardState(NamedTuple):
     ctr_top: jnp.ndarray    # int32[] bump allocator for counter slots
     ts_clock: jnp.ndarray   # int32[] logical clock (the paper's ts.fetch_add)
     registry: Registry      # this shard's (possibly stale) replica
+    blk: Blocks             # packed-block sublist mirror (all-invalid until
+                            # cfg.block_probe refreshes it)
 
 
 class OpBatch(NamedTuple):
@@ -141,6 +171,15 @@ def empty_pool(cfg: DiLiConfig) -> Pool:
         ctr=jnp.zeros((n,), jnp.int32),
         newloc=jnp.full((n,), refs.NULL_REF, refs.REF_DTYPE),
         keymax=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def empty_blocks(cfg: DiLiConfig) -> Blocks:
+    m, c = cfg.max_sublists, cfg.block_cap
+    return Blocks(
+        keys=jnp.full((m, c), ST_KEY, jnp.int32),
+        idx=jnp.zeros((m, c), jnp.int32),
+        valid=jnp.zeros((m,), bool),
     )
 
 
@@ -191,4 +230,5 @@ def init_shard(cfg: DiLiConfig, sid: int, *, bootstrap: bool = False,
         ctr_top=ctr_top,
         ts_clock=jnp.asarray(2, jnp.int32),
         registry=reg,
+        blk=empty_blocks(cfg),
     )

@@ -35,7 +35,12 @@ Layout:
 Returns:
   * ``slot``  int32[B] — M*C-flattened position of the match (or insertion
                          point) — this is the "page slot" the serving layer
-                         addresses
+                         addresses. When every key of a *full* block is
+                         below q the insertion point is C (past the block),
+                         so ``slot == entry*C + C`` aliases ``(entry+1)*C``
+                         numerically: callers that need (entry, pos) must
+                         decode against their own resolved entry, never
+                         ``slot // C``.
   * ``found`` bool[B]
 """
 from __future__ import annotations
@@ -70,7 +75,14 @@ def _kernel(keymin_ref, blocks_ref, q_ref, slot_ref, found_ref, *,
     rows = blocks_ref[...][entry]        # [TQ, C]
     eq = rows == q[:, None]
     ge = rows >= q[:, None]
-    pos = jnp.argmax(ge, axis=1).astype(jnp.int32)   # insertion point
+    # insertion point. A full block with every key < q leaves ``ge``
+    # all-False, where argmax alone would report position 0 — the exact
+    # opposite end of the block. pos must be C there: insertion past the
+    # block, i.e. the caller delegates to whatever follows the block
+    # (next registry entry / the sublist's tail).
+    pos = jnp.where(jnp.any(ge, axis=1),
+                    jnp.argmax(ge, axis=1),
+                    rows.shape[1]).astype(jnp.int32)
     found = jnp.any(eq, axis=1)
     slot_ref[...] = entry * rows.shape[1] + pos
     found_ref[...] = found
@@ -79,14 +91,23 @@ def _kernel(keymin_ref, blocks_ref, q_ref, slot_ref, found_ref, *,
 @functools.partial(jax.jit, static_argnames=("tile_q", "interpret"))
 def hybrid_search(keymin, blocks, queries, *, tile_q: int = 128,
                   interpret: bool = True):
-    """Batched DiLi lookup. See module docstring for layout contracts."""
+    """Batched DiLi lookup. See module docstring for layout contracts.
+
+    ``queries`` may be ragged: batches are padded internally to the next
+    ``tile_q`` multiple and the outputs sliced back, so hot-path callers
+    never need to know the tile size.
+    """
     b = queries.shape[0]
     m, c = blocks.shape
-    assert b % tile_q == 0, (b, tile_q)
+    pad = (-b) % tile_q
+    if pad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((pad,), queries.dtype)])
+    bp = b + pad
     levels = max(1, math.ceil(math.log2(max(m, 2))))
 
-    grid = (b // tile_q,)
-    return pl.pallas_call(
+    grid = (bp // tile_q,)
+    slot, found = pl.pallas_call(
         functools.partial(_kernel, levels=levels),
         grid=grid,
         in_specs=[
@@ -99,8 +120,9 @@ def hybrid_search(keymin, blocks, queries, *, tile_q: int = 128,
             pl.BlockSpec((tile_q,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b,), jnp.int32),
-            jax.ShapeDtypeStruct((b,), jnp.bool_),
+            jax.ShapeDtypeStruct((bp,), jnp.int32),
+            jax.ShapeDtypeStruct((bp,), jnp.bool_),
         ],
         interpret=interpret,
     )(keymin, blocks, queries)
+    return slot[:b], found[:b]

@@ -7,10 +7,13 @@ and validated against ``ref.py`` in interpret mode.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref as ref_ops
 from .hybrid_search import hybrid_search as _hybrid_search
 from .paged_attention import paged_attention as _paged_attention
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
 
 
 def _default_interpret() -> bool:
@@ -19,10 +22,21 @@ def _default_interpret() -> bool:
 
 def hybrid_search(keymin, blocks, queries, *, tile_q: int = 128,
                   interpret: bool | None = None):
+    """Batched DiLi lookup (registry binary search + block sweep).
+
+    Contract: real keys are strictly below ``INT32_MAX`` — that value is
+    the block/registry padding sentinel, so a query of ``INT32_MAX`` would
+    compare equal to every padding cell and report a spurious hit. Such
+    queries are masked here: their ``found`` is always False (their
+    ``slot`` still points at the row's first padding cell, a correct
+    insertion point for "past every real key"). Ragged batch sizes are
+    handled internally (padded to the tile, outputs sliced back).
+    """
     if interpret is None:
         interpret = _default_interpret()
-    return _hybrid_search(keymin, blocks, queries, tile_q=tile_q,
-                          interpret=interpret)
+    slot, found = _hybrid_search(keymin, blocks, queries, tile_q=tile_q,
+                                 interpret=interpret)
+    return slot, found & (queries != _INT32_MAX)
 
 
 def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
@@ -34,5 +48,11 @@ def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
 
 
 # re-exported oracles
-hybrid_search_ref = ref_ops.hybrid_search_ref
+def hybrid_search_ref(keymin, blocks, queries):
+    """Oracle twin of ``hybrid_search`` above — same sentinel masking, so
+    the public pair stays bit-identical on every int32 input."""
+    slot, found = ref_ops.hybrid_search_ref(keymin, blocks, queries)
+    return slot, found & (queries != _INT32_MAX)
+
+
 paged_attention_ref = ref_ops.paged_attention_ref

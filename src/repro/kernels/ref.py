@@ -14,7 +14,13 @@ def hybrid_search_ref(keymin, blocks, queries):
     rows = blocks[entry]                       # [B, C]
     eq = rows == queries[:, None]
     ge = rows >= queries[:, None]
-    pos = jnp.argmax(ge, axis=1).astype(jnp.int32)
+    # full block, every key < q: ge is all-False and argmax alone would say
+    # position 0 — the insertion point is C (past the block). Same fix as
+    # the kernel; the two must stay bit-identical or differential tests go
+    # blind to exactly this edge.
+    pos = jnp.where(jnp.any(ge, axis=1),
+                    jnp.argmax(ge, axis=1),
+                    c).astype(jnp.int32)
     found = jnp.any(eq, axis=1)
     return entry * c + pos, found
 

@@ -59,15 +59,20 @@ def run_differential(backend_kind: str, seed: int, nemesis, *,
                      n_ops: int = 600, key_space: int = 500,
                      num_shards: int = 4, ops_per_round: int = 8,
                      split_threshold: int = 24,
-                     drain_rounds: int = 12000, keep_backend: bool = False):
+                     drain_rounds: int = 12000, keep_backend: bool = False,
+                     cfg_overrides: dict | None = None):
     """One full differential run; returns a result dict (raises on a
-    drain timeout, asserts nothing itself — callers check the fields)."""
+    drain timeout, asserts nothing itself — callers check the fields).
+    ``cfg_overrides`` are ``DiLiConfig._replace`` kwargs layered over
+    ``small_cfg`` (e.g. ``{"block_probe": True}`` for probe-parity runs)."""
     from repro.api import DiLiClient
     from repro.core.balancer import Balancer
     from repro.core.oracle import OracleList
     from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
 
     cfg = small_cfg(num_shards, big=(backend_kind == "local"))
+    if cfg_overrides:
+        cfg = cfg._replace(**cfg_overrides)
     backend = make_backend(backend_kind, cfg, seed, nemesis)
     bal = Balancer(backend, split_threshold=split_threshold,
                    merge_threshold=6, rng=backend.balancer_rng)

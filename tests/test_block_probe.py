@@ -1,0 +1,173 @@
+"""Differential + invariant tests for the packed-block probe
+(DESIGN.md §12): the Pallas hybrid-search kernel on the hot path.
+
+B1  Differential equivalence: identical random mixed workloads driven
+    through two clusters — ``block_probe`` on vs. off — with channel
+    delays and a live balancer issuing Splits/Moves/Merges, must produce
+    op-for-op identical results and identical final key sets, both equal
+    to the sequential oracle. The off-side's pointer-walk ``probe_batch``
+    is the differential oracle the kernel path is judged against.
+B2  Nemesis-schedule parity: one known-nasty corpus schedule (drop + dup
+    + reorder + delay) replayed with the probe on and off; both must pass
+    the oracle check and end with identical key sets, and the on-side
+    must actually hit blocks (non-vacuity).
+B3  Whitebox mirror invariant: at quiescence with the probe on, every
+    ``blk.valid`` row's key/idx columns byte-mirror its registered
+    sublist's live chain, padded with ST_KEY — the "blocks are a cache,
+    never a source of truth" discipline is observable, not aspirational.
+B4  Non-vacuity on a quiescent list: a read-only batch over a stable
+    cluster is answered entirely by the block probe (``blk_hits`` counts
+    every lane), and the answers are right.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.balancer import Balancer
+from repro.core.oracle import OracleList
+from repro.core.sim import Cluster
+from repro.core.types import (DiLiConfig, ST_KEY, OP_FIND, OP_INSERT,
+                              OP_REMOVE)
+
+CFG = DiLiConfig(num_shards=2, pool_capacity=4096, max_sublists=32,
+                 max_ctrs=32, max_scan=4096, batch_size=16,
+                 mailbox_cap=256, move_batch=8, split_threshold=48,
+                 find_fastpath=True, block_probe=True)
+
+
+def _workload(seed, n_ops, key_space, read_frac):
+    rng = np.random.default_rng(seed)
+    w = (1 - read_frac) / 2
+    kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], n_ops,
+                       p=[read_frac, w, w])
+    keys = rng.integers(1, key_space, n_ops)
+    return kinds.tolist(), keys.tolist()
+
+
+def _drive(cfg, kinds, keys, *, seed, delay, balance_every=3):
+    cl = Cluster(cfg, seed=seed, delay_prob=delay)
+    bal = Balancer(cl)
+    ids = []
+    b = cfg.batch_size
+    r = 0
+    for i in range(0, len(kinds), b):
+        ids += cl.submit(0, kinds[i:i + b], keys[i:i + b])
+        cl.step()
+        if r % balance_every == balance_every - 1:
+            bal.step()
+        r += 1
+    cl.run_until_quiet(2000)
+    return [cl.results[j] for j in ids], cl.all_keys(), dict(cl.stats), cl
+
+
+@pytest.mark.parametrize("seed,read_frac,delay", [
+    (0, 0.6, 0.25),
+    (2, 0.3, 0.2),
+])
+def test_differential_block_probe_vs_pointer_walk(seed, read_frac, delay):
+    """B1: block probe on == off, op for op, under bg churn + delays."""
+    kinds, keys = _workload(seed, 480, 160, read_frac)
+
+    res_on, keys_on, st_on, _ = _drive(
+        CFG, kinds, keys, seed=seed + 7, delay=delay)
+    res_off, keys_off, st_off, _ = _drive(
+        CFG._replace(block_probe=False), kinds, keys,
+        seed=seed + 7, delay=delay)
+
+    assert st_off["blk_hits"] == 0
+    assert st_on["blk_hits"] > 0, \
+        "block probe never fired — differential test is vacuous"
+    assert res_on == res_off, "block probe changed an op result"
+    assert keys_on == keys_off, "block probe changed the final key set"
+
+    oracle = OracleList()
+    expected = oracle.apply_batch(kinds, keys)
+    assert [bool(v) for v in res_on] == expected
+    assert keys_on == sorted(oracle.snapshot())
+
+
+def test_block_probe_nemesis_schedule_parity():
+    """B2: a nemesis corpus schedule with the probe on and off — both
+    oracle-clean, identical key sets, on-side non-vacuous."""
+    from nemesis_harness import check, run_differential
+    from repro.core.net import NemesisConfig
+
+    corpus = json.loads(
+        (pathlib.Path(__file__).parent / "nemesis_corpus.json").read_text())
+    entry = corpus["entries"][0]          # mixed-p02
+    nemesis = NemesisConfig.from_dict(entry["config"])
+    repro = nemesis.repro(entry["seed"])
+
+    runs = {}
+    for on in (True, False):
+        res = run_differential(
+            "local", entry["seed"], nemesis, n_ops=entry["n_ops"],
+            num_shards=2, key_space=300, keep_backend=True,
+            cfg_overrides={"block_probe": on})
+        check(res, repro + f" block_probe={on}")
+        runs[on] = res
+    assert runs[True]["final_keys"] == runs[False]["final_keys"]
+    assert runs[False]["backend"].cluster.stats["blk_hits"] == 0
+    assert runs[True]["backend"].cluster.stats["blk_hits"] > 0, \
+        "probe never fired under the nemesis schedule"
+
+
+def test_block_rows_mirror_chains_at_quiescence():
+    """B3: every valid block row == its chain, in keys AND link idxs."""
+    cl = Cluster(CFG)
+    bal = Balancer(cl)
+    rng = np.random.default_rng(5)
+    kinds, keys = _workload(5, 480, 400, 0.3)
+    b = CFG.batch_size
+    for r, i in enumerate(range(0, len(kinds), b)):
+        cl.submit(0, kinds[i:i + b], keys[i:i + b])
+        cl.step()
+        if r % 3 == 2:
+            bal.step()
+    cl.run_until_quiet(2000)
+    # settle one more round so refresh_blocks runs over the quiet state
+    cl.submit(0, [OP_FIND], [1])
+    cl.run_until_quiet(200)
+
+    c = CFG.block_cap
+    checked = 0
+    for s in range(cl.n):
+        st = cl.states[s]
+        valid = np.asarray(st.blk.valid)
+        bkeys = np.asarray(st.blk.keys)
+        bidx = np.asarray(st.blk.idx)
+        subs = cl.sublists(s)
+        for e, sub in enumerate(subs):
+            if not valid[e]:
+                continue
+            assert sub["owner"] == s and not sub["switched"], \
+                (s, e, "valid block row for a non-local/switched entry")
+            items = cl.shard_chain(s, sub["head_idx"], include_meta=True)
+            ck = [k for k, _, _ in items]
+            ci = [i for _, i, _ in items]
+            n = len(ck)
+            assert n <= c
+            np.testing.assert_array_equal(bkeys[e, :n], ck, err_msg=(s, e))
+            np.testing.assert_array_equal(bidx[e, :n], ci, err_msg=(s, e))
+            assert (bkeys[e, n:] == ST_KEY).all(), (s, e, "pad not ST_KEY")
+            checked += 1
+    assert checked > 0, "no valid block rows at quiescence — vacuous"
+
+
+def test_block_probe_pure_reads_all_hit():
+    """B4: on a quiescent list every read is answered by the kernel."""
+    cl = Cluster(CFG)
+    base = list(range(10, 400, 3))
+    cl.submit(0, [OP_INSERT] * len(base), base)
+    cl.run_until_quiet(800)
+    hits0 = cl.stats["blk_hits"]
+
+    rng = np.random.default_rng(3)
+    qs = rng.integers(1, 450, 64).tolist()
+    ids = cl.submit(0, [OP_FIND] * len(qs), qs)
+    cl.run_until_quiet(400)
+    assert cl.stats["blk_hits"] - hits0 == len(qs)
+    for j, q in zip(ids, qs):
+        assert bool(cl.results[j]) == (q in set(base))

@@ -48,6 +48,70 @@ def test_hybrid_search_matches_ref(m, c, b):
                                   np.asarray(queries)[hits])
 
 
+def test_hybrid_search_full_block_all_less():
+    """Regression: a full block whose keys are all < q must report pos==C.
+
+    With every comparison False, ``argmax(ge)`` used to return 0 — the
+    probe would hand back slot == entry*C (the block's *first* key's
+    link) as the insertion point, silently wrong by the whole block.
+    The contract is slot == entry*C + C: one past the last live key.
+    Hand-computed expectations — this test must fail on the unfixed
+    kernel AND the unfixed oracle, so neither can vouch for the other.
+    """
+    c = 8
+    keymin = jnp.asarray([-1, 50], jnp.int32)
+    blocks = np.full((2, c), INT_MAX, np.int32)
+    blocks[0] = np.arange(10, 10 + c)        # full block: 10..17
+    blocks[1, :3] = [60, 70, 80]
+    blocks = jnp.asarray(blocks)
+    # q=49 routes to entry 0 (49 > keymin[0], <= next bound) and exceeds
+    # every key in the full block; q=75 is a normal interior miss; q=60
+    # pads the batch to a whole tile with an ordinary hit.
+    q = jnp.asarray([49, 18, 75, 60, 60, 60, 60, 60], jnp.int32)
+    for fn in (lambda: K.hybrid_search(keymin, blocks, q, tile_q=8),
+               lambda: K.hybrid_search_ref(keymin, blocks, q)):
+        slot, found = fn()
+        np.testing.assert_array_equal(np.asarray(found)[:3],
+                                      [False, False, False])
+        assert bool(found[3])
+        # entry 0, pos C — NOT slot 0
+        assert int(slot[0]) == 0 * c + c
+        assert int(slot[1]) == 0 * c + c
+        assert int(slot[2]) == 1 * c + 2   # first key >= 75 is 80 at pos 2
+        assert int(slot[3]) == 1 * c + 0
+
+
+def test_hybrid_search_sentinel_query_never_found():
+    """q == INT32_MAX equals the pad value; matching a pad slot must not
+    count as membership (pads are absent keys, and ST_KEY is not a user
+    key). Both public entry points must agree."""
+    c = 8
+    keymin = jnp.asarray([-1, 50], jnp.int32)
+    blocks = np.full((2, c), INT_MAX, np.int32)
+    blocks[0, :4] = [10, 20, 30, 40]
+    blocks = jnp.asarray(blocks)
+    q = jnp.asarray([INT_MAX, INT_MAX, 30], jnp.int32)
+    slot, found = K.hybrid_search(keymin, blocks, q, tile_q=8)
+    slot_r, found_r = K.hybrid_search_ref(keymin, blocks, q)
+    np.testing.assert_array_equal(np.asarray(found), [False, False, True])
+    np.testing.assert_array_equal(np.asarray(found_r), np.asarray(found))
+    np.testing.assert_array_equal(np.asarray(slot_r), np.asarray(slot))
+
+
+@pytest.mark.parametrize("b,tile_q", [(3, 8), (100, 64), (129, 128)])
+def test_hybrid_search_ragged_batch(b, tile_q):
+    """Batches that don't divide tile_q are padded internally and sliced
+    back — callers never see the pad lanes."""
+    rng = np.random.default_rng(b)
+    keymin, blocks = make_registry(rng, 8, 32)
+    q = jnp.asarray(rng.integers(0, 10_500, b).astype(np.int32))
+    slot, found = K.hybrid_search(keymin, blocks, q, tile_q=tile_q)
+    slot_r, found_r = K.hybrid_search_ref(keymin, blocks, q)
+    assert slot.shape == (b,) and found.shape == (b,)
+    np.testing.assert_array_equal(np.asarray(found), np.asarray(found_r))
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(slot_r))
+
+
 @pytest.mark.parametrize("b,h,kh,d,pages,ps", [
     (4, 8, 2, 64, 8, 16),
     (2, 16, 16, 128, 4, 32),   # MHA
