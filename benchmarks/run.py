@@ -107,8 +107,9 @@ def _drive_backend(backend, kinds, keys, batch, *, balancer=None,
     t0 = time.perf_counter()
     i = 0
     r = 0
+    mb = getattr(backend, "membership", None)
     while i < n:
-        for s in range(backend.n):
+        for s in (mb.routable if mb is not None else range(backend.n)):
             j = min(i + batch, n)
             if i < j:
                 backend.submit(s, kinds[i:j].tolist(), keys[i:j].tolist())
@@ -494,6 +495,71 @@ def rebalance(n_keys=125, n_churn=600, key_space=4000):
              backend.stats["max_bg_active"])
         emit("rebalance", f"move_hits_b{slots}",
              backend.stats["move_hits"])
+
+    # ---- C) elastic membership (DESIGN.md §13): rounds to absorb a
+    # joining shard / evacuate a retiring one, and what the change does
+    # to client op latency while mixed churn keeps flowing
+    cfg = DiLiConfig(num_shards=4, pool_capacity=1 << 14,
+                     max_sublists=128, max_ctrs=128, max_scan=1 << 14,
+                     batch_size=32, mailbox_cap=512,
+                     split_threshold=48, move_batch=16, bg_slots=2)
+    backend = LocalBackend(cfg, initial_shards=3)
+    mb = backend.membership
+    rng = np.random.default_rng(9)
+    load_keys = rng.permutation(np.arange(1, key_space))[:n_churn]
+    _drive_backend(backend, np.full(len(load_keys), OP_INSERT),
+                   load_keys, 64)
+    bal = Balancer(backend, rng=backend.balancer_rng)
+    _settle(backend, bal)
+
+    def churn_through_change(tag, fire, done, seed):
+        kinds2, keys2 = mixed_phase(n_churn, key_space, 0.5, seed=seed)
+        pend, lat = {}, []
+        fired_at = change_rounds = None
+        i = r = 0
+        while r < 8000:
+            j = min(i + 32, len(kinds2))
+            if i < j:
+                rt = mb.routable
+                ids = backend.submit(rt[r % len(rt)],
+                                     kinds2[i:j].tolist(),
+                                     keys2[i:j].tolist())
+                for oid in ids:
+                    pend[oid] = r
+                i = j
+            for oid, _val, _src in backend.step():
+                lat.append((r, r - pend.pop(oid)))
+            if r % 2 == 1:
+                bal.step()
+            if fired_at is None and r >= 10:
+                fire()
+                fired_at = r
+            if fired_at is not None and change_rounds is None and done():
+                change_rounds = r - fired_at
+            r += 1
+            if (i >= len(kinds2) and not pend
+                    and change_rounds is not None and backend.quiescent()
+                    and not any(bal.step().values())):
+                break
+        # tail latency *during* the change window (all-run fallback when
+        # the window closed before any op completed inside it)
+        hi = fired_at + (change_rounds or 8000)
+        win = [d for (cr, d) in lat if fired_at <= cr <= hi] \
+            or [d for _, d in lat]
+        emit("rebalance", f"{tag}_ok", int(change_rounds is not None))
+        emit("rebalance", f"{tag}_rounds",
+             change_rounds if change_rounds is not None else r)
+        emit("rebalance", f"{tag}_lat_p50",
+             round(float(np.percentile(win, 50)), 1))
+        emit("rebalance", f"{tag}_lat_p99",
+             round(float(np.percentile(win, 99)), 1))
+
+    churn_through_change("absorb_new_shard",
+                         lambda: backend.join_shard(),
+                         lambda: not mb.joining, seed=10)
+    churn_through_change("evacuate_shard",
+                         lambda: backend.retire_shard(max(mb.active)),
+                         lambda: not mb.draining, seed=11)
 
 
 # ----------------------------------------------------------------- kernels

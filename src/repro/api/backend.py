@@ -32,6 +32,8 @@ import numpy as np
 from repro.core import bg as B
 from repro.core import messages as M
 from repro.core import refs
+from repro.core.membership import (Membership, epoch_row, moves_targeting,
+                                   owned_entry_count)
 from repro.core.sim import (Cluster, OpIdAllocator, OutboxOverflow,
                             chain_keys, global_keys, make_op_row,
                             materialize_ops, registry_entries,
@@ -87,7 +89,9 @@ class LocalBackend:
                  cluster: Optional[Cluster] = None, seed: int = 0,
                  delay_prob: float = 0.0, nemesis=None,
                  retransmit_after: int = 4, net_window: int = 4096,
-                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
+                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX,
+                 initial_shards: Optional[int] = None,
+                 trace: Optional[bool] = None):
         if cluster is None:
             if cfg is None:
                 raise ValueError("LocalBackend needs a DiLiConfig or Cluster")
@@ -95,7 +99,8 @@ class LocalBackend:
                               nemesis=nemesis,
                               retransmit_after=retransmit_after,
                               net_window=net_window,
-                              key_lo=key_lo, key_hi=key_hi)
+                              key_lo=key_lo, key_hi=key_hi,
+                              initial_shards=initial_shards, trace=trace)
         self.cluster = cluster
         self.cfg = cluster.cfg
         self._issued: set = set()
@@ -143,6 +148,17 @@ class LocalBackend:
     def balancer_rng(self):
         """Balancer child stream of the run's root SeedSequence."""
         return self.cluster.balancer_rng
+
+    # ------------------------------------------------- membership (§13)
+    @property
+    def membership(self) -> Membership:
+        return self.cluster.membership
+
+    def join_shard(self, shard: Optional[int] = None) -> int:
+        return self.cluster.join_shard(shard)
+
+    def retire_shard(self, shard: int) -> None:
+        self.cluster.retire_shard(shard)
 
     def quiescent(self) -> bool:
         cl = self.cluster
@@ -208,7 +224,8 @@ class ShardMapBackend:
                  cap_pair: Optional[int] = None, seed: int = 0,
                  nemesis=None, retransmit_after: int = 4,
                  net_window: int = 4096,
-                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
+                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX,
+                 initial_shards: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from jax.sharding import Mesh
@@ -241,8 +258,12 @@ class ShardMapBackend:
                 f"{cfg.mailbox_cap}: per-destination buckets could drop "
                 f"rows undetected")
         # borrow the simulator's init: bootstrap sublist on shard 0 plus
-        # synchronized registry replicas everywhere else
-        boot = Cluster(cfg, seed=seed, key_lo=key_lo, key_hi=key_hi)
+        # synchronized registry replicas everywhere else — and the
+        # membership overlay, so both backends share one lifecycle engine
+        boot = Cluster(cfg, seed=seed, key_lo=key_lo, key_hi=key_hi,
+                       initial_shards=initial_shards)
+        self.membership = boot.membership
+        self._mb_logged = 0
         self._states, self._bgs = stack_states(boot.states, boot.bgs)
         # same child-stream layout as Cluster: (delay, nemesis, balancer)
         self.seed = seed
@@ -287,6 +308,12 @@ class ShardMapBackend:
         return self.cfg.num_shards
 
     def submit(self, shard, kinds, keys, values=None) -> List[int]:
+        if not self.membership.is_routable(shard):
+            raise ValueError(
+                f"submit: shard {shard} is "
+                f"{self.membership.state_of(shard)} at epoch "
+                f"{self.membership.epoch} — route ops to one of "
+                f"{self.membership.routable}")
         kinds, keys, values = materialize_ops(kinds, keys, values)
         ids = []
         for kind, key, val in zip(kinds, keys, values):
@@ -295,6 +322,79 @@ class ShardMapBackend:
                                                    slot))
             ids.append(slot)
         return ids
+
+    # ------------------------------------------------- membership (§13)
+    def join_shard(self, shard: Optional[int] = None) -> int:
+        """Admit a retired mesh slot as a JOINING member. The SPMD mesh
+        stays at its jit-static capacity — the slot was stepping empty
+        rounds all along, so no recompilation happens on join."""
+        s = self.membership.begin_join(shard)
+        self._broadcast_epoch()
+        return s
+
+    def retire_shard(self, shard: int) -> None:
+        """Begin draining ``shard``; the host retires it (and resets its
+        transport lanes, when routing is host-side) once drain completion
+        is provable. The device keeps stepping the empty slot."""
+        self.membership.begin_drain(shard)
+        self._broadcast_epoch()
+
+    def _broadcast_epoch(self) -> None:
+        """Announce the membership view by injecting one MSG_EPOCH row
+        into every capacity slot's client feed. The host feeds each
+        device directly (the rows never cross the shard-to-shard wire),
+        so a nemesis partition cannot block the announcement — shards
+        behind a cut still act on a stale mask safely, exactly as in the
+        Cluster backend, for the *data*-path messages."""
+        mb = self.membership
+        for dst in range(mb.capacity):
+            self._queues[dst].append(
+                epoch_row(dst, dst, mb.epoch, mb.mask()))
+
+    def _drain_complete(self, s: int) -> bool:
+        """Backend-specific half of the retire gate (see
+        ``Cluster._drain_complete`` for the invariant): on the hostroute
+        path the transport's per-lane idleness is exact; on the device
+        path the on-device inbox is opaque, so the conservative witness
+        is the routed-message total hitting zero."""
+        bgs = self.bgs
+        if owned_entry_count(self.cfg, self.states, s) != 0:
+            return False
+        if B.any_active(bgs[s]):
+            return False
+        if moves_targeting(bgs, s) != 0:
+            return False
+        if len(self._queues[s]):
+            return False
+        if self.net is not None:
+            if self._net_backlog[s].shape[0]:
+                return False
+            if not self.net.shard_idle(s):
+                return False
+        elif self._inflight_msgs:
+            return False
+        return True
+
+    def _membership_maintenance(self) -> None:
+        """Host-driven lifecycle advance, once per round (same rules as
+        ``Cluster._membership_maintenance`` — the differential harness
+        holds the two backends to the same membership schedule)."""
+        mb = self.membership
+        if not (mb.joining or mb.draining):
+            return
+        changed = False
+        for s in mb.joining:
+            if owned_entry_count(self.cfg, self.states, s) > 0:
+                mb.promote(s)
+                changed = True
+        for s in mb.draining:
+            if self._drain_complete(s):
+                mb.finish_drain(s)
+                if self.net is not None:
+                    self.net.reset_shard(s)
+                changed = True
+        if changed:
+            self._broadcast_epoch()
 
     def _feed_client(self) -> np.ndarray:
         cfg = self.cfg
@@ -366,6 +466,10 @@ class ShardMapBackend:
             per_src.append((s, rows))
         self.net.route_round(self._net_backlog, per_src, self.round_no)
         comps = self._harvest(cs, cv, cr)
+        self._membership_maintenance()
+        for ep, ev, sh in self.membership.log[self._mb_logged:]:
+            self.round_trace.append(f"r{self.round_no} mb {ev} s{sh} e{ep}")
+        self._mb_logged = len(self.membership.log)
         self.round_trace.append(trace_entry(
             self.round_no, comps, out_counts,
             extra=sum(b.shape[0] for b in self._net_backlog)
@@ -399,6 +503,7 @@ class ShardMapBackend:
             self.stats["max_hops"] = max(self.stats["max_hops"],
                                          int(rstats[:, 3].max()))
         comps = self._harvest(cs, cv, cr)
+        self._membership_maintenance()
         self.round_no += 1
         self.stats["rounds"] += 1
         return comps

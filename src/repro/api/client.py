@@ -85,30 +85,17 @@ class DiLiClient:
         self.balance = balance          # any object with .step() -> dict
         self.balance_every = max(1, int(balance_every))
         self.home_shard = int(home_shard)
-        # Pacing budget: each in-flight op contributes at most one outbox
-        # row per shard per round (its delegation XOR its result), plus one
-        # replicate while its sublist moves. Reserve headroom for the
-        # background slots (each can have ``move_batch`` MoveItems plus
-        # their acks in fabric per round, and a registry broadcast). The
-        # reserve assumes ≤ bg_slots concurrent migrations touch any one
-        # shard (the §7.1 balancer's behaviour); policies aiming more
-        # moves at a single target need a larger mailbox_cap or an
-        # explicit max_inflight (DESIGN.md §9).
-        if max_inflight is None:
-            bg_budget = self.cfg.bg_slots * (2 * self.cfg.move_batch + 2)
-            max_inflight = max(
-                1, self.cfg.mailbox_cap - bg_budget
-                - self.cfg.num_shards - 4)
-            if getattr(backend, "net", None) is not None:
-                # Lossy-wire headroom (DESIGN.md §11): the transport can
-                # release a multi-round backlog of frames in one round
-                # (retransmit bursts after a partition heals, delayed
-                # frames coming due together), concentrating handler
-                # replies that a clean run spreads out — so in-flight ops
-                # claim only half the budget, leaving the rest for
-                # retransmit-burst fan-out.
-                max_inflight = max(1, max_inflight // 2)
-        self.max_inflight = int(max_inflight)
+        # Pacing budget (see _auto_inflight). A caller-pinned budget is
+        # never recomputed; the automatic one follows the membership epoch
+        # (DESIGN.md §13) — the fan-out reserve tracks the *live* shard
+        # count, not the construction-time capacity.
+        self._pinned_inflight = max_inflight is not None
+        mb = getattr(backend, "membership", None)
+        self._seen_epoch = mb.epoch if mb is not None else 0
+        if mb is not None and not mb.is_routable(self.home_shard):
+            self.home_shard = min(mb.active)
+        self.max_inflight = int(max_inflight if self._pinned_inflight
+                                else self._auto_inflight())
         self._queue: deque = deque()                 # unadmitted OpFutures
         self._inflight: Dict[int, OpFuture] = {}     # op_id -> future
         self._busy_keys: Set[int] = set()            # keys with op in flight
@@ -116,6 +103,40 @@ class DiLiClient:
         self._refresh_from: Optional[int] = None     # pending cache refresh
         self._rounds = 0
         self.wrong_routes = 0                        # completions off-route
+
+    def _auto_inflight(self) -> int:
+        """Pacing budget: each in-flight op contributes at most one outbox
+        row per shard per round (its delegation XOR its result), plus one
+        replicate while its sublist moves. Reserve headroom for the
+        background slots (each can have ``move_batch`` MoveItems plus
+        their acks in fabric per round, and a registry broadcast) and one
+        broadcast row per *live* shard — the fan-out a registry update or
+        epoch announcement can add to a single outbox. The reserve assumes
+        ≤ bg_slots concurrent migrations touch any one shard (the §7.1
+        balancer's behaviour); policies aiming more moves at a single
+        target need a larger mailbox_cap or an explicit max_inflight
+        (DESIGN.md §9).
+
+        The budget stays a *global* cap equal to one shard's headroom (it
+        does not scale with the live shard count): after a partition heals
+        the transport can concentrate a multi-round backlog of delegated
+        ops at one executor in one round, and a budget any wider than one
+        shard's headroom turns that burst into OutboxOverflow.
+        """
+        mb = getattr(self.backend, "membership", None)
+        n_live = (len(mb.routable) if mb is not None
+                  else self.cfg.num_shards)
+        bg_budget = self.cfg.bg_slots * (2 * self.cfg.move_batch + 2)
+        budget = max(1, self.cfg.mailbox_cap - bg_budget - n_live - 4)
+        if getattr(self.backend, "net", None) is not None:
+            # Lossy-wire headroom (DESIGN.md §11): the transport can
+            # release a multi-round backlog of frames in one round
+            # (retransmit bursts after a partition heals, delayed frames
+            # coming due together), concentrating handler replies that a
+            # clean run spreads out — so in-flight ops claim only half
+            # the budget, leaving the rest for retransmit-burst fan-out.
+            budget = max(1, budget // 2)
+        return budget
 
     # ------------------------------------------------------------ submission
     def find(self, key: int) -> OpFuture:
@@ -167,6 +188,20 @@ class DiLiClient:
     def pump(self, run_balance: bool = True) -> int:
         """One round: refresh-route, admit, execute, harvest. Returns the
         number of futures resolved this round."""
+        mb = getattr(self.backend, "membership", None)
+        if mb is not None and mb.epoch != self._seen_epoch:
+            # membership changed (DESIGN.md §13): re-aim the home shard if
+            # it left, recompute the pacing budget against the new live
+            # count (unless the caller pinned it), and refresh the route
+            # cache so draining shards stop receiving fresh ops promptly
+            # (stale routes would still be *safe* — just slower to heal).
+            self._seen_epoch = mb.epoch
+            if not mb.is_routable(self.home_shard):
+                self.home_shard = min(mb.active)
+            if not self._pinned_inflight:
+                self.max_inflight = self._auto_inflight()
+            if self.route_cache:
+                self._refresh_from = self.home_shard
         if self._refresh_from is not None and self.route_cache:
             self.refresh_route_cache(self._refresh_from)
         self._admit()
@@ -219,11 +254,14 @@ class DiLiClient:
 
     # -------------------------------------------------------------- routing
     def route(self, key: int) -> int:
-        """Predicted owner shard for ``key`` (home shard when uncached)."""
+        """Predicted owner shard for ``key`` (home shard when uncached or
+        when the cached owner is no longer a routable member)."""
         if self.route_cache:
             owner = self._cache.lookup(key)
             if owner is not None and 0 <= owner < self.backend.n:
-                return owner
+                mb = getattr(self.backend, "membership", None)
+                if mb is None or mb.is_routable(owner):
+                    return owner
         return self.home_shard
 
     def refresh_route_cache(self, shard: Optional[int] = None) -> None:
@@ -287,5 +325,6 @@ def local_client(cfg, **kw) -> DiLiClient:
     """Convenience: a ``DiLiClient`` over a fresh ``LocalBackend``."""
     backend_kw = {k: kw.pop(k) for k in
                   ("seed", "delay_prob", "nemesis", "retransmit_after",
-                   "net_window", "key_lo", "key_hi") if k in kw}
+                   "net_window", "key_lo", "key_hi", "initial_shards",
+                   "trace") if k in kw}
     return DiLiClient(LocalBackend(cfg, **backend_kw), **kw)

@@ -77,29 +77,44 @@ class Balancer:
     def step(self) -> dict:
         """One balancing pass; returns counts of issued commands."""
         cl = self.cl
-        issued = {"split": 0, "move": 0, "merge": 0}
-        owned = {s: self._owned(s) for s in range(cl.n)}
-        loads = {s: sum(e["size"] for e in owned[s]) for s in range(cl.n)}
+        issued = {"split": 0, "move": 0, "merge": 0, "evacuate": 0}
+        # membership view (DESIGN.md §13): sources of load are every
+        # routable shard, valid destinations for new moves are
+        # active+joining, and draining shards get force-evacuated below.
+        # A membership-less cluster (raw duck-typed surface) balances over
+        # all shards, exactly as before.
+        mb = getattr(cl, "membership", None)
+        if mb is None:
+            routable = targets = list(range(cl.n))
+            draining = []
+        else:
+            routable = list(mb.routable)
+            targets = list(mb.targets)
+            draining = list(mb.draining)
+        owned = {s: self._owned(s) for s in routable}
+        loads = {s: sum(e["size"] for e in owned[s]) for s in routable}
         total = sum(loads.values())
-        mean = total / max(cl.n, 1)
+        # the mean the policy steers toward is over the shards that will
+        # still hold data after the drains complete
+        mean = total / max(len(targets), 1)
 
         # per-shard slot budget + per-entry claims of in-flight ops; both
         # are maintained locally as commands are issued this pass. Snapshot
         # ``cl.bgs`` once: on ShardMapBackend every access pulls the whole
         # stacked table device-to-host
         bgs = cl.bgs
-        free = {s: B.free_slots(bgs[s]) for s in range(cl.n)}
-        claimed = {s: B.claimed_keys(bgs[s]) for s in range(cl.n)}
+        free = {s: B.free_slots(bgs[s]) for s in routable}
+        claimed = {s: B.claimed_keys(bgs[s]) for s in routable}
 
         # account load already *en route*: an in-flight Move's sublist
         # still counts against its source until the registry transfer
         # lands, so without this discount every pass during the (multi-
         # round) copy re-diagnoses the same overload and dogpiles more
         # moves onto it
-        for s in range(cl.n):
+        for s in routable:
             for key, tgt in B.active_moves(bgs[s]):
                 e = next((x for x in owned[s] if x["keymax"] == key), None)
-                if e is not None and 0 <= tgt < cl.n and tgt != s:
+                if e is not None and tgt in loads and tgt != s:
                     loads[s] -= e["size"]
                     loads[tgt] += e["size"]
 
@@ -112,12 +127,43 @@ class Balancer:
         # entries haven't landed in yet.
         inflight_splits = sum(
             int(((ph == B.BG_SPLIT_EXEC) | (ph == B.BG_SPLIT_WAIT)).sum())
-            for ph in (B.slot_phases(bgs[s]) for s in range(cl.n)))
+            for ph in (B.slot_phases(bgs[s]) for s in routable))
         reg_used = max(int(cl.states[s].registry.size) for s in range(cl.n))
         reg_room = (cl.cfg.max_sublists - reg_used
                     - self.registry_headroom - inflight_splits)
 
-        for s in range(cl.n):
+        def pick_target(exclude):
+            cands = [d for d in targets if d != exclude]
+            if not cands:
+                return None
+            if self.rng is not None:
+                # seeded tie-break among equally-loaded targets; min() is
+                # stable, so shuffling only reorders ties
+                cands = list(cands)
+                self.rng.shuffle(cands)
+            return min(cands, key=lambda d: loads[d])
+
+        # 0) evacuate draining shards: every sublist they own is force-
+        # moved onto the least-loaded target, bypassing the improvement
+        # gates of stage 2 — the point is to empty the shard, not to even
+        # the load (retire_shard's finish gate waits on owned == 0)
+        for s in draining:
+            for e in sorted(owned[s], key=lambda x: -x["size"]):
+                if free[s] <= 0:
+                    break
+                if e["keymax"] in claimed[s] or e["switched"]:
+                    continue
+                tgt = pick_target(s)
+                if tgt is None:
+                    break
+                if cl.move(s, e["keymax"], tgt):
+                    issued["evacuate"] += 1
+                    free[s] -= 1
+                    claimed[s].add(e["keymax"])
+                    loads[s] -= e["size"]
+                    loads[tgt] += e["size"]
+
+        for s in targets:
             entries = owned[s]
 
             def unclaimed(e):
@@ -145,19 +191,13 @@ class Balancer:
             # donors (and repeated moves within this pass) spread over
             # *currently* least-loaded targets instead of dogpiling the
             # pass-start minimum
-            while (cl.n > 1 and free[s] > 0
+            while (len(targets) > 1 and free[s] > 0
                    and loads[s] > self.move_headroom * mean):
                 cands = [e for e in entries if unclaimed(e)]
                 if not cands:
                     break
-                order = list(range(cl.n))
-                if self.rng is not None:
-                    # seeded tie-break among equally-loaded targets; the
-                    # min() below is stable, so shuffling only reorders
-                    # ties (load ranking is untouched)
-                    self.rng.shuffle(order)
-                tgt = min(order, key=lambda d: loads[d])
-                if tgt == s or loads[s] - loads[tgt] <= 1:
+                tgt = pick_target(s)
+                if tgt is None or loads[s] - loads[tgt] <= 1:
                     break
                 # move the sublist that best evens the load — but only
                 # if it strictly improves the pairwise imbalance (else a
@@ -189,4 +229,89 @@ class Balancer:
                             free[s] -= 1
                             claimed[s].add(a["keymax"])
                             claimed[s].add(b["keymax"])
+        return issued
+
+
+class AutoscalePolicy:
+    """Elastic sizing over a membership-aware backend (DESIGN.md §13):
+    the human does not choose the shard count.
+
+    Wraps a ``Balancer`` — every pass first runs the inner policy (splits,
+    moves, evacuations), then considers at most *one* membership change:
+
+      * **join** when total load exceeds ``join_headroom`` (125%) of what
+        the current active set should carry at ``target_load`` keys per
+        shard — a retired slot is admitted and the inner balancer's next
+        passes drain sublists onto it;
+      * **retire** the least-loaded active shard when total load falls
+        below ``retire_headroom`` (45%) of the active set's target
+        capacity.
+
+    The wide hysteresis band between the two thresholds, plus a
+    ``cooldown`` of quiet passes after every change and the one-change-
+    at-a-time rule (no decision while any shard is joining or draining),
+    keeps the policy from flapping when load hovers near a boundary.
+
+    Returned counts include ``join``/``retire``, so ``DiLiClient.settle``
+    treats a pass that resized the cluster as progress, not a fixed point.
+    """
+
+    def __init__(self, backend, *, target_load: int,
+                 join_headroom: float = 1.25, retire_headroom: float = 0.45,
+                 min_shards: int = 1, max_shards: Optional[int] = None,
+                 cooldown: int = 3, balancer: Optional[Balancer] = None,
+                 rng=None):
+        if not hasattr(backend, "membership"):
+            raise ValueError(
+                "AutoscalePolicy needs a membership-aware backend "
+                "(Cluster / LocalBackend / ShardMapBackend)")
+        self.cl = backend
+        self.balancer = (balancer if balancer is not None
+                         else Balancer(backend, rng=rng))
+        self.target_load = int(target_load)
+        self.join_headroom = float(join_headroom)
+        self.retire_headroom = float(retire_headroom)
+        self.min_shards = int(min_shards)
+        self.max_shards = max_shards
+        self.cooldown = int(cooldown)
+        self._cool = 0
+
+    def _load(self, s: int) -> int:
+        return sum(e["size"] for e in self.cl.sublists(s)
+                   if e["owner"] == s and e["size"] is not None
+                   and not e["switched"])
+
+    def step(self) -> dict:
+        issued = self.balancer.step()
+        issued.setdefault("join", 0)
+        issued.setdefault("retire", 0)
+        mb = self.cl.membership
+        if self._cool > 0:
+            # a cooling pass is NOT a fixed point — without the marker,
+            # DiLiClient.settle would read the all-zero counts as "done"
+            # and stop before the post-cooldown decision ever runs
+            self._cool -= 1
+            issued["cooldown"] = 1
+            return issued
+        if mb.joining or mb.draining:
+            # one membership change at a time: the previous one must
+            # finish (promote / retire) before the next decision —
+            # marked as progress for the same reason as cooldown
+            issued["inflight"] = 1
+            return issued
+        loads = {s: self._load(s) for s in mb.active}
+        total = sum(loads.values())
+        n = len(mb.active)
+        cap = mb.capacity if self.max_shards is None else self.max_shards
+        if (total > self.join_headroom * self.target_load * n
+                and n < cap and mb.retired):
+            self.cl.join_shard()
+            issued["join"] += 1
+            self._cool = self.cooldown
+        elif (total < self.retire_headroom * self.target_load * n
+                and n > self.min_shards):
+            victim = min(mb.active, key=lambda s: (loads[s], s))
+            self.cl.retire_shard(victim)
+            issued["retire"] += 1
+            self._cool = self.cooldown
         return issued

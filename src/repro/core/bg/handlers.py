@@ -286,13 +286,33 @@ def h_move_ack(state, table, me, row, outbox, count, cfg):
 
 
 def h_switch_st(state, table, me, row, outbox, count, cfg):
-    """SwitchSTRecv (Lines 272-277 + 297-302)."""
+    """SwitchSTRecv (Lines 272-277 + 297-302).
+
+    A mover routes SwitchST by its *replica's* view of the left
+    neighbor's owner. That view can be permanently stale for a shard
+    that joined after restructures it never saw (DESIGN.md §13), so a
+    misrouted request is delegated toward the owner this replica names —
+    the same forwarding idiom client ops use — rather than failure-acked
+    (the mover would re-route from the same stale replica forever). The
+    token stays single-flighted: a forwarding hop does NOT ack, so the
+    mover keeps waiting and only the terminal hop (the owner, or a hop
+    whose budget ran out) replies; the mover never retries while a
+    delegated copy is still in flight.
+    """
     keymin = row[M.F_KEY]
     new_sh = M.i2ref(row[M.F_REF1])
+    reg = state.registry
+    left = reg_ops.get_by_key(reg, keymin)
+    lidx = jnp.clip(left, 0, None)
+    owner = refs.ref_sid(reg.subhead[lidx])
+    delegate = (left >= 0) & (owner != me) & (row[M.F_A] < cfg.max_retries)
     state, success = U.switch_next_st(state, me, keymin, new_sh)
+    fwd = row.at[M.F_A].set(row[M.F_A] + 1)
+    fwd = fwd.at[M.F_DST].set(owner)
+    outbox, count = M.push(outbox, count, fwd, delegate)
     ack = M.make_row(M.MSG_SWITCH_ST_ACK, row[M.F_SRC], me,
                      a=success.astype(jnp.int32), slot=row[M.F_SLOT])
-    outbox, count = M.push(outbox, count, ack)
+    outbox, count = M.push(outbox, count, ack, ~delegate)
     return state, table, outbox, count
 
 
@@ -332,7 +352,18 @@ def h_reg_split(state, table, me, row, outbox, count, cfg):
 
 
 def h_switch_server(state, table, me, row, outbox, count, cfg):
-    """SwitchServerRecv (Lines 285-287): repoint a registry entry."""
+    """SwitchServerRecv (Lines 285-287): repoint a registry entry.
+
+    Replicas can be *coarser* than the sender's registry: a shard that was
+    retired while splits happened rejoins with entries that cover the
+    switched range without matching it (the peer-mask fan-out gate skipped
+    it by design — DESIGN.md §13). Such a replica self-heals here: the
+    switched range is carved out of the stale covering entry (the
+    remainders keep the old routing ref, which delegation corrects
+    lazily). Without the carve, a move targeting the rejoined shard would
+    never record its new ownership, and the next Move's SwitchST against
+    it would retry forever.
+    """
     keymin, keymax = row[M.F_KEY], row[M.F_X1]
     sh_ref, st_ref = M.i2ref(row[M.F_REF1]), M.i2ref(row[M.F_X3])
     reg = state.registry
@@ -347,10 +378,47 @@ def h_switch_server(state, table, me, row, outbox, count, cfg):
                                  ctr=new_ctr, offset=0)
     state = state._replace(registry=jax.tree_util.tree_map(
         lambda a, b: jnp.where(exact, b, a), reg, new_reg))
+
+    # carve-out for a stale covering entry (never one of my own chains —
+    # a range I own cannot be switched under me)
+    reg = state.registry
+    old_sh = reg.subhead[eidx]
+    old_keymax = reg.keymax[eidx]
+    covered = (e >= 0) & (~exact) & (reg.keymin[eidx] <= keymin) & \
+        (old_keymax >= keymax) & (refs.ref_sid(old_sh) != me)
+    left_rem = covered & (reg.keymin[eidx] < keymin)
+    right_rem = covered & (old_keymax > keymax)
+    room = (reg.size + left_rem.astype(jnp.int32)
+            + right_rem.astype(jnp.int32)) <= reg.keymin.shape[0]
+    carve = covered & room
+    # stage 1: the covering entry becomes either the left remainder (old
+    # ref) or, with no left remainder, the switched entry itself
+    reg1 = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(left_rem, a, b),
+        reg_ops.set_fields(reg, eidx, keymax=keymin),
+        reg_ops.set_fields(reg, eidx, keymax=keymax, subhead=sh_ref,
+                           subtail=st_ref, ctr=new_ctr, offset=0))
+    # stage 2: with a left remainder, add the switched entry
+    reg2 = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(left_rem, a, b),
+        reg_ops.add_entry(reg1, keymin, keymax, sh_ref, st_ref,
+                          new_ctr, 0),
+        reg1)
+    # stage 3: add the right remainder (old ref; replicas carry a null
+    # subtail, same as h_reg_split)
+    reg3 = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(right_rem, a, b),
+        reg_ops.add_entry(reg2, keymax, old_keymax, old_sh,
+                          refs.null_ref(), 0, 0),
+        reg2)
+    state = state._replace(registry=jax.tree_util.tree_map(
+        lambda a, b: jnp.where(carve, b, a), reg, reg3))
+
     retry = row.at[M.F_A].set(row[M.F_A] + 1)
     retry = retry.at[M.F_DST].set(me)
     outbox, count = M.push(outbox, count, retry,
-                           (~exact) & (row[M.F_A] < cfg.max_retries))
+                           (~exact) & (~carve)
+                           & (row[M.F_A] < cfg.max_retries))
     return state, table, outbox, count
 
 

@@ -118,7 +118,11 @@ def merge_wait(state, bg, me, slot_id, outbox, count, cfg):
 
     def send(i, oc):
         ob, ct = oc
-        return M.push(ob, ct, row.at[M.F_DST].set(i), stable & (i != me))
+        # peer-mask fan-out gate (DESIGN.md §13); merges are owner-local,
+        # so skipping a retired peer only leaves its replica stale
+        live = ((state.peers >> i) & 1) != 0
+        return M.push(ob, ct, row.at[M.F_DST].set(i),
+                      stable & (i != me) & live)
 
     outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
                                       (outbox, count))

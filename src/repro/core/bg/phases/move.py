@@ -215,7 +215,13 @@ def switch_reg(state, bg, me, slot_id, outbox, count, cfg):
 
     def send(i, oc):
         ob, ct = oc
-        return M.push(ob, ct, row.at[M.F_DST].set(i), (e >= 0) & (i != me))
+        # peer-mask fan-out gate (DESIGN.md §13) — except the move target,
+        # which must always learn the transfer even if this shard's mask
+        # is stale (the host validated the target against live membership
+        # when it queued the move; skipping it would strand ownership)
+        live = (((state.peers >> i) & 1) != 0) | (i == bg.target)
+        return M.push(ob, ct, row.at[M.F_DST].set(i),
+                      (e >= 0) & (i != me) & live)
 
     outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
                                       (outbox, count))

@@ -128,7 +128,12 @@ def split_wait(state, bg, me, slot_id, outbox, count, cfg):
     def send(i, oc):
         ob, ct = oc
         r = row.at[M.F_DST].set(i)
-        return M.push(ob, ct, r, stable & (i != me))
+        # fan-out gated on the live-peer bitmask (DESIGN.md §13): retired
+        # shards drop out of registry replication without a recompile; a
+        # stale mask only costs a later peer a stale replica, which the
+        # lazily-replicated registry tolerates by design
+        live = ((state.peers >> i) & 1) != 0
+        return M.push(ob, ct, r, stable & (i != me) & live)
 
     outbox, count = jax.lax.fori_loop(0, cfg.num_shards, send,
                                       (outbox, count))

@@ -47,7 +47,11 @@ MSG_NET_ACK = 17        # transport-level cumulative ack (DESIGN.md §11):
                         # host, never delivered to shard_round. It still
                         # gets a (no-op) dispatch branch so a leaked frame
                         # cannot clip onto a real handler.
-N_KINDS = 18            # dispatch-table size (shard_round lax.switch)
+MSG_EPOCH = 18          # membership-epoch announcement (DESIGN.md §13):
+                        # F_KEY = epoch, F_X1 = live-peer bitmask. The
+                        # handler merges monotonically (max on epoch), so
+                        # duplicated/reordered deliveries are idempotent.
+N_KINDS = 19            # dispatch-table size (shard_round lax.switch)
 
 # ---------------------------------------------------------------- layout
 # field meanings are per-kind; see docstrings at the emit sites.

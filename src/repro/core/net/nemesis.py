@@ -138,6 +138,14 @@ class Nemesis:
         """Frames held by `delay` and not yet released."""
         return sum(len(v) for v in self._held.values())
 
+    def held_touching(self, shard: int) -> int:
+        """Held frames on lanes touching ``shard`` — consulted by
+        ``Transport.shard_idle`` so a lane reset can't race a delayed
+        duplicate into the fresh sequence stream (DESIGN.md §13)."""
+        return sum(1 for frames in self._held.values()
+                   for src, dst, _ in frames
+                   if src == shard or dst == shard)
+
     # ------------------------------------------------------------- perturb
     def perturb(self, frames: List[Frame], round_no: int) -> List[Frame]:
         """Adversarially filter one round's wire batch.

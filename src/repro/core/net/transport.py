@@ -220,6 +220,43 @@ class Transport:
             if rows.size:
                 backlogs[d] = np.concatenate([backlogs[d], rows], axis=0)
 
+    # --------------------------------------------------- membership (§13)
+    def shard_idle(self, shard: int) -> bool:
+        """No frame anywhere in the system references a lane touching
+        ``shard``: nothing staged, unacked, buffered out-of-order, owing
+        an ack, or held by the nemesis' delay stage. This is the
+        precondition for ``reset_shard`` — resetting a lane while any old
+        frame survives would let a stale sequence number alias into the
+        fresh lane's numbering (a delayed duplicate of old seq 5 would sit
+        in the new lane's dedup window and eventually be *delivered* into
+        the new stream)."""
+        shard = int(shard)
+        if any(s == shard or d == shard for s, d, _ in self._staged):
+            return False
+        for (src, dst), lane in self._lanes.items():
+            if src != shard and dst != shard:
+                continue
+            if lane.unacked or lane.pending or lane.ack_due:
+                return False
+        if self.nemesis is not None and self.nemesis.held_touching(shard):
+            return False
+        return True
+
+    def reset_shard(self, shard: int) -> None:
+        """Drop every lane touching ``shard`` — the re-handshake across a
+        membership epoch bump (DESIGN.md §13). A later send lazily
+        allocates a fresh lane starting at seq 1 / cursor 0, so a slot
+        reused by a future ``join_shard`` starts with clean channels.
+        Refuses (loudly) while any such lane is non-idle: see
+        ``shard_idle`` for why a hot reset would break exactly-once."""
+        if not self.shard_idle(shard):
+            raise RuntimeError(
+                f"reset_shard({shard}): lanes touching the shard still "
+                f"have frames in flight — retire must drain first")
+        for key in [k for k in self._lanes
+                    if k[0] == shard or k[1] == shard]:
+            del self._lanes[key]
+
     # --------------------------------------------------------------- state
     def in_flight(self) -> int:
         """Frames whose delivery is not yet certain to be settled:

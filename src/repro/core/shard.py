@@ -89,6 +89,21 @@ def _noop(state, bg, me, row, outbox, count, cfg):
             jnp.zeros((), jnp.int32))
 
 
+def _handle_epoch(state, bg, me, row, outbox, count, cfg):
+    # Monotone merge of the membership announcement (DESIGN.md §13):
+    # a newer epoch replaces the peer bitmask wholesale; an equal epoch
+    # carries an identical mask (the host is the single writer), so
+    # duplicates and cross-lane reorderings are idempotent by max().
+    e = row[M.F_KEY]
+    take = e > state.epoch
+    state = state._replace(
+        epoch=jnp.maximum(state.epoch, e),
+        peers=jnp.where(take, row[M.F_X1], state.peers))
+    neg = jnp.asarray(-1, jnp.int32)
+    return (state, bg, outbox, count, neg, jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32))
+
+
 _HANDLERS = {
     M.MSG_OP: _handle_op,
     M.MSG_RESULT: _handle_result,
@@ -108,6 +123,7 @@ _HANDLERS = {
     M.MSG_REG_SPLIT: _wrap_bg(B.h_reg_split),
     M.MSG_SWITCH_SERVER: _wrap_bg(B.h_switch_server),
     M.MSG_REG_MERGED: _wrap_bg(B.h_reg_merged),
+    M.MSG_EPOCH: _handle_epoch,
 }
 _N_KINDS = M.N_KINDS
 
@@ -166,7 +182,8 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     kind0 = rows[:, M.F_KIND]
     serial_mut = jnp.any((~skip) & (kind0 != M.MSG_NONE)
                          & (kind0 != M.MSG_RESULT)
-                         & (kind0 != M.MSG_NET_ACK))
+                         & (kind0 != M.MSG_NET_ACK)
+                         & (kind0 != M.MSG_EPOCH))
     order = jnp.argsort(skip.astype(jnp.int32) * n_rows
                         + jnp.arange(n_rows, dtype=jnp.int32))
     rows = rows[order]

@@ -33,6 +33,8 @@ import numpy as np
 from . import bg as B
 from . import messages as M
 from . import refs
+from .membership import (Membership, epoch_broadcast, moves_targeting,
+                         owned_entry_count)
 from .net import Nemesis, NemesisConfig, Transport, trace_entry
 from .shard import shard_round
 from .types import (DiLiConfig, KEY_MAX, KEY_MIN, OP_FIND, OP_INSERT,
@@ -212,15 +214,30 @@ class Cluster:
                  nemesis: Optional[NemesisConfig] = None,
                  retransmit_after: int = 4, net_window: int = 4096,
                  trace: Optional[bool] = None,
-                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX):
+                 key_lo: int = KEY_MIN, key_hi: int = KEY_MAX,
+                 initial_shards: Optional[int] = None):
         self.cfg = cfg
         self.n = cfg.num_shards
+        # elastic membership (DESIGN.md §13): cfg.num_shards is the
+        # jit-static *capacity*; all capacity shards are constructed and
+        # stepped every round, and which of them are members is a
+        # host-side overlay. initial_shards=None means all-active (the
+        # legacy fixed-membership cluster, byte-identical to before).
+        self.membership = Membership(self.n, initial_shards)
+        self._mb_logged = 0
+        # host->shard control rows (MSG_EPOCH broadcasts) staged between
+        # rounds; flushed into the routed message stream in step() so they
+        # ride the same (partitionable, retransmitted) wire as everything
+        # else.
+        self._ctrl_out: List[Tuple[int, np.ndarray]] = []
         # shard 0 bootstraps the full key range; the others hold registry
         # replicas routing to it (the paper's lazily-replicated registry
-        # starts synchronized).
+        # starts synchronized). Initially-retired slots get the replica
+        # too — a later join_shard must be able to route from round one.
+        peers0 = self.membership.mask()
         self.states: List[ShardState] = [
             init_shard(cfg, s, bootstrap=(s == 0),
-                       key_lo=key_lo, key_hi=key_hi)
+                       key_lo=key_lo, key_hi=key_hi, peers_mask=peers0)
             for s in range(self.n)
         ]
         from . import registry as reg_ops
@@ -295,6 +312,12 @@ class Cluster:
         that never drains them exhausts the space and ``submit`` raises
         (never silently wraps).
         """
+        if not self.membership.is_routable(shard):
+            raise ValueError(
+                f"submit: shard {shard} is "
+                f"{self.membership.state_of(shard)} at epoch "
+                f"{self.membership.epoch} — route ops to one of "
+                f"{self.membership.routable}")
         kinds, keys, values = materialize_ops(kinds, keys, values)
         ids = []
         rows = []
@@ -320,6 +343,73 @@ class Cluster:
         self.result_src.pop(op_id, None)
         self._ids.release(op_id)
         return val
+
+    # ------------------------------------------------- membership (§13)
+    def join_shard(self, shard: Optional[int] = None) -> int:
+        """Admit a retired capacity slot as a JOINING member (empty — the
+        balancer's rebalancing drains sublists onto it; the host promotes
+        it to ACTIVE once it owns one). Returns the joined shard id."""
+        s = self.membership.begin_join(shard)
+        self._broadcast_epoch()
+        return s
+
+    def retire_shard(self, shard: int) -> None:
+        """Begin draining ``shard``: the balancer force-evacuates every
+        sublist it owns, it keeps executing (delegations in flight must
+        land), and the host retires it — resetting its transport lanes —
+        once ``_drain_complete`` proves nothing can still reach it."""
+        self.membership.begin_drain(shard)
+        self._broadcast_epoch()
+
+    def _broadcast_epoch(self) -> None:
+        """Stage a MSG_EPOCH announcement to every capacity slot, from the
+        lowest *active* shard — never from a draining one, whose own
+        retirement is gated on its lanes going idle (a self-announcement
+        would deadlock that gate)."""
+        rows = epoch_broadcast(self.membership)
+        src = int(min(self.membership.active))
+        self._ctrl_out.append((src, np.stack(rows).astype(np.int32)))
+
+    def _drain_complete(self, s: int) -> bool:
+        """True when retiring ``s`` can strand nothing: it owns no
+        sublist, runs no bg op, no peer's in-flight Move targets it, no
+        queued/staged row can still be delivered to it, and every
+        transport lane touching it is idle (incl. nemesis-held frames)."""
+        if owned_entry_count(self.cfg, self.states, s) != 0:
+            return False
+        if B.any_active(self.bgs[s]):
+            return False
+        if moves_targeting(self.bgs, s) != 0:
+            return False
+        if self.backlog[s].shape[0]:
+            return False
+        if self._ctrl_out:
+            return False
+        if self.net is not None and not self.net.shard_idle(s):
+            return False
+        return True
+
+    def _membership_maintenance(self) -> None:
+        """Host-driven lifecycle advance, once per round (deterministic:
+        a pure function of post-round state). Promotes joining shards
+        that own their first sublist; retires draining shards whose drain
+        is provably complete, resetting their lanes before announcing."""
+        mb = self.membership
+        if not (mb.joining or mb.draining):
+            return
+        changed = False
+        for s in mb.joining:
+            if owned_entry_count(self.cfg, self.states, s) > 0:
+                mb.promote(s)
+                changed = True
+        for s in mb.draining:
+            if self._drain_complete(s):
+                mb.finish_drain(s)
+                if self.net is not None:
+                    self.net.reset_shard(s)
+                changed = True
+        if changed:
+            self._broadcast_epoch()
 
     # ------------------------------------------------------------- execution
     def step(self) -> int:
@@ -382,6 +472,13 @@ class Cluster:
                 self._pending_ops.pop(int(slot), None)
                 ndone += 1
 
+        # host->shard membership announcements join the routed stream
+        # here (after the shard outboxes, a deterministic position) so
+        # they are partitioned/retransmitted like any protocol message.
+        if self._ctrl_out:
+            new_msgs.extend(self._ctrl_out)
+            self._ctrl_out = []
+
         # ------------------------------------------------ route (FIFO/pair)
         if self.net is not None:
             # reliable transport over the (possibly nemesis-perturbed)
@@ -406,7 +503,14 @@ class Cluster:
                 else:
                     self.backlog[d] = np.concatenate(
                         [self.backlog[d], mine], axis=0)
+        self._membership_maintenance()
         if self.trace_enabled:
+            # membership transitions are part of the replay witness: a
+            # run that joins/retires at a different round is not a replay
+            for ep, ev, sh in self.membership.log[self._mb_logged:]:
+                self.round_trace.append(
+                    f"r{self.round_no} mb {ev} s{sh} e{ep}")
+            self._mb_logged = len(self.membership.log)
             self.round_trace.append(trace_entry(
                 self.round_no, self.last_completions, out_counts,
                 extra=sum(b.shape[0] for b in self.backlog)
@@ -426,6 +530,7 @@ class Cluster:
             busy = any(b.shape[0] for b in self.backlog)
             busy = busy or any(B.any_active(bg) for bg in self.bgs)
             busy = busy or bool(self._pending_ops)
+            busy = busy or bool(self._ctrl_out)
             busy = busy or (self.net is not None and not self.net.idle())
             if not busy:
                 return

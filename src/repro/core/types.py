@@ -139,6 +139,13 @@ class ShardState(NamedTuple):
     registry: Registry      # this shard's (possibly stale) replica
     blk: Blocks             # packed-block sublist mirror (all-invalid until
                             # cfg.block_probe refreshes it)
+    epoch: jnp.ndarray      # int32[] last membership epoch seen (merged
+                            # monotonically by the MSG_EPOCH handler;
+                            # DESIGN.md §13)
+    peers: jnp.ndarray      # int32[] live-peer bitmask at that epoch —
+                            # gates registry-broadcast fan-out so retired
+                            # shards drop out of the mesh without a
+                            # recompile (bit s set => shard s is a member)
 
 
 class OpBatch(NamedTuple):
@@ -183,8 +190,15 @@ def empty_blocks(cfg: DiLiConfig) -> Blocks:
     )
 
 
+def full_peer_mask(num_shards: int) -> int:
+    """All-capacity live-peer bitmask; -1 (every bit set, and arithmetic
+    shift keeps every probe true) once the count exceeds the int32 lane."""
+    return -1 if num_shards >= 31 else (1 << num_shards) - 1
+
+
 def init_shard(cfg: DiLiConfig, sid: int, *, bootstrap: bool = False,
-               key_lo: int = KEY_MIN, key_hi: int = KEY_MAX) -> ShardState:
+               key_lo: int = KEY_MIN, key_hi: int = KEY_MAX,
+               peers_mask: int | None = None) -> ShardState:
     """Fresh shard. If ``bootstrap``, seed one sublist (key_lo-1, key_hi] here.
 
     The bootstrap sublist is SubHead -> SubTail with counter slot 0, mirroring
@@ -231,4 +245,7 @@ def init_shard(cfg: DiLiConfig, sid: int, *, bootstrap: bool = False,
         ts_clock=jnp.asarray(2, jnp.int32),
         registry=reg,
         blk=empty_blocks(cfg),
+        epoch=jnp.zeros((), jnp.int32),
+        peers=jnp.asarray(full_peer_mask(cfg.num_shards)
+                          if peers_mask is None else peers_mask, jnp.int32),
     )

@@ -6,6 +6,8 @@ and validated against ``ref.py`` in interpret mode.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -15,8 +17,27 @@ from .paged_attention import paged_attention as _paged_attention
 
 _INT32_MAX = jnp.iinfo(jnp.int32).max
 
+_TRUTHY = ("1", "true", "on", "yes")
+_FALSY = ("0", "false", "off", "no")
+
 
 def _default_interpret() -> bool:
+    """Platform default (interpret everywhere but TPU), overridable via
+    the ``REPRO_INTERPRET`` env var — forcing interpret *on* reproduces a
+    CI failure on a TPU host, forcing it *off* exercises the compiled
+    kernel path regardless of platform. Unrecognized values raise rather
+    than silently fall back (a typo like ``REPRO_INTERPRET=ture`` must
+    not quietly change which code path a repro runs)."""
+    env = os.environ.get("REPRO_INTERPRET")
+    if env is not None:
+        val = env.strip().lower()
+        if val in _TRUTHY:
+            return True
+        if val in _FALSY:
+            return False
+        raise ValueError(
+            f"REPRO_INTERPRET={env!r}: expected one of "
+            f"{_TRUTHY + _FALSY}")
     return jax.default_backend() != "tpu"
 
 

@@ -1,0 +1,206 @@
+"""Shared elastic-membership differential harness (DESIGN.md §13).
+
+One workload, importable by the tests and runnable as a script (the
+ShardMap backend needs ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set before jax imports, so multi-device runs go through a subprocess):
+
+  * a fixed-capacity cluster boots with a subset of its shards active;
+  * a round-scheduled membership script fires ``join_shard`` /
+    ``retire_shard`` while a ``DiLiClient`` drives continuous mixed
+    find/insert/remove traffic (per-key FIFO admission makes the
+    sequential oracle the referee, exactly as in the nemesis harness);
+  * each event waits for the previous one to finish (a join is done when
+    the shard is promoted, a retire when the drain completes) — the
+    membership layer itself enforces one overlapping change per kind;
+  * every op's result, the final key set, quiescence, AND the membership
+    outcome (expected final active set, empty joining/draining) are
+    checked; with a nemesis attached the schedule must still converge.
+
+``python tests/membership_harness.py <backend> <n_ops> <p> <seed>...``
+runs one differential per seed under drop/dup/reorder probability ``p``
+(0 disables the nemesis) and prints ``OK`` lines; failures print a
+``FAILING-SEEDS`` json line and exit 1.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from nemesis_harness import default_nemesis, make_backend, small_cfg
+
+# The acid-test schedule: 3 -> 5 -> 2 under continuous traffic.  Events
+# are (round_due, op, shard); ``shard=None`` lets the membership layer
+# pick (joins take the lowest retired slot, retires evict the highest
+# active id — deterministic either way).  An event only fires once the
+# cluster is past its due round AND no other change is in flight.
+SCALE_3_5_2 = (
+    (10, "join", None),
+    (30, "join", None),
+    (60, "retire", None),
+    (90, "retire", None),
+    (120, "retire", None),
+)
+
+
+def _round_no(backend):
+    return backend.cluster.round_no if hasattr(backend, "cluster") \
+        else backend.round_no
+
+
+def _fire(backend, op, shard):
+    mb = backend.membership
+    if op == "join":
+        return backend.join_shard(shard)
+    if shard is None:
+        shard = max(mb.active)
+    backend.retire_shard(shard)
+    return shard
+
+
+def run_membership_differential(backend_kind: str, seed: int, nemesis, *,
+                                schedule=SCALE_3_5_2, n_ops: int = 600,
+                                key_space: int = 500, capacity: int = 6,
+                                initial_shards: int = 3,
+                                ops_per_round: int = 8,
+                                drain_rounds: int = 20000,
+                                keep_backend: bool = False):
+    """One elastic-membership differential; returns a result dict
+    (raises on drain timeout, asserts nothing itself)."""
+    from repro.api import DiLiClient, LocalBackend, ShardMapBackend
+    from repro.core.balancer import Balancer
+    from repro.core.oracle import OracleList
+    from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
+
+    cfg = small_cfg(capacity, big=(backend_kind == "local"))
+    cls = LocalBackend if backend_kind == "local" else ShardMapBackend
+    backend = cls(cfg, seed=seed, nemesis=nemesis,
+                  initial_shards=initial_shards)
+    bal = Balancer(backend, split_threshold=24, merge_threshold=6,
+                   rng=backend.balancer_rng)
+    client = DiLiClient(backend, balance=bal, balance_every=3)
+    oracle = OracleList()
+    rng = np.random.default_rng(seed + 1)
+    mb = backend.membership
+
+    n_load = min(max(key_space // 4, 20), 150)
+    base = rng.permutation(np.arange(1, key_space))[:n_load].tolist()
+    load = client.insert_batch(base)
+    oracle.apply_batch([OP_INSERT] * len(base), base)
+    client.drain(drain_rounds, run_balance=True)
+
+    pending = list(schedule)
+    fired = []        # (round_fired, op, shard)
+
+    def maybe_fire():
+        if not pending or mb.joining or mb.draining:
+            return
+        due, op, shard = pending[0]
+        if _round_no(backend) < due:
+            return
+        s = _fire(backend, op, shard)
+        fired.append((_round_no(backend), op, s))
+        pending.pop(0)
+
+    futs, exps = [load], [[True] * len(base)]
+    done = 0
+    stall = 0
+    while done < n_ops or pending:
+        maybe_fire()
+        if done < n_ops:
+            k = min(ops_per_round, n_ops - done)
+            kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], k).tolist()
+            keys = rng.integers(1, key_space, k).tolist()
+            futs.append(client.submit(kinds, keys))
+            exps.append(oracle.apply_batch(kinds, keys))
+            done += k
+            client.pump()
+        else:
+            # op stream exhausted but the schedule isn't: finish any
+            # in-flight change (settle runs the balancer, which drains
+            # retiring shards and seeds joining ones), then idle-step up
+            # to the next event's due round
+            client.settle(max_rounds=drain_rounds)
+            if pending and not (mb.joining or mb.draining) \
+                    and _round_no(backend) < pending[0][0]:
+                client.pump()
+            stall += 1
+            if stall > drain_rounds:
+                raise RuntimeError(
+                    f"membership schedule stalled: fired={fired} "
+                    f"pending={pending} view={mb.view()}")
+    client.drain(drain_rounds)
+    client.settle(max_rounds=drain_rounds)
+
+    mismatches = []
+    for batch, exp in zip(futs, exps):
+        for fut, (got, e) in zip(batch, zip(batch.results(), exp)):
+            if bool(got) != e:
+                mismatches.append((fut.kind, fut.key, e, got))
+    final = backend.all_keys()
+    n_joins = sum(1 for _, op, _ in fired if op == "join")
+    n_retires = sum(1 for _, op, _ in fired if op == "retire")
+    return {
+        "mismatches": mismatches,
+        "keys_match": final == sorted(oracle.snapshot()),
+        "final_keys": final,
+        "oracle_keys": sorted(oracle.snapshot()),
+        "quiescent": backend.quiescent(),
+        "rounds": _round_no(backend),
+        "schedule_done": not pending,
+        "fired": fired,
+        "view": mb.view(),
+        "mb_log": list(mb.log),
+        "expected_active": initial_shards + n_joins - n_retires,
+        "net_stats": dict(backend.net.stats) if backend.net else {},
+        "trace": (backend.cluster.round_trace
+                  if backend_kind == "local" else backend.round_trace),
+        "backend": backend if keep_backend else None,
+    }
+
+
+def check(res: dict, repro: str) -> None:
+    assert not res["mismatches"], \
+        f"op results diverged {res['mismatches'][:5]} — repro {repro}"
+    assert res["keys_match"], \
+        (f"final key sets diverged — repro {repro}\n"
+         f"extra={sorted(set(res['final_keys'])-set(res['oracle_keys']))} "
+         f"missing={sorted(set(res['oracle_keys'])-set(res['final_keys']))}")
+    assert res["schedule_done"], \
+        f"membership schedule stalled ({res['fired']}) — repro {repro}"
+    v = res["view"]
+    assert not v["joining"] and not v["draining"], \
+        f"membership change still in flight {v} — repro {repro}"
+    assert len(v["active"]) == res["expected_active"], \
+        f"active set {v['active']} != expected — repro {repro}"
+    assert res["quiescent"], f"backend did not quiesce — repro {repro}"
+
+
+def main(argv) -> int:
+    kind, n_ops, p = argv[0], int(argv[1]), float(argv[2])
+    seeds = [int(s) for s in argv[3:]]
+    nemesis = default_nemesis(p) if p > 0 else None
+    failures = []
+    for seed in seeds:
+        repro = nemesis.repro(seed) if nemesis else f"seed={seed} (no nemesis)"
+        try:
+            res = run_membership_differential(kind, seed, nemesis,
+                                              n_ops=n_ops)
+            check(res, repro)
+            print(f"OK {kind} seed={seed} p={p} rounds={res['rounds']} "
+                  f"fired={res['fired']} active={res['view']['active']}",
+                  flush=True)
+        except AssertionError as e:
+            print(f"FAIL {kind} {repro}\n{e}", flush=True)
+            failures.append({"seed": seed, "p": p, "backend": kind,
+                             "config": nemesis.to_dict() if nemesis else None,
+                             "error": str(e)})
+    if failures:
+        print("FAILING-SEEDS " + json.dumps(failures), flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

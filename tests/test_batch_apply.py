@@ -60,13 +60,13 @@ def _drive(cfg, kinds, keys, *, seed, delay, merge_threshold=0,
         cl.step()
         if r % balance_every == balance_every - 1:
             for k, v in bal.step().items():
-                issued[k] += v
+                issued[k] = issued.get(k, 0) + v
         r += 1
     cl.run_until_quiet(2000)
     for _ in range(settle):
         got = bal.step()
         for k, v in got.items():
-            issued[k] += v
+            issued[k] = issued.get(k, 0) + v
         cl.run_until_quiet(2000)
         if not any(got.values()):
             break

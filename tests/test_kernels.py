@@ -156,3 +156,38 @@ def test_paged_attention_ignores_padding_pages():
     o1 = K.paged_attention(q, kp, vp, pt1, seq, page_size=ps)
     o2 = K.paged_attention(q, kp, vp, jnp.asarray(pt2), seq, page_size=ps)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+# ------------------------------------------- REPRO_INTERPRET env override
+
+def test_default_interpret_env_override(monkeypatch):
+    for v in ("1", "true", " ON ", "Yes"):
+        monkeypatch.setenv("REPRO_INTERPRET", v)
+        assert K._default_interpret() is True, v
+    for v in ("0", "false", "off", " No"):
+        monkeypatch.setenv("REPRO_INTERPRET", v)
+        assert K._default_interpret() is False, v
+
+
+def test_default_interpret_unset_follows_platform(monkeypatch):
+    monkeypatch.delenv("REPRO_INTERPRET", raising=False)
+    assert K._default_interpret() is (jax.default_backend() != "tpu")
+
+
+def test_default_interpret_rejects_typos(monkeypatch):
+    monkeypatch.setenv("REPRO_INTERPRET", "ture")
+    with pytest.raises(ValueError, match="REPRO_INTERPRET"):
+        K._default_interpret()
+
+
+def test_hybrid_search_honors_forced_interpret(monkeypatch):
+    """The override must reach the public entry point: forcing interpret
+    on matches the oracle exactly (same path CI uses on TPU repros)."""
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    rng = np.random.default_rng(5)
+    keymin, blocks = make_registry(rng, 8, 32)
+    queries = jnp.asarray(rng.integers(0, 10_500, 64).astype(np.int32))
+    slot, found = K.hybrid_search(keymin, blocks, queries, tile_q=64)
+    rslot, rfound = K.hybrid_search_ref(keymin, blocks, queries)
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(rslot))
+    np.testing.assert_array_equal(np.asarray(found), np.asarray(rfound))

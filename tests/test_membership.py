@@ -1,0 +1,312 @@
+"""Elastic shard membership tests (DESIGN.md §13).
+
+M1  Membership lifecycle: the host-side state machine — transitions bump
+    the epoch and land in the log; invalid transitions raise; the peer
+    bitmask tracks the routable set; capacity >= 31 rejects partial
+    membership (the mask is one int32 lane).
+M2  Transport lane reset: ``reset_shard`` refuses while frames touching
+    the shard are in flight and drops exactly that shard's lanes once
+    idle (the re-handshake a retiring shard's slot gets on rejoin).
+M3  Scale 3 -> 5 -> 2 under continuous client traffic: every op result
+    and the final key set match the sequential oracle, zero failed ops.
+M4  Replay: a membership schedule under nemesis faults is byte-identical
+    from one (seed, config) — including the ``mb`` trace lines.
+M5  Partition during a membership change: a cut overlapping a join and a
+    retire (isolating the epoch coordinator) heals to oracle parity.
+M6  Client pacing: the inflight budget is recomputed on epoch bumps in
+    both directions (PR 3's reserve math held cfg.num_shards static);
+    a caller-pinned budget is never touched.
+M7  AutoscalePolicy: joins under load, retires under shrink, and holds
+    still inside the hysteresis band.
+M8  ShardMap parity: the same 3->5->2 differential through the SPMD
+    backend (subprocess; fixed mesh capacity, activity-masked).
+M9  Soak: seeds x schedules x fault levels, scaled by MEMBERSHIP_SOAK_*
+    env vars in the membership-soak CI job; failing seeds become
+    artifacts under membership_failures/.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from membership_harness import (SCALE_3_5_2, check, default_nemesis,
+                                run_membership_differential)
+from nemesis_harness import small_cfg
+from repro.core import messages as M
+from repro.core.membership import (MASK_BITS, Membership, epoch_row,
+                                   live_mask)
+from repro.core.net import NemesisConfig, Partition, Transport
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ----------------------------------------------------- M1: state machine
+
+def test_membership_lifecycle_and_log():
+    mb = Membership(4, 2)
+    assert mb.active == (0, 1) and mb.retired == (2, 3)
+    assert mb.epoch == 0 and mb.mask() == 0b0011
+
+    s = mb.begin_join()
+    assert s == 2 and mb.joining == (2,) and mb.epoch == 1
+    assert mb.routable == (0, 1, 2) and mb.targets == (0, 1, 2)
+    assert mb.mask() == 0b0111
+    mb.promote(2)
+    assert mb.active == (0, 1, 2) and mb.epoch == 2
+
+    mb.begin_drain(0)
+    assert mb.draining == (0,) and mb.epoch == 3
+    # draining: still routable (owns data), no longer a move target
+    assert 0 in mb.routable and 0 not in mb.targets
+    mb.finish_drain(0)
+    assert mb.retired == (0, 3) and mb.mask() == 0b0110
+    assert mb.log == [(1, "join", 2), (2, "promote", 2),
+                      (3, "drain", 0), (4, "retire", 0)]
+    assert mb.view()["active"] == [1, 2]
+
+
+def test_membership_invalid_transitions_raise():
+    mb = Membership(3, 3)
+    with pytest.raises(ValueError, match="cannot join"):
+        mb.begin_join(0)            # already active
+    with pytest.raises(ValueError, match="no retired"):
+        mb.begin_join()
+    with pytest.raises(ValueError, match="cannot promote"):
+        mb.promote(1)               # not joining
+    with pytest.raises(ValueError, match="cannot retire"):
+        mb.finish_drain(1)          # not draining
+    mb.begin_drain(0)
+    mb.begin_drain(1)
+    with pytest.raises(ValueError, match="no other"):
+        mb.begin_drain(2)           # last possible owner
+    with pytest.raises(ValueError, match="out of range"):
+        Membership(4, 0)
+
+
+def test_membership_mask_capacity_limit():
+    # full membership at huge capacity: representable as all-bits
+    assert live_mask(range(64), 64) == -1
+    with pytest.raises(ValueError, match="capacity"):
+        live_mask(range(10), MASK_BITS)      # partial at >= 31
+    with pytest.raises(ValueError, match="capacity"):
+        Membership(40, 3)
+    big = Membership(40)                      # full capacity still fine
+    with pytest.raises(ValueError):
+        big.begin_join()
+
+
+# -------------------------------------------------- M2: transport reset
+
+def _route_rounds(net, n, per_src_rows, rounds, start=0):
+    empty = np.zeros((0, M.FIELDS), np.int32)
+    backlogs = [empty for _ in range(n)]
+    for r in range(start, start + rounds):
+        backlogs = [empty for _ in range(n)]
+        net.route_round(backlogs, per_src_rows, r)
+        per_src_rows = []
+    return backlogs
+
+
+def test_transport_reset_shard_requires_idle():
+    net = Transport(4, retransmit_after=2)
+    row = epoch_row(dst=1, src=0, epoch=1, mask=0b0011)[None]
+    backlogs = _route_rounds(net, 4, [(0, row.astype(np.int32))], 1)
+    assert backlogs[1].shape[0] == 1          # delivered...
+    assert not net.shard_idle(0) and not net.shard_idle(1)
+    assert net.shard_idle(2)
+    with pytest.raises(RuntimeError, match="in flight"):
+        net.reset_shard(1)                    # ...but the ack is pending
+    _route_rounds(net, 4, [], 4, start=1)
+    assert net.idle() and net.shard_idle(1)
+    net.reset_shard(1)
+    assert not any(1 in k for k in net._lanes)
+    net.reset_shard(2)                        # no lanes: trivially ok
+
+
+# ------------------------------------------- M3: the 3 -> 5 -> 2 acid run
+
+def test_scale_up_down_differential_local():
+    res = run_membership_differential("local", 11, None, n_ops=200)
+    check(res, "seed=11 local (no nemesis)")
+    ops = [op for _, op, _ in res["fired"]]
+    assert ops == ["join", "join", "retire", "retire", "retire"]
+    assert len(res["view"]["active"]) == 2
+
+
+# --------------------------------------------------------- M4: replay
+
+def test_membership_schedule_replays_byte_identically():
+    config = default_nemesis(0.15)
+    a = run_membership_differential("local", 13, config, n_ops=150)
+    b = run_membership_differential("local", 13, config, n_ops=150)
+    assert a["trace"] == b["trace"]
+    assert a["mb_log"] == b["mb_log"]
+    mb_lines = [ln for ln in a["trace"] if " mb " in ln]
+    assert len(mb_lines) == len(a["mb_log"])   # every event is traced
+    c = run_membership_differential("local", 14, config, n_ops=150)
+    assert a["trace"] != c["trace"]
+
+
+# ---------------------------------------- M5: partition during a change
+
+def test_partition_during_join_and_retire_heals():
+    """The acid test from ISSUE 7: a cut isolating shard 0 — the epoch
+    coordinator — overlaps both scheduled changes; announcements and
+    evacuation traffic are held, and everything converges post-heal."""
+    config = NemesisConfig(drop_prob=0.05,
+                           partitions=(Partition(8, 40, (0,)),))
+    schedule = ((10, "join", None), (12, "retire", None))
+    res = run_membership_differential(
+        "local", 17, config, schedule=schedule, n_ops=200,
+        capacity=4, initial_shards=3, keep_backend=True)
+    check(res, config.repro(17))
+    nem = res["backend"].net.nemesis
+    assert nem.stats["partitioned"] > 0        # the cut really fired
+    assert res["mb_log"][-1][1] == "retire"
+    # replay is byte-identical even with the cut crossing the change
+    res2 = run_membership_differential(
+        "local", 17, config, schedule=schedule, n_ops=200,
+        capacity=4, initial_shards=3)
+    assert res2["trace"] == res["trace"]
+    assert res2["mb_log"] == res["mb_log"]
+
+
+# ----------------------------------------------------- M6: client pacing
+
+def _pacing_cfg():
+    return small_cfg(5)._replace(mailbox_cap=128)
+
+
+def test_pacing_budget_tracks_membership_both_ways():
+    from repro.api.client import local_client
+    from repro.core.balancer import Balancer
+
+    cfg = _pacing_cfg()
+    cl = local_client(cfg, seed=0, initial_shards=3)
+    cl.balance = Balancer(cl.backend, split_threshold=16, merge_threshold=4,
+                          rng=cl.backend.balancer_rng)
+    bg_budget = cfg.bg_slots * (2 * cfg.move_batch + 2)
+    want = lambda n_live: max(1, cfg.mailbox_cap - bg_budget - n_live - 4)
+    assert cl.max_inflight == want(3)          # PR 3 snapshot bug: this
+    cl.insert_batch(list(range(10, 400, 4)))   # was cfg.num_shards (=5)
+    cl.settle()
+    cl.backend.join_shard()
+    cl.pump()                                  # epoch bump seen here
+    assert cl.max_inflight == want(4)
+    cl.settle()                                # promote completes
+    cl.backend.retire_shard(3)
+    cl.settle()                                # drain completes -> retired
+    cl.pump()
+    assert cl.max_inflight == want(3)
+    assert sorted(cl.all_keys()) == list(range(10, 400, 4))
+
+
+def test_pinned_inflight_survives_epoch_bumps():
+    from repro.api.client import local_client
+    cl = local_client(_pacing_cfg(), seed=0, initial_shards=3,
+                      max_inflight=7)
+    assert cl.max_inflight == 7
+    cl.backend.join_shard()
+    cl.pump()
+    assert cl.max_inflight == 7
+
+
+# ------------------------------------------------------- M7: autoscale
+
+def test_autoscale_policy_joins_retires_and_holds():
+    from repro.api import DiLiClient, LocalBackend
+    from repro.core.balancer import AutoscalePolicy, Balancer
+
+    cfg = small_cfg(4)
+    backend = LocalBackend(cfg, seed=2, initial_shards=2)
+    pol = AutoscalePolicy(
+        backend, target_load=20, cooldown=0,
+        balancer=Balancer(backend, split_threshold=16, merge_threshold=4,
+                          rng=backend.balancer_rng))
+    client = DiLiClient(backend, balance=pol, balance_every=2)
+    mb = backend.membership
+
+    keys = list(range(10, 600, 4))             # 148 keys >> 1.25*20*2
+    client.insert_batch(keys)
+    client.settle()
+    assert len(mb.active) == 4                 # grew to capacity
+    assert not mb.joining and not mb.draining
+
+    client.remove_batch(keys[10:])             # 10 keys << 0.45*20*n
+    client.settle()
+    assert len(mb.active) == 1                 # shrank to min_shards
+    assert sorted(backend.all_keys()) == sorted(keys[:10])
+
+    # hysteresis: load the band between retire (9) and join (25) targets
+    client.insert_batch(list(range(1000, 1010)))
+    client.settle()
+    before = mb.epoch
+    assert pol.step()["join"] == 0
+    assert pol.step()["retire"] == 0
+    assert mb.epoch == before
+
+
+# ------------------------------------------- M8: ShardMap backend parity
+
+@pytest.mark.slow
+def test_shardmap_backend_scales_under_nemesis():
+    n_seeds = int(os.environ.get("MEMBERSHIP_SOAK_SHARDMAP_SEEDS", "1"))
+    n_ops = int(os.environ.get("MEMBERSHIP_SOAK_OPS", "150"))
+    seeds = [str(11 + i) for i in range(n_seeds)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, os.path.join("tests", "membership_harness.py"),
+         "shardmap", str(n_ops), "0.1"] + seeds,
+        env=env, capture_output=True, text=True,
+        timeout=600 * max(1, n_seeds), cwd=REPO)
+    if r.returncode != 0:
+        for line in r.stdout.splitlines():
+            if line.startswith("FAILING-SEEDS "):
+                outdir = os.path.join(REPO, "membership_failures")
+                os.makedirs(outdir, exist_ok=True)
+                with open(os.path.join(outdir, "shardmap_soak.json"),
+                          "w") as f:
+                    f.write(line[len("FAILING-SEEDS "):])
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert r.stdout.count("OK shardmap") == n_seeds
+
+
+# ----------------------------------------------------------- M9: soak
+
+@pytest.mark.slow
+def test_membership_soak_many_seeds():
+    """Seeds x fault levels over the 3->5->2 schedule plus a partitioned
+    variant. The membership-soak CI job scales MEMBERSHIP_SOAK_SEEDS /
+    MEMBERSHIP_SOAK_OPS; failing seeds are dumped under
+    membership_failures/ for artifact upload."""
+    per_level = int(os.environ.get("MEMBERSHIP_SOAK_SEEDS", "1"))
+    n_ops = int(os.environ.get("MEMBERSHIP_SOAK_OPS", "200"))
+    part = (Partition(15, 45, (1,)),)
+    failures = []
+    for li, (p, parts) in enumerate(((0.05, ()), (0.2, ()), (0.1, part))):
+        config = NemesisConfig(drop_prob=p, dup_prob=p, reorder_prob=p,
+                               delay_prob=p / 2, delay_rounds=3,
+                               partitions=parts)
+        for seed in range(2000 + 500 * li, 2000 + 500 * li + per_level):
+            repro = config.repro(seed)
+            try:
+                res = run_membership_differential("local", seed, config,
+                                                  n_ops=n_ops)
+                check(res, repro)
+            except (AssertionError, RuntimeError) as e:
+                failures.append({"seed": seed, "config": config.to_dict(),
+                                 "backend": "local", "error": str(e)})
+    if failures:
+        outdir = os.path.join(REPO, "membership_failures")
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir, "local_soak.json")
+        with open(path, "w") as f:
+            json.dump(failures, f, indent=1)
+        pytest.fail(f"{len(failures)} failing seeds written to {path}: "
+                    + ", ".join(str(x["seed"]) for x in failures))

@@ -62,9 +62,10 @@ def _scripted_move_workload():
     the protocol's message kinds: split, two moves (the second's left
     neighbor lives remotely → remote SwitchST), racing ops during the
     copies (replicates), a merge on the target, and cross-shard client
-    ops (delegation + results). Returns (cluster, recorded frames)."""
-    cfg = small_cfg(2)._replace(move_batch=2)
-    cl = Cluster(cfg, seed=1, nemesis=NemesisConfig())
+    ops (delegation + results), and a shard join (epoch announcements).
+    Returns (cluster, recorded frames)."""
+    cfg = small_cfg(3)._replace(move_batch=2)
+    cl = Cluster(cfg, seed=1, nemesis=NemesisConfig(), initial_shards=2)
     rec = []
     orig = cl.net.nemesis.perturb
 
@@ -106,6 +107,17 @@ def _scripted_move_workload():
     # cross-shard client traffic: submitted at 0, owned by 1
     cl.submit(0, [OP_FIND] * 4, [20, 60, 120, 180])
     cl.run_until_quiet(600)
+
+    # elastic membership (DESIGN.md §13): admit the spare capacity slot
+    # and hand it a sublist — the join and promote epoch announcements
+    # (MSG_EPOCH) cross the recorded wire
+    assert cl.join_shard() == 2
+    cl.run_until_quiet(600)
+    subs1 = sorted((e for e in cl.sublists(1) if e["owner"] == 1),
+                   key=lambda e: e["keymin"])
+    assert cl.move(1, subs1[0]["keymax"], 2)
+    cl.run_until_quiet(800)
+    assert cl.membership.active == (0, 1, 2)
     return cl, rec
 
 
@@ -127,7 +139,7 @@ def test_duplicate_delivery_idempotence_matrix():
     required = {M.MSG_OP, M.MSG_RESULT, M.MSG_MOVE_SH, M.MSG_MOVE_SH_ACK,
                 M.MSG_MOVE_ITEMS, M.MSG_MOVE_ITEM, M.MSG_MOVE_ACK,
                 M.MSG_SWITCH_ST, M.MSG_SWITCH_ST_ACK, M.MSG_SWITCH_SERVER,
-                M.MSG_REG_SPLIT, M.MSG_REG_MERGED}
+                M.MSG_REG_SPLIT, M.MSG_REG_MERGED, M.MSG_EPOCH}
     assert required <= kinds, f"missing kinds: {sorted(required - kinds)}"
 
     d0 = _digest(cl)
