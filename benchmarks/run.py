@@ -9,6 +9,9 @@
   lmstep small-LM train-step walltime (framework overhead sanity)
   nemesis throughput under lossy/duplicating/reordering channels via the
          reliable transport, vs the direct-routing baseline (DESIGN.md §11)
+  recovery crash-restart cost vs snapshot cadence: WAL replay length,
+         restart-round wall time, client latency through the crash window
+         (DESIGN.md §14)
 
 Prints ``name,metric,value`` CSV rows; ``python -m benchmarks.run [names]``.
 Each benchmark additionally persists a ``BENCH_<name>.json`` artifact (rows
@@ -695,9 +698,109 @@ def nemesis(n_load=800, n_ops=1600, key_space=3000):
                  net.nemesis.stats["dropped"])
 
 
+# ---------------------------------------------------------------- recovery
+
+def recovery(n_load=400, n_ops=800, key_space=2500, crash_r=90, outage=50):
+    """Durable-recovery cost vs snapshot cadence (DESIGN.md §14).
+
+    One 4-server run per cadence: every run journals through the same
+    durability pipeline, and a seeded ``CrashPlan`` kill -9s shard 1 at
+    round ``crash_r`` and restarts it ``outage`` rounds later. Rows per
+    cadence: WAL replay length and the restart step's wall time (the
+    snapshot-cadence/replay-length tradeoff), plus client op latency
+    (rounds from submission to completion, p50/p99) through the crash
+    window. ``base`` is the same run journaling but never crashing, so
+    ``crash_over_base_p99_*`` is what the outage cost the clients.
+    """
+    import tempfile
+
+    from repro.core.durability import Durability, DurabilityConfig
+    from repro.core.net import NemesisConfig
+    from repro.core.net.nemesis import CrashPlan
+
+    cfg = DiLiConfig(num_shards=4, pool_capacity=4096, max_sublists=32,
+                     max_ctrs=32, max_scan=4096, batch_size=32,
+                     mailbox_cap=256, split_threshold=48, move_batch=8)
+    restart_r = crash_r + outage
+    win_hi = restart_r + 30
+
+    def run(crash: bool, snapshot_every: int):
+        nem = NemesisConfig(
+            crashes=(CrashPlan(1, crash_r, restart_r),) if crash else ())
+        with tempfile.TemporaryDirectory(prefix="dili-bench-") as d:
+            dur = Durability(d, cfg,
+                             DurabilityConfig(snapshot_every=snapshot_every))
+            backend = LocalBackend(cfg, seed=0, nemesis=nem, durability=dur)
+            bal = Balancer(backend, split_threshold=48,
+                           rng=backend.balancer_rng)
+            mb = backend.membership
+            rng = np.random.default_rng(2)
+            load_keys = rng.permutation(np.arange(1, key_space))[:n_load]
+            kinds, keys = mixed_phase(n_ops, key_space, 0.5, seed=3)
+            all_kinds = np.concatenate([np.full(n_load, OP_INSERT), kinds])
+            all_keys = np.concatenate([load_keys, keys])
+            pend, lat = {}, []
+            restart_ms = None
+            i = r = 0
+            while r < 10000:
+                j = min(i + 32, len(all_kinds))
+                if i < j:
+                    rt = mb.routable
+                    ids = backend.submit(rt[r % len(rt)],
+                                         all_kinds[i:j].tolist(),
+                                         all_keys[i:j].tolist())
+                    for oid in ids:
+                        pend[oid] = r
+                    i = j
+                t0 = time.perf_counter()
+                for oid, _v, _s in backend.step():
+                    lat.append((r, r - pend.pop(oid)))
+                if r == restart_r:
+                    restart_ms = (time.perf_counter() - t0) * 1e3
+                if r % 2 == 1:
+                    bal.step()
+                r += 1
+                # the break must outlast the schedule — with a tiny op
+                # stream the cluster drains before crash_r and the crash
+                # would otherwise never fire
+                if (r > win_hi and i >= len(all_kinds) and not pend
+                        and backend.quiescent()
+                        and not any(bal.step().values())):
+                    break
+            win = [d_ for (cr, d_) in lat if crash_r <= cr <= win_hi] \
+                or [d_ for _, d_ in lat]
+            return {"lat": [d_ for _, d_ in lat], "win": win,
+                    "restart_ms": restart_ms, "stats": dict(dur.stats),
+                    "quiet": backend.quiescent(), "rounds": r}
+
+    base = run(False, 64)
+    emit("recovery", "base_lat_p50",
+         round(float(np.percentile(base["lat"], 50)), 1))
+    emit("recovery", "base_win_p99",
+         round(float(np.percentile(base["win"], 99)), 1))
+    emit("recovery", "base_quiet", int(base["quiet"]))
+    base_p99 = max(float(np.percentile(base["win"], 99)), 1.0)
+    for every in (8, 32, 128):
+        res = run(True, every)
+        st = res["stats"]
+        emit("recovery", f"replayed_rounds_s{every}", st["replayed_rounds"])
+        emit("recovery", f"snapshots_s{every}", st["snapshots"])
+        emit("recovery", f"wal_records_s{every}", st["records"])
+        emit("recovery", f"restart_step_ms_s{every}",
+             round(res["restart_ms"], 1))
+        p50 = float(np.percentile(res["win"], 50))
+        p99 = float(np.percentile(res["win"], 99))
+        emit("recovery", f"crash_win_p50_s{every}", round(p50, 1))
+        emit("recovery", f"crash_win_p99_s{every}", round(p99, 1))
+        emit("recovery", f"crash_over_base_p99_s{every}",
+             round(p99 / base_p99, 2))
+        emit("recovery", f"recovered_s{every}",
+             int(st["recoveries"] == 1 and res["quiet"]))
+
+
 ALL = {"fig3a": fig3a, "fig3b": fig3b, "bgops": bgops,
        "rebalance": rebalance, "kernels": kernels, "lmstep": lmstep,
-       "nemesis": nemesis}
+       "nemesis": nemesis, "recovery": recovery}
 
 # shrunken workloads for the CI smoke lane (--tiny): same code paths,
 # minutes -> seconds. Benches without parameters run as-is.
@@ -707,6 +810,8 @@ TINY = {
     "bgops": dict(n_keys=300, key_space=1200),
     "rebalance": dict(n_keys=125, n_churn=200, key_space=1000),
     "nemesis": dict(n_load=200, n_ops=400, key_space=1000),
+    "recovery": dict(n_load=150, n_ops=300, key_space=1000,
+                     crash_r=40, outage=25),
 }
 
 

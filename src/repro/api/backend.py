@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 import numpy as np
 
 from repro.core import bg as B
+from repro.core.durability import wal
 from repro.core import messages as M
 from repro.core import refs
 from repro.core.membership import (Membership, epoch_row, moves_targeting,
@@ -91,7 +92,7 @@ class LocalBackend:
                  retransmit_after: int = 4, net_window: int = 4096,
                  key_lo: int = KEY_MIN, key_hi: int = KEY_MAX,
                  initial_shards: Optional[int] = None,
-                 trace: Optional[bool] = None):
+                 trace: Optional[bool] = None, durability=None):
         if cluster is None:
             if cfg is None:
                 raise ValueError("LocalBackend needs a DiLiConfig or Cluster")
@@ -100,7 +101,8 @@ class LocalBackend:
                               retransmit_after=retransmit_after,
                               net_window=net_window,
                               key_lo=key_lo, key_hi=key_hi,
-                              initial_shards=initial_shards, trace=trace)
+                              initial_shards=initial_shards, trace=trace,
+                              durability=durability)
         self.cluster = cluster
         self.cfg = cluster.cfg
         self._issued: set = set()
@@ -162,6 +164,8 @@ class LocalBackend:
 
     def quiescent(self) -> bool:
         cl = self.cluster
+        if cl.membership.crashed:
+            return False        # keep stepping toward the scheduled restart
         if any(b.shape[0] for b in cl.backlog):
             return False
         if cl.net is not None and not cl.net.idle():
@@ -225,7 +229,8 @@ class ShardMapBackend:
                  nemesis=None, retransmit_after: int = 4,
                  net_window: int = 4096,
                  key_lo: int = KEY_MIN, key_hi: int = KEY_MAX,
-                 initial_shards: Optional[int] = None):
+                 initial_shards: Optional[int] = None,
+                 durability=None):
         import jax
         import jax.numpy as jnp
         from jax.sharding import Mesh
@@ -298,6 +303,31 @@ class ShardMapBackend:
         self._ids = OpIdAllocator()
         self._host_states: Optional[list] = None
         self.round_no = 0
+        # durability + crash plans (DESIGN.md §14): same semantics as
+        # Cluster — crashes ride the nemesis config (hostroute path), so
+        # the transport's down-NIC model and the WAL see the same rounds.
+        from repro.core.durability import Durability
+        from repro.core.durability.engine import validate_crash_plans
+        self._crash_plans = tuple(nemesis.crashes) if nemesis else ()
+        if self._crash_plans:
+            validate_crash_plans(self._crash_plans, cfg.num_shards)
+        self._tmp_durability = None
+        if durability is None and self._crash_plans:
+            import tempfile
+            self._tmp_durability = tempfile.TemporaryDirectory(
+                prefix="dili-durability-")
+            durability = self._tmp_durability.name
+        self.durability: Optional[Durability] = None
+        if durability is not None:
+            self.durability = (durability if isinstance(durability,
+                                                        Durability)
+                               else Durability(durability, cfg))
+            empty = np.zeros((0, M.FIELDS), np.int32)
+            for s in range(cfg.num_shards):
+                self.durability.ensure_genesis(
+                    s, boot.states[s], boot.bgs[s], empty,
+                    self.net.export_shard_lanes(s)
+                    if self.net is not None else {})
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
                       "move_hits": 0, "blk_hits": 0, "max_bg_active": 0}
@@ -396,14 +426,64 @@ class ShardMapBackend:
         if changed:
             self._broadcast_epoch()
 
-    def _feed_client(self) -> np.ndarray:
+    def _feed_client(self, down=()) -> np.ndarray:
         cfg = self.cfg
         client = np.zeros((self.n, cfg.batch_size, M.FIELDS), np.int32)
         for s in range(self.n):
+            if s in down:
+                continue        # queue is client-side memory: it survives
             q = self._queues[s]
             for b in range(min(len(q), cfg.batch_size)):
                 client[s, b] = q.popleft()
         return client
+
+    # ------------------------------------------------- crash-restart (§14)
+    def _set_shard(self, s: int, state, bg) -> None:
+        """Overwrite slot ``s`` of the stacked device state."""
+        tree_map = self._jax.tree_util.tree_map
+        jnp = self._jnp
+        self._states = tree_map(
+            lambda col, leaf: col.at[s].set(jnp.asarray(leaf)),
+            self._states, state)
+        self._bgs = tree_map(
+            lambda col, leaf: col.at[s].set(jnp.asarray(leaf)),
+            self._bgs, bg)
+        self._host_states = None
+
+    def _apply_crash_plans(self) -> None:
+        """Same top-of-round ordering as ``Cluster._apply_crash_plans``:
+        restarts before crashes, so both backends execute one schedule
+        identically (the differential harness compares their traces)."""
+        for c in self._crash_plans:
+            if c.restart_round == self.round_no and c.shard in self.net.down:
+                self._restart_shard(c.shard)
+        for c in self._crash_plans:
+            if c.crash_round == self.round_no:
+                self._crash_shard(c.shard)
+
+    def _crash_shard(self, s: int) -> None:
+        from repro.core.types import init_shard
+        self.membership.crash(s)
+        if not self.membership.active:
+            raise RuntimeError(
+                f"crash of shard {s} leaves no active shard — the "
+                f"coordinator for epoch broadcasts must survive")
+        self._broadcast_epoch()
+        self._set_shard(s, init_shard(self.cfg, s, peers_mask=0),
+                        B.init_bg_table(self.cfg))
+        self._net_backlog[s] = np.zeros((0, M.FIELDS), np.int32)
+        self.net.crash_shard(s)
+
+    def _restart_shard(self, s: int) -> None:
+        rec = self.durability.recover(s, in_cap=self.in_cap)
+        self._set_shard(s, rec.state, rec.bg)
+        self._net_backlog[s] = rec.backlog
+        self.net.restart_shard(s, rec.lanes)
+        self.membership.restart(s)
+        self._broadcast_epoch()
+        self.durability.snapshot_now(
+            s, self.round_no - 1, rec.state, rec.bg, rec.backlog,
+            self.net.export_shard_lanes(s))
 
     def _check_overflow(self, out_counts) -> None:
         """Shared overflow discipline of both round paths (the same check
@@ -434,7 +514,10 @@ class ShardMapBackend:
         host-side transport routing of the raw outboxes."""
         from repro.core.net import trace_entry
         cfg = self.cfg
-        client = self._feed_client()
+        if self._crash_plans:
+            self._apply_crash_plans()
+        down = self.net.down
+        client = self._feed_client(down)
         inbox = np.zeros((self.n, self.in_cap, M.FIELDS), np.int32)
         for s in range(self.n):
             feed = self._net_backlog[s][:self.in_cap]
@@ -464,9 +547,40 @@ class ShardMapBackend:
                                              int(hops.max()))
                 self.stats["delegated"] += int(hops.size)
             per_src.append((s, rows))
+        pre_lens = [b.shape[0] for b in self._net_backlog]
         self.net.route_round(self._net_backlog, per_src, self.round_no)
         comps = self._harvest(cs, cv, cr)
         self._membership_maintenance()
+        if self.durability is not None:
+            # journal per live shard (same record layout as Cluster.step):
+            # the client feed consumed, the routed appends, completions +
+            # bg phases + epoch (replay audit), post-routing lane image.
+            cs_h = np.asarray(cs)
+            cv_h, cr_h = np.asarray(cv), np.asarray(cr)
+            phases = np.asarray(self._bgs.phase)
+            epochs = np.asarray(self._states.epoch)
+            for s in range(self.n):
+                if s in down:
+                    continue
+                done = cs_h[s] >= 0
+                comp = np.stack([cs_h[s][done], cv_h[s][done],
+                                 cr_h[s][done]], axis=1).astype(np.int32)
+                lanes = self.net.export_shard_lanes(s)
+                self.durability.log_round(
+                    s, self.round_no,
+                    appends=self._net_backlog[s][pre_lens[s]:],
+                    client=client[s], comp=comp, bg_phases=phases[s],
+                    epoch=int(epochs[s]), lanes=lanes)
+                if (self.durability.config.snapshot_every > 0
+                        and (self.round_no + 1)
+                        % self.durability.config.snapshot_every == 0):
+                    st = self._jax.tree_util.tree_map(
+                        lambda x, s=s: np.asarray(x)[s], self._states)
+                    bg = self._jax.tree_util.tree_map(
+                        lambda x, s=s: np.asarray(x)[s], self._bgs)
+                    self.durability.snapshot_now(
+                        s, self.round_no, st, bg, self._net_backlog[s],
+                        lanes)
         for ep, ev, sh in self.membership.log[self._mb_logged:]:
             self.round_trace.append(f"r{self.round_no} mb {ev} s{sh} e{ep}")
         self._mb_logged = len(self.membership.log)
@@ -509,6 +623,8 @@ class ShardMapBackend:
         return comps
 
     def quiescent(self) -> bool:
+        if self.membership.crashed:
+            return False        # keep stepping toward the scheduled restart
         if any(len(q) for q in self._queues):
             return False
         if self.net is not None:
@@ -550,22 +666,30 @@ class ShardMapBackend:
             return None
         return items[len(items) // 2][1]
 
-    def _queue_bg(self, s: int, fn, *args) -> bool:
+    def _queue_bg(self, s: int, fn, cmd: int, *args) -> bool:
         tree_map = self._jax.tree_util.tree_map
         bg = tree_map(lambda x: x[s], self._bgs)
         bg, ok = fn(bg, *args)
         self._bgs = tree_map(lambda col, leaf: col.at[s].set(leaf),
                              self._bgs, bg)
+        if self.durability is not None:
+            # host-side BgTable mutation bypasses the inbox — journal it
+            # so WAL replay re-queues the command (wal.py KIND_COMMAND)
+            self.durability.log_command(s, self.round_no, cmd, args,
+                                        bool(ok))
         return bool(ok)
 
     def split(self, s, entry_keymax, sitem_idx) -> bool:
-        return self._queue_bg(s, B.queue_split, entry_keymax, sitem_idx)
+        return self._queue_bg(s, B.queue_split, wal.CMD_SPLIT,
+                              entry_keymax, sitem_idx)
 
     def move(self, s, entry_keymax, target) -> bool:
-        return self._queue_bg(s, B.queue_move, entry_keymax, target)
+        return self._queue_bg(s, B.queue_move, wal.CMD_MOVE,
+                              entry_keymax, target)
 
     def merge(self, s, left_keymax, right_keymax) -> bool:
-        return self._queue_bg(s, B.queue_merge, left_keymax, right_keymax)
+        return self._queue_bg(s, B.queue_merge, wal.CMD_MERGE,
+                              left_keymax, right_keymax)
 
     # ------------------------------------------------------------ debugging
     def all_keys(self) -> List[int]:

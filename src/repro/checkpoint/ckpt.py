@@ -118,7 +118,12 @@ class CheckpointManager:
             self._thread = threading.Thread(target=_write, daemon=True)
             self._thread.start()
         else:
+            # Synchronous writes fail loudly at the call site — a swallowed
+            # error here would be a silent hole in the retention chain.
             _write()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
 
     def restore_latest(self, template, shardings=None):
         self.wait()

@@ -1,0 +1,23 @@
+"""Durable recovery: per-shard WAL + snapshots + crash-restart replay.
+
+This package makes the (seed, config) -> byte-identical-run contract
+survive kill -9 (DESIGN.md §14). Rounds are the unit of both
+linearization and durability: every round each live shard journals the
+*inputs* that round consumed (backlog appends, client feed) plus the
+post-routing image of its transport-lane halves, fsyncs, and only then
+lets the next round's acks make the round's effects observable to peers.
+A crash therefore always lands on a round boundary, and recovery is
+snapshot + deterministic re-execution of `shard_round` over the logged
+feeds — the same pure function the live run used, so the rebuilt state
+is bit-identical (audited against the journaled completions).
+
+  * ``wal``      — append-only framed record log (crc32, torn-tail safe)
+  * ``snapshot`` — periodic full-state snapshots via CheckpointManager,
+                   with incremental WAL truncation up to the snapshot
+  * ``recovery`` — replay a shard's WAL suffix through ``shard_round``
+  * ``engine``   — the per-backend orchestration facade (``Durability``)
+"""
+from .engine import Durability, DurabilityConfig            # noqa: F401
+from .recovery import RecoveredShard, RecoveryError, recover_shard  # noqa: F401
+from .snapshot import ShardSnapshots                        # noqa: F401
+from .wal import KIND_ROUND, KIND_SUBMIT, WriteAheadLog     # noqa: F401

@@ -1,0 +1,143 @@
+"""Crash recovery: snapshot + WAL replay through ``shard_round``.
+
+``shard_round`` is a pure function of ``(state, bg, inbox, client,
+cfg)`` — so the WAL does not need to journal round *effects* at all; it
+journals the round's *inputs* (the backlog rows appended by routing, the
+client feed consumed) and replay is literal re-execution. The rebuilt
+state, BgTable and backlog are bit-identical to what the dead process
+held at its last durable round, which is what lets the restarted shard
+re-enter the deterministic run without perturbing the replay witness.
+
+Replayed outboxes are discarded: the journaled lane image already holds
+every frame the shard had sent and not yet seen acked (the retransmit
+ring), and everything acked was, by the cumulative-ack contract,
+delivered at the peer. Re-shipping from the restored ring plus the
+peers' receiver-side dedup is exactly the at-least-once -> exactly-once
+collapse the transport already implements — replay composes with the
+lanes instead of needing its own delivery reconciliation.
+
+Every replayed round's completions (and post-round bg phases / epoch)
+are audited against the journaled ones; a mismatch means the replay
+diverged from the live run — nondeterminism or a torn log — and raises
+``RecoveryError`` rather than resurrecting a shard with silently
+different history.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import bg as B
+from .. import messages as M
+from ..shard import shard_round
+from ..types import DiLiConfig
+from .snapshot import ShardSnapshots
+from .wal import (CMD_MERGE, CMD_MOVE, CMD_SPLIT, KIND_COMMAND,
+                  KIND_SUBMIT, WriteAheadLog)
+
+_LANE = "lane/"
+
+
+class RecoveryError(RuntimeError):
+    """WAL replay diverged from the journaled run (or no durable base)."""
+
+
+class RecoveredShard(NamedTuple):
+    state: object            # ShardState at the last durable round
+    bg: object               # BgTable at the last durable round
+    backlog: np.ndarray      # host backlog (delivered-but-unconsumed rows)
+    lanes: Dict[str, np.ndarray]   # transport lane image to reinstall
+    last_round: int          # the last durable round replay reached
+    replayed_rounds: int     # WAL rounds re-executed on top of snapshot
+
+
+def completions_array(out) -> np.ndarray:
+    """The (op_id, result, src) triples one RoundOut completed, in row
+    order — the same harvest the live engines journal, so replay can
+    compare bit-for-bit."""
+    cs = np.asarray(out.comp_slot)
+    cv = np.asarray(out.comp_val)
+    cr = np.asarray(out.comp_src)
+    done = cs >= 0
+    return np.stack([cs[done], cv[done], cr[done]], axis=1).astype(np.int32)
+
+
+def lane_image_of(record: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    return {k[len(_LANE):]: v for k, v in record.items()
+            if k.startswith(_LANE)}
+
+
+def recover_shard(cfg: DiLiConfig, shard: int, wal: WriteAheadLog,
+                  snaps: ShardSnapshots, *, in_cap: int) -> RecoveredShard:
+    """Rebuild ``shard`` from its latest snapshot + WAL suffix."""
+    base = snaps.load_latest(cfg)
+    if base is None:
+        raise RecoveryError(
+            f"shard {shard}: no snapshot on disk — the genesis snapshot "
+            f"is written at attach time, so this slot never attached")
+    state, bg = base["state"], base["bg"]
+    backlog = base["backlog"]
+    lanes = base["lanes"]
+    last_round = base["round"]
+    replayed = 0
+    for rec in wal.records():
+        rnd = int(rec["round"])
+        if rnd <= base["round"]:
+            continue           # pre-snapshot leftovers (truncation is lazy)
+        if int(rec["kind"]) == KIND_SUBMIT:
+            rows = np.asarray(rec["appends"], np.int32)
+            if rows.size:
+                backlog = np.concatenate([backlog, rows], axis=0)
+            continue
+        if int(rec["kind"]) == KIND_COMMAND:
+            # re-queue the host-side balancer command exactly where the
+            # live run did (stream order = queue order)
+            args = [int(a) for a in np.asarray(rec["args"]).ravel()]
+            queue = {CMD_SPLIT: B.queue_split, CMD_MOVE: B.queue_move,
+                     CMD_MERGE: B.queue_merge}[int(rec["cmd"])]
+            bg, ok = queue(bg, *args)
+            if bool(np.asarray(ok)) != bool(int(rec["ok"])):
+                raise RecoveryError(
+                    f"shard {shard} round {rnd}: replayed command "
+                    f"cmd={int(rec['cmd'])} args={args} accepted="
+                    f"{bool(np.asarray(ok))} != journaled "
+                    f"{bool(int(rec['ok']))}")
+            continue
+        # mirror the live feed discipline exactly: bounded FIFO pop,
+        # zero-padded inbox, the journaled client feed, then the round's
+        # routed appends land behind whatever was left over.
+        feed = backlog[:in_cap]
+        backlog = backlog[in_cap:]
+        inbox = np.zeros((in_cap, M.FIELDS), np.int32)
+        inbox[:feed.shape[0]] = feed
+        client = np.asarray(rec["client"], np.int32)
+        out = shard_round(state, bg, shard, jnp.asarray(inbox),
+                          jnp.asarray(client), cfg)
+        state, bg = out.state, out.bg
+        comp = completions_array(out)
+        want = np.asarray(rec["comp"], np.int32).reshape(-1, 3)
+        if not np.array_equal(comp, want):
+            raise RecoveryError(
+                f"shard {shard} round {rnd}: replayed completions "
+                f"{comp.tolist()} != journaled {want.tolist()} — replay "
+                f"diverged from the live run")
+        phases = np.asarray(B.slot_phases(bg))
+        if not np.array_equal(phases, np.asarray(rec["bg_phases"])):
+            raise RecoveryError(
+                f"shard {shard} round {rnd}: replayed bg phases "
+                f"{phases.tolist()} != journaled "
+                f"{np.asarray(rec['bg_phases']).tolist()}")
+        if int(np.asarray(state.epoch)) != int(rec["epoch"]):
+            raise RecoveryError(
+                f"shard {shard} round {rnd}: replayed epoch "
+                f"{int(np.asarray(state.epoch))} != journaled "
+                f"{int(rec['epoch'])}")
+        appends = np.asarray(rec["appends"], np.int32)
+        if appends.size:
+            backlog = np.concatenate([backlog, appends], axis=0)
+        lanes = lane_image_of(rec)
+        last_round = rnd
+        replayed += 1
+    return RecoveredShard(state, bg, backlog, lanes, last_round, replayed)

@@ -7,6 +7,7 @@ a per-shard lifecycle:
 
     RETIRED --begin_join--> JOINING --promote--> ACTIVE
     ACTIVE/JOINING --begin_drain--> DRAINING --finish_drain--> RETIRED
+    ACTIVE/JOINING/DRAINING --crash--> CRASHED --restart--> JOINING
 
   * **active** — owns sublists, receives client ops, counts in balancer
     load means, and is a valid move target.
@@ -21,6 +22,13 @@ a per-shard lifecycle:
     registry-broadcast fan-out (its replica goes stale, which is *safe* —
     the registry is lazily replicated by design). Its transport lanes are
     reset (re-handshaken) at the moment it leaves.
+  * **crashed** — the process died mid-run (kill -9); unlike draining it
+    still *owns* its sublists on durable storage, but it executes nothing
+    and is excluded from routing, broadcast fan-out, and move targeting
+    until recovery restarts it. Crash ≠ drain: a crashed shard re-enters
+    as JOINING-with-state (it already owns entries, so host maintenance
+    promotes it immediately), and carve-out / delegation healing repairs
+    whatever restructured while it was down (DESIGN.md §14).
 
 Every transition bumps ``epoch``. The on-device witness of the view is the
 ``(epoch, peers)`` pair in ``ShardState``, merged monotonically by the
@@ -44,6 +52,7 @@ JOINING = "joining"
 ACTIVE = "active"
 DRAINING = "draining"
 RETIRED = "retired"
+CRASHED = "crashed"
 
 # peers bitmask lives in one int32 message lane / ShardState scalar
 MASK_BITS = 31
@@ -74,6 +83,13 @@ class Membership:
 
     def __init__(self, capacity: int, initial: Optional[int] = None):
         self.capacity = int(capacity)
+        if self.capacity > MASK_BITS:
+            # bit ``s`` of the int32 live_mask must exist for every slot;
+            # widening past 31 needs a multi-lane mask (ROADMAP follow-on).
+            raise ValueError(
+                f"num_shards={self.capacity} exceeds the {MASK_BITS}-slot "
+                f"int32 peer-bitmask bound; widen the mask before scaling "
+                f"capacity past {MASK_BITS}")
         initial = self.capacity if initial is None else int(initial)
         if not 1 <= initial <= self.capacity:
             raise ValueError(
@@ -110,10 +126,14 @@ class Membership:
         return self._by_state(RETIRED)
 
     @property
+    def crashed(self) -> Tuple[int, ...]:
+        return self._by_state(CRASHED)
+
+    @property
     def routable(self) -> Tuple[int, ...]:
         """Shards that may own sublists / execute ops right now."""
         return tuple(s for s in range(self.capacity)
-                     if self._state[s] != RETIRED)
+                     if self._state[s] not in (RETIRED, CRASHED))
 
     @property
     def targets(self) -> Tuple[int, ...]:
@@ -125,7 +145,8 @@ class Membership:
         return self._state[shard]
 
     def is_routable(self, shard: int) -> bool:
-        return 0 <= shard < self.capacity and self._state[shard] != RETIRED
+        return (0 <= shard < self.capacity
+                and self._state[shard] not in (RETIRED, CRASHED))
 
     def is_active(self, shard: int) -> bool:
         return 0 <= shard < self.capacity and self._state[shard] == ACTIVE
@@ -198,6 +219,37 @@ class Membership:
                 f"shard {shard} is {self._state[shard]}, cannot retire")
         self._state[shard] = RETIRED
         self._bump("retire", shard)
+
+    def crash(self, shard: int) -> None:
+        """ACTIVE/JOINING/DRAINING -> CRASHED (kill -9 at a round boundary).
+
+        Unlike ``begin_drain`` this never refuses — a crash is not a
+        request. A draining shard that crashes forgets the drain intent;
+        after restart it re-enters as JOINING like any other survivor.
+        """
+        if self.capacity >= MASK_BITS:
+            raise ValueError(
+                f"crash-restart needs capacity < {MASK_BITS} "
+                f"(partial membership is not representable at {MASK_BITS}+)")
+        shard = int(shard)
+        if self._state[shard] not in (ACTIVE, JOINING, DRAINING):
+            raise ValueError(
+                f"shard {shard} is {self._state[shard]}, cannot crash")
+        self._state[shard] = CRASHED
+        self._bump("crash", shard)
+
+    def restart(self, shard: int) -> None:
+        """CRASHED -> JOINING (recovery installed snapshot+WAL state).
+
+        The restarted shard is JOINING-*with-state*: it still owns its
+        pre-crash sublists, so the regular host maintenance pass promotes
+        it back to ACTIVE on the next round it owns an entry."""
+        shard = int(shard)
+        if self._state[shard] != CRASHED:
+            raise ValueError(
+                f"shard {shard} is {self._state[shard]}, cannot restart")
+        self._state[shard] = JOINING
+        self._bump("restart", shard)
 
 
 # ------------------------------------------------------- actuation helpers

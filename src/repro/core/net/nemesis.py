@@ -56,6 +56,27 @@ class Partition:
 
 
 @dataclass(frozen=True)
+class CrashPlan:
+    """kill -9 ``shard`` at the top of ``crash_round``; restart it (via
+    snapshot + WAL replay, DESIGN.md §14) at the top of
+    ``restart_round``. The crash lands on a round boundary — the WAL's
+    fsync-before-ack discipline means a round's effects are durable
+    before any peer can observe them, so mid-round torn state is not a
+    reachable fault (the wire-level nemesis already covers torn traffic).
+    """
+    shard: int
+    crash_round: int
+    restart_round: int
+
+    def __post_init__(self):
+        if self.restart_round <= self.crash_round:
+            raise ValueError(
+                f"CrashPlan(shard={self.shard}): restart_round "
+                f"{self.restart_round} must follow crash_round "
+                f"{self.crash_round}")
+
+
+@dataclass(frozen=True)
 class NemesisConfig:
     """One adversarial schedule, replayable from ``(seed, config)``."""
     drop_prob: float = 0.0
@@ -66,6 +87,8 @@ class NemesisConfig:
     partitions: Tuple[Partition, ...] = ()
     # (src, dst) -> LinkFaults overriding the global probabilities
     link_overrides: Tuple[Tuple[Tuple[int, int], LinkFaults], ...] = ()
+    # crash-restart schedules (the durable-recovery fault axis, §14)
+    crashes: Tuple[CrashPlan, ...] = ()
 
     def faults_for(self, src: int, dst: int) -> LinkFaults:
         for (s, d), lf in self.link_overrides:
@@ -91,6 +114,8 @@ class NemesisConfig:
                 [[s, d], [lf.drop_prob, lf.dup_prob, lf.reorder_prob,
                           lf.delay_prob]]
                 for (s, d), lf in self.link_overrides],
+            "crashes": [[c.shard, c.crash_round, c.restart_round]
+                        for c in self.crashes],
         }
 
     @classmethod
@@ -106,6 +131,8 @@ class NemesisConfig:
             link_overrides=tuple(
                 ((int(s), int(d_)), LinkFaults(*map(float, lf)))
                 for (s, d_), lf in d.get("link_overrides", ())),
+            crashes=tuple(CrashPlan(int(s), int(a), int(b))
+                          for s, a, b in d.get("crashes", ())),
         )
 
 

@@ -89,8 +89,9 @@ class Transport:
         self.window = int(window)
         self._lanes: Dict[Tuple[int, int], _Lane] = {}
         self._staged: List[Frame] = []      # fresh frames this round
+        self.down: set = set()              # crashed shards (DESIGN.md §14)
         self.stats = {"sent": 0, "retransmits": 0, "acks": 0,
-                      "dup_dropped": 0, "delivered": 0}
+                      "dup_dropped": 0, "delivered": 0, "down_dropped": 0}
 
     def _lane(self, src: int, dst: int) -> _Lane:
         key = (src, dst)
@@ -139,8 +140,13 @@ class Transport:
             self._lane(src, dst).last_ship[int(row[M.F_SEQ])] = round_no
             wire.append((src, dst, row))
         self._staged = []
-        # due retransmissions (shipped but never cumulatively acked)
+        # due retransmissions (shipped but never cumulatively acked); a
+        # down sender can't retransmit and a down receiver is pointless
+        # to ship at — skipping WITHOUT touching last_ship leaves the
+        # frame immediately due once the shard restarts
         for (src, dst), lane in sorted(self._lanes.items()):
+            if src in self.down or dst in self.down:
+                continue
             for seq in sorted(lane.unacked):
                 shipped = lane.last_ship.get(seq)
                 if shipped is not None and \
@@ -149,9 +155,11 @@ class Transport:
                     wire.append((src, dst, lane.unacked[seq]))
                     self.stats["retransmits"] += 1
         # cumulative acks for lanes with (re)arrivals; an ack for lane
-        # (src, dst) travels the reverse link (dst, src)
+        # (src, dst) travels the reverse link (dst, src). A dead process
+        # emits nothing — its ack_due flags freeze until recovery
+        # restores the receiver halves from the durable lane image.
         for (src, dst), lane in sorted(self._lanes.items()):
-            if lane.ack_due:
+            if lane.ack_due and dst not in self.down:
                 lane.ack_due = False
                 ack = np.zeros((M.FIELDS,), np.int32)
                 ack[M.F_KIND] = M.MSG_NET_ACK
@@ -164,9 +172,16 @@ class Transport:
         if self.nemesis is not None:
             wire = self.nemesis.perturb(wire, round_no)
 
-        # receive: ack processing + per-lane dedup/buffer
+        # receive: ack processing + per-lane dedup/buffer. Frames whose
+        # recipient is down hit a dead NIC — dropped here (not earlier)
+        # so nemesis-held frames released mid-outage die the same way
+        # fresh ones do; the sender's retransmit ring re-ships them
+        # after the restart.
         touched = set()
         for src, dst, row in wire:
+            if dst in self.down:
+                self.stats["down_dropped"] += 1
+                continue
             if int(row[M.F_KIND]) == M.MSG_NET_ACK:
                 lane = self._lane(dst, src)     # the lane being acked
                 cum = int(row[M.F_A])
@@ -256,6 +271,82 @@ class Transport:
         for key in [k for k in self._lanes
                     if k[0] == shard or k[1] == shard]:
             del self._lanes[key]
+
+    # ------------------------------------------------- crash-restart (§14)
+    # A crashed shard's halves of its lanes — sender rings on (s, *),
+    # receiver cursors on (*, s) — are process memory and die with it.
+    # They are journaled per round into the WAL as a flat str -> ndarray
+    # image and reinstalled at restart; the surviving peers' halves of
+    # the same lane objects are never touched. Frames the dead shard had
+    # sent but nobody acked are still in the restored ring and retransmit
+    # immediately; frames peers sent it while it was down were never
+    # delivered (down-NIC drop above) and retransmit once it returns —
+    # exactly-once holds across the reboot without a lane reset.
+
+    def crash_shard(self, shard: int) -> None:
+        """Mark ``shard``'s process dead: it ships nothing, acks nothing,
+        and every frame addressed to it hits a dead NIC. Lane objects are
+        left in place — the volatile halves are overwritten at restart."""
+        self.down.add(int(shard))
+
+    def export_shard_lanes(self, shard: int) -> Dict[str, np.ndarray]:
+        """Snapshot the halves of every lane that live in ``shard``'s
+        process memory, as a flat npz-able dict (the WAL lane image)."""
+        shard = int(shard)
+        img: Dict[str, np.ndarray] = {}
+        for (src, dst), lane in sorted(self._lanes.items()):
+            if src == shard:                      # sender half of (s, p)
+                seqs = sorted(lane.unacked)
+                img[f"send/{dst}/next_seq"] = np.int64(lane.next_seq)
+                img[f"send/{dst}/acked"] = np.int64(lane.acked)
+                img[f"send/{dst}/seqs"] = np.asarray(seqs, np.int64)
+                img[f"send/{dst}/rows"] = (
+                    np.stack([lane.unacked[q] for q in seqs])
+                    if seqs else np.zeros((0, M.FIELDS), np.int32))
+            if dst == shard:                      # receiver half of (p, s)
+                seqs = sorted(lane.pending)
+                img[f"recv/{src}/cursor"] = np.int64(lane.cursor)
+                img[f"recv/{src}/ack_due"] = np.int64(int(lane.ack_due))
+                img[f"recv/{src}/seqs"] = np.asarray(seqs, np.int64)
+                img[f"recv/{src}/rows"] = (
+                    np.stack([lane.pending[q] for q in seqs])
+                    if seqs else np.zeros((0, M.FIELDS), np.int32))
+        return img
+
+    def restart_shard(self, shard: int,
+                      image: Dict[str, np.ndarray]) -> None:
+        """Reinstall ``shard``'s lane halves from a durable image and
+        bring its NIC back up. Halves not present in the image (a peer
+        opened the lane while the shard was down) reset to the fresh
+        handshake state, which is what the restarted process remembers."""
+        shard = int(shard)
+        long_ago = -(1 << 30)   # restored unacked frames: due immediately
+        for (src, dst), lane in self._lanes.items():
+            if src == shard:
+                lane.next_seq, lane.acked = 1, 0
+                lane.unacked, lane.last_ship = {}, {}
+            if dst == shard:
+                lane.cursor, lane.pending, lane.ack_due = 0, {}, False
+        peers = {key.split("/")[1] for key in image}
+        for p in sorted(int(x) for x in peers):
+            if f"send/{p}/next_seq" in image:
+                lane = self._lane(shard, p)
+                lane.next_seq = int(image[f"send/{p}/next_seq"])
+                lane.acked = int(image[f"send/{p}/acked"])
+                seqs = image[f"send/{p}/seqs"]
+                rows = image[f"send/{p}/rows"]
+                lane.unacked = {int(q): np.asarray(r, np.int32).copy()
+                                for q, r in zip(seqs, rows)}
+                lane.last_ship = {int(q): long_ago for q in seqs}
+            if f"recv/{p}/cursor" in image:
+                lane = self._lane(p, shard)
+                lane.cursor = int(image[f"recv/{p}/cursor"])
+                lane.ack_due = bool(int(image[f"recv/{p}/ack_due"]))
+                seqs = image[f"recv/{p}/seqs"]
+                rows = image[f"recv/{p}/rows"]
+                lane.pending = {int(q): np.asarray(r, np.int32).copy()
+                                for q, r in zip(seqs, rows)}
+        self.down.discard(shard)
 
     # --------------------------------------------------------------- state
     def in_flight(self) -> int:

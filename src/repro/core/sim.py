@@ -33,6 +33,7 @@ import numpy as np
 from . import bg as B
 from . import messages as M
 from . import refs
+from .durability import Durability, wal
 from .membership import (Membership, epoch_broadcast, moves_targeting,
                          owned_entry_count)
 from .net import Nemesis, NemesisConfig, Transport, trace_entry
@@ -215,7 +216,8 @@ class Cluster:
                  retransmit_after: int = 4, net_window: int = 4096,
                  trace: Optional[bool] = None,
                  key_lo: int = KEY_MIN, key_hi: int = KEY_MAX,
-                 initial_shards: Optional[int] = None):
+                 initial_shards: Optional[int] = None,
+                 durability=None):
         self.cfg = cfg
         self.n = cfg.num_shards
         # elastic membership (DESIGN.md §13): cfg.num_shards is the
@@ -284,6 +286,29 @@ class Cluster:
             self.net = Transport(
                 self.n, Nemesis(nemesis, np.random.default_rng(nemesis_ss)),
                 retransmit_after=retransmit_after, window=net_window)
+        # durability (DESIGN.md §14): per-shard WAL + snapshots. Crash
+        # plans require it (recovery needs a durable base), so a run
+        # with crashes and no explicit store gets an ephemeral tempdir.
+        # ``durability`` accepts a directory path, a Durability, or None.
+        self._crash_plans = tuple(nemesis.crashes) if nemesis else ()
+        if self._crash_plans:
+            from .durability.engine import validate_crash_plans
+            validate_crash_plans(self._crash_plans, self.n)
+        self._tmp_durability = None
+        if durability is None and self._crash_plans:
+            import tempfile
+            self._tmp_durability = tempfile.TemporaryDirectory(
+                prefix="dili-durability-")
+            durability = self._tmp_durability.name
+        self.durability: Optional[Durability] = None
+        if durability is not None:
+            self.durability = (durability if isinstance(durability,
+                                                        Durability)
+                               else Durability(durability, cfg))
+            for s in range(self.n):
+                self.durability.ensure_genesis(
+                    s, self.states[s], self.bgs[s], self.backlog[s],
+                    self._lane_image(s))
         # per-round observable-outcome trace, the byte-identical-replay
         # witness. Default: on for nemesis runs (where the (seed, config)
         # repro contract needs it), off on the clean fast path (a per-
@@ -329,6 +354,11 @@ class Cluster:
         if rows:
             self.backlog[shard] = np.concatenate(
                 [self.backlog[shard], np.stack(rows)], axis=0)
+            if self.durability is not None:
+                # journal on acceptance: an op whose id was handed out
+                # must survive a crash of its server (DESIGN.md §14)
+                self.durability.log_submit(shard, self.round_no,
+                                           np.stack(rows))
         return ids
 
     def take_result(self, op_id: int) -> int:
@@ -411,18 +441,81 @@ class Cluster:
         if changed:
             self._broadcast_epoch()
 
+    # ------------------------------------------------- crash-restart (§14)
+    def _lane_image(self, s: int) -> Dict[str, np.ndarray]:
+        return (self.net.export_shard_lanes(s)
+                if self.net is not None else {})
+
+    def _down(self):
+        return self.net.down if self.net is not None else ()
+
+    def _apply_crash_plans(self) -> None:
+        """Execute due CrashPlans at the top of the round. Restarts run
+        before crashes so a plan pair sharing a round boundary recovers
+        one shard while killing another deterministically."""
+        for c in self._crash_plans:
+            if c.restart_round == self.round_no and c.shard in self._down():
+                self._restart_shard(c.shard)
+        for c in self._crash_plans:
+            if c.crash_round == self.round_no:
+                self._crash_shard(c.shard)
+
+    def _crash_shard(self, s: int) -> None:
+        """kill -9: the process's memory — shard state, BgTable, host
+        backlog, its halves of every transport lane — vanishes. Durable
+        WAL + snapshots (and everything client-side: results, pending op
+        ids) survive."""
+        self.membership.crash(s)
+        if not self.membership.active:
+            raise RuntimeError(
+                f"crash of shard {s} leaves no active shard — the "
+                f"coordinator for epoch broadcasts must survive")
+        self._broadcast_epoch()
+        self.states[s] = init_shard(self.cfg, s, peers_mask=0)
+        self.bgs[s] = B.init_bg_table(self.cfg)
+        self.backlog[s] = np.zeros((0, M.FIELDS), np.int32)
+        self.net.crash_shard(s)
+
+    def _restart_shard(self, s: int) -> None:
+        """Recovery: snapshot + WAL replay rebuilds the shard at its last
+        durable round; the lane image re-arms its retransmit rings and
+        receiver cursors, so exactly-once delivery spans the reboot. The
+        shard re-enters as JOINING-with-state (crash ≠ drain) — host
+        maintenance promotes it back to ACTIVE since it still owns its
+        pre-crash sublists, and carve-out / delegation healing repairs
+        anything that restructured while it was down."""
+        rec = self.durability.recover(s, in_cap=self.in_cap)
+        self.states[s] = rec.state
+        self.bgs[s] = rec.bg
+        self.backlog[s] = rec.backlog
+        self.net.restart_shard(s, rec.lanes)
+        self.membership.restart(s)
+        self._broadcast_epoch()
+        # fresh durable base: the replayed suffix is now redundant
+        self.durability.snapshot_now(s, self.round_no - 1, self.states[s],
+                                     self.bgs[s], self.backlog[s],
+                                     self._lane_image(s))
+
     # ------------------------------------------------------------- execution
     def step(self) -> int:
         """One synchronized round across all shards. Returns #completed."""
         cfg = self.cfg
+        self._apply_crash_plans()
+        down = self._down()
         outs = []
+        client_feeds: List[np.ndarray] = []
         for s in range(self.n):
+            if s in down:
+                outs.append(None)
+                client_feeds.append(np.zeros((0, M.FIELDS), np.int32))
+                continue
             # feed: backlog first (FIFO), bounded by in_cap
             feed = self.backlog[s][:self.in_cap]
             self.backlog[s] = self.backlog[s][self.in_cap:]
             inbox = np.zeros((self.in_cap, M.FIELDS), np.int32)
             inbox[:feed.shape[0]] = feed
             client = np.zeros((0, M.FIELDS), np.int32)
+            client_feeds.append(client)
             out = shard_round(self.states[s], self.bgs[s], s,
                               jnp.asarray(inbox),
                               jnp.asarray(client.reshape(0, M.FIELDS)),
@@ -433,7 +526,12 @@ class Cluster:
         self.last_completions = []
         new_msgs: List[np.ndarray] = []
         out_counts: List[int] = []
+        comp_by_shard: List[np.ndarray] = []
         for s, out in enumerate(outs):
+            if out is None:                      # crashed: emitted nothing
+                out_counts.append(0)
+                comp_by_shard.append(np.zeros((0, 3), np.int32))
+                continue
             self.states[s] = out.state
             self.bgs[s] = out.bg
             self.stats["fast_hits"] += int(out.fast_hits)
@@ -465,6 +563,8 @@ class Cluster:
             cv = np.asarray(out.comp_val)
             cr = np.asarray(out.comp_src)
             done = cs >= 0
+            comp_by_shard.append(np.stack(
+                [cs[done], cv[done], cr[done]], axis=1).astype(np.int32))
             for slot, val, src in zip(cs[done], cv[done], cr[done]):
                 self.results[int(slot)] = int(val)
                 self.result_src[int(slot)] = int(src)
@@ -480,6 +580,7 @@ class Cluster:
             self._ctrl_out = []
 
         # ------------------------------------------------ route (FIFO/pair)
+        pre_lens = [b.shape[0] for b in self.backlog]
         if self.net is not None:
             # reliable transport over the (possibly nemesis-perturbed)
             # wire: loopback rows bypass it, everything else is
@@ -504,6 +605,25 @@ class Cluster:
                     self.backlog[d] = np.concatenate(
                         [self.backlog[d], mine], axis=0)
         self._membership_maintenance()
+        if self.durability is not None:
+            # journal the round per live shard: the inputs consumed (the
+            # feed discipline re-derives them from backlog + appends),
+            # the completions produced (replay audit), and the post-
+            # routing lane image. fsync'd before this round's effects
+            # become observable via next round's acks (§14).
+            for s in range(self.n):
+                if s in down:
+                    continue
+                self.durability.log_round(
+                    s, self.round_no,
+                    appends=self.backlog[s][pre_lens[s]:],
+                    client=client_feeds[s], comp=comp_by_shard[s],
+                    bg_phases=B.slot_phases(self.bgs[s]),
+                    epoch=int(np.asarray(self.states[s].epoch)),
+                    lanes=self._lane_image(s))
+                self.durability.maybe_snapshot(
+                    s, self.round_no, self.states[s], self.bgs[s],
+                    self.backlog[s], self._lane_image(s))
         if self.trace_enabled:
             # membership transitions are part of the replay witness: a
             # run that joins/retires at a different round is not a replay
@@ -532,6 +652,10 @@ class Cluster:
             busy = busy or bool(self._pending_ops)
             busy = busy or bool(self._ctrl_out)
             busy = busy or (self.net is not None and not self.net.idle())
+            # a crashed shard is not quiet — keep stepping toward its
+            # scheduled restart so recovery (and retransmission into it)
+            # can finish the run
+            busy = busy or bool(self.membership.crashed)
             if not busy:
                 return
         raise RuntimeError(
@@ -565,16 +689,26 @@ class Cluster:
     # the balancer uses the verdict to keep its load model honest.
     def split(self, s: int, entry_keymax: int, sitem_idx: int) -> bool:
         self.bgs[s], ok = B.queue_split(self.bgs[s], entry_keymax, sitem_idx)
+        self._log_command(s, wal.CMD_SPLIT, (entry_keymax, sitem_idx), ok)
         return bool(ok)
 
     def move(self, s: int, entry_keymax: int, target: int) -> bool:
         self.bgs[s], ok = B.queue_move(self.bgs[s], entry_keymax, target)
+        self._log_command(s, wal.CMD_MOVE, (entry_keymax, target), ok)
         return bool(ok)
 
     def merge(self, s: int, left_keymax: int, right_keymax: int) -> bool:
         self.bgs[s], ok = B.queue_merge(self.bgs[s], left_keymax,
                                         right_keymax)
+        self._log_command(s, wal.CMD_MERGE, (left_keymax, right_keymax), ok)
         return bool(ok)
+
+    def _log_command(self, s: int, cmd: int, args, ok) -> None:
+        """Balancer commands mutate the BgTable outside the inbox, so
+        replay needs them journaled (wal.py KIND_COMMAND)."""
+        if self.durability is not None:
+            self.durability.log_command(s, self.round_no, cmd, args,
+                                        bool(ok))
 
     def middle_item(self, s: int, head_idx: int) -> Optional[int]:
         """Pool idx of the middle live item of a sublist (split point)."""

@@ -131,15 +131,28 @@ def check(res: dict, repro: str) -> None:
 
 
 def main(argv) -> int:
+    """``NEMESIS_CONFIG`` (a ``NemesisConfig.to_dict()`` JSON) overrides
+    the default schedule — this is how the crash-restart corpus reaches
+    the shardmap subprocess. The ``digest=`` field on OK lines is the
+    round-trace digest, compared across two executions by the
+    byte-identical-replay tests."""
+    import os
     kind, n_ops, seeds = argv[0], int(argv[1]), [int(s) for s in argv[2:]]
-    nemesis = default_nemesis()
+    cfg_json = os.environ.get("NEMESIS_CONFIG")
+    if cfg_json:
+        from repro.core.net import NemesisConfig
+        nemesis = NemesisConfig.from_dict(json.loads(cfg_json))
+    else:
+        nemesis = default_nemesis()
     failures = []
     for seed in seeds:
         repro = nemesis.repro(seed)
         try:
             res = run_differential(kind, seed, nemesis, n_ops=n_ops)
             check(res, repro)
+            from repro.core.net.digest import trace_digest
             print(f"OK {kind} seed={seed} rounds={res['rounds']} "
+                  f"digest={trace_digest(res['trace'])} "
                   f"net={res['net_stats']}", flush=True)
         except AssertionError as e:
             print(f"FAIL {kind} {repro}\n{e}", flush=True)

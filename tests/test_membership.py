@@ -91,11 +91,17 @@ def test_membership_mask_capacity_limit():
     assert live_mask(range(64), 64) == -1
     with pytest.raises(ValueError, match="capacity"):
         live_mask(range(10), MASK_BITS)      # partial at >= 31
-    with pytest.raises(ValueError, match="capacity"):
+    with pytest.raises(ValueError, match="bitmask"):
         Membership(40, 3)
-    big = Membership(40)                      # full capacity still fine
+    # capacity > MASK_BITS is now rejected outright at construction —
+    # bit ``s`` of the int32 live_mask must exist for every slot, and a
+    # silent overflow at 32+ shards corrupted peer-mask gating.
+    with pytest.raises(ValueError, match="bitmask"):
+        Membership(40)
+    mb31 = Membership(MASK_BITS)              # the bound itself still works
+    assert mb31.mask() == -1
     with pytest.raises(ValueError):
-        big.begin_join()
+        mb31.begin_join()
 
 
 # -------------------------------------------------- M2: transport reset

@@ -53,6 +53,8 @@ def test_corpus_schedule(entry):
     check(res, repro)
     # the schedule must actually have exercised the wire
     assert res["net_stats"]["sent"] > 0, repro
+    if config.crashes:       # and the kill -9 must actually have fired
+        assert any("mb crash" in ln for ln in res["trace"]), repro
 
 
 # ------------------------------------------------- N2: idempotence matrix
@@ -174,6 +176,59 @@ def test_stale_slot_ack_after_move_is_inert():
             [cl.backlog[dst], fresh[None]], axis=0)
     cl.run_until_quiet(200)
     assert _digest(cl) == d0
+
+
+def test_duplicate_delivery_after_recovery_is_inert():
+    """Idempotence extended to WAL-replayed rounds (DESIGN.md §14):
+    recovery restores the receiver cursors from the journaled lane
+    image, so frames recorded before/through a crash, re-delivered
+    against the just-recovered shard, are absorbed by the dedup window
+    with no state change — recovery must not reopen at-least-once
+    delivery into double effects."""
+    from repro.core.net.nemesis import CrashPlan
+    cfg = small_cfg(2)._replace(move_batch=2)
+    nem = NemesisConfig(crashes=(CrashPlan(1, 30, 55),))
+    cl = Cluster(cfg, seed=1, nemesis=nem)
+    rec = []
+    orig = cl.net.nemesis.perturb
+
+    def spy(frames, round_no):
+        rec.extend((s, d, row.copy()) for s, d, row in frames)
+        return orig(frames, round_no)
+
+    cl.net.nemesis.perturb = spy
+
+    keys = list(range(10, 210, 5))
+    cl.submit(0, [OP_INSERT] * len(keys), keys)
+    cl.run_until_quiet(600)
+    subs = [e for e in cl.sublists(0) if e["owner"] == 0]
+    mid = cl.middle_item(0, subs[0]["head_idx"])
+    assert cl.split(0, subs[0]["keymax"], mid)
+    cl.run_until_quiet(600)
+    subs = sorted((e for e in cl.sublists(0) if e["owner"] == 0),
+                  key=lambda e: e["keymin"])
+    assert cl.move(0, subs[0]["keymax"], 1)
+    cl.run_until_quiet(800)
+    # cross-shard FINDs through the crash window (r30 crash, r55 restart)
+    while cl.round_no < 70:
+        cl.submit(0, [OP_FIND] * 4, [20, 60, 120, 180])
+        cl.step()
+    cl.run_until_quiet(800)
+    assert cl.durability.stats["recoveries"] == 1
+    assert sorted(cl.all_keys()) == sorted(keys)
+
+    d0 = _digest(cl)
+    replayed = [f for f in rec
+                if int(f[2][M.F_KIND]) != M.MSG_NET_ACK and f[1] == 1]
+    assert len(replayed) > 10
+    before = cl.net.stats["dup_dropped"]
+    cl.net._staged.extend(replayed)
+    cl.net._staged.extend(replayed)
+    cl.step()
+    cl.run_until_quiet(200)
+    assert cl.net.stats["dup_dropped"] >= before + 2 * len(replayed)
+    assert _digest(cl) == d0, "re-delivery against recovered shard " \
+                              "changed state"
 
 
 # --------------------------------------------- N3: (seed, config) replay
