@@ -7,6 +7,8 @@
   bgops  Split and Move latency under insert load (paper §C / Fig. 4)
   kernels hybrid_search + paged_attention micro-bench vs jnp reference
   lmstep small-LM train-step walltime (framework overhead sanity)
+  zipf   skewed-read throughput vs YCSB θ, hot-sublist read replication
+         on vs off (DESIGN.md §15)
   nemesis throughput under lossy/duplicating/reordering channels via the
          reliable transport, vs the direct-routing baseline (DESIGN.md §11)
   recovery crash-restart cost vs snapshot cadence: WAL replay length,
@@ -652,6 +654,65 @@ def lmstep():
     emit("lmstep", "smoke_tokens_per_s", round(tok / ms * 1e3))
 
 
+# -------------------------------------------------------------------- zipf
+
+def zipf(n_load=1000, n_ops=4000, key_space=4000):
+    """Skewed-read throughput with/without hot-sublist replication (§15).
+
+    Bounded YCSB Zipfian(θ) at θ ∈ {0.5, 0.9, 0.99} on a fixed 4-shard
+    cluster: a 90%-read mixed warm phase (YCSB-B; exercises the delta
+    stream — replicas track live mutations), then a read-only measured
+    phase (YCSB-C, the standard shape for read-throughput numbers; the
+    balancer stays live throughout). Unscrambled Zipfian means the hot
+    ranks are a contiguous key prefix — one hot *sublist* — so at high θ
+    the read stream funnels into a single shard's per-round admission
+    lane. Replication on: the balancer's op-rate EWMA flags the hot
+    entry, replicates it, and the client spreads FINDs over
+    [primary] + replicas — the acceptance metric is the on/off
+    throughput ratio at θ=0.99 (target ≥1.5x) with θ=0.5 unharmed
+    (the ``hot_share`` gate keeps low-skew traffic from replicating).
+    """
+    def cfg_for(rep: bool) -> DiLiConfig:
+        return DiLiConfig(num_shards=4, pool_capacity=1 << 15,
+                          max_sublists=256, max_ctrs=256,
+                          max_scan=1 << 15, batch_size=32,
+                          mailbox_cap=512, split_threshold=125,
+                          move_batch=32, block_probe=True,
+                          replication=rep,
+                          replica_sessions=4, replica_slots=8,
+                          replica_batch=16, replica_refresh_rounds=4,
+                          replica_staleness_rounds=64)
+
+    load_kinds, load_keys = load_phase(n_load, key_space, seed=12)
+    for theta in (0.5, 0.9, 0.99):
+        warm_kinds, warm_keys = mixed_phase(n_ops, key_space, 0.9, seed=13,
+                                            theta=theta)
+        kinds, keys = mixed_phase(n_ops, key_space, 1.0, seed=14,
+                                  theta=theta)
+        tlab = f"t{int(theta * 100):03d}"
+        thr = {}
+        for label, rep in (("off", False), ("on", True)):
+            backend = LocalBackend(cfg_for(rep))
+            bal = Balancer(backend, hot_rate=6.0, cold_rate=1.0,
+                           hot_share=0.45, replica_fanout=3)
+            client = DiLiClient(backend, balance=bal, max_inflight=1024)
+            _drive_client(client, load_kinds, load_keys, 32)
+            client.settle(max_rounds=8000)
+            _drive_client(client, warm_kinds, warm_keys, 32)
+            r0 = backend.stats["rounds"]
+            h0 = backend.stats["rep_hits"]
+            dt = _drive_client(client, kinds, keys, 32)
+            thr[label] = len(kinds) / dt
+            emit("zipf", f"{tlab}_{label}_ops_per_s", round(thr[label]))
+            emit("zipf", f"{tlab}_{label}_rounds",
+                 backend.stats["rounds"] - r0)
+            if rep:
+                emit("zipf", f"{tlab}_rep_hits",
+                     backend.stats["rep_hits"] - h0)
+        emit("zipf", f"{tlab}_on_over_off",
+             round(thr["on"] / thr["off"], 2))
+
+
 # ----------------------------------------------------------------- nemesis
 
 def nemesis(n_load=800, n_ops=1600, key_space=3000):
@@ -800,7 +861,7 @@ def recovery(n_load=400, n_ops=800, key_space=2500, crash_r=90, outage=50):
 
 ALL = {"fig3a": fig3a, "fig3b": fig3b, "bgops": bgops,
        "rebalance": rebalance, "kernels": kernels, "lmstep": lmstep,
-       "nemesis": nemesis, "recovery": recovery}
+       "zipf": zipf, "nemesis": nemesis, "recovery": recovery}
 
 # shrunken workloads for the CI smoke lane (--tiny): same code paths,
 # minutes -> seconds. Benches without parameters run as-is.
@@ -809,6 +870,7 @@ TINY = {
     "fig3b": dict(n_load=200, n_ops=400, key_space=1000),
     "bgops": dict(n_keys=300, key_space=1200),
     "rebalance": dict(n_keys=125, n_churn=200, key_space=1000),
+    "zipf": dict(n_load=300, n_ops=800, key_space=1200),
     "nemesis": dict(n_load=200, n_ops=400, key_space=1000),
     "recovery": dict(n_load=150, n_ops=300, key_space=1000,
                      crash_r=40, outage=25),

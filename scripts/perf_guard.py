@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Perf-regression guard over BENCH_*.json artifacts.
+
+Reads the guard table from benchmarks/baselines.json and checks each
+bound against the artifact directory. Two profiles:
+
+  full  — the checked-in full-size artifacts at the repo root. Guards
+          the headline ratios (replication speedup at high skew, no
+          uniform-skew regression, fast-path and baseline-structure
+          speedups, batching, nemesis degradation floor). Ratios come
+          from same-process on/off runs, so wall-clock noise cancels.
+  tiny  — the CI `--tiny` smoke artifacts. Machine-independent signals
+          only: correctness flags, deterministic round counts, and hit
+          counters. Wall-clock throughput on shared CI runners is too
+          noisy to bound.
+
+Usage:
+  python scripts/perf_guard.py                       # full, repo root
+  python scripts/perf_guard.py --profile tiny --dir .  # CI smoke
+
+Exit status is nonzero if any bound is violated or any guarded
+artifact/metric is missing (a silently vanished benchmark must fail,
+not pass).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def load_rows(art_dir: Path, bench: str):
+    path = art_dir / f"BENCH_{bench}.json"
+    if not path.exists():
+        return None
+    data = json.loads(path.read_text())
+    return {r["metric"]: r["value"] for r in data["rows"]}
+
+
+def check(guard, rows):
+    """Return None if the bound holds, else a human-readable violation."""
+    metric = guard["metric"]
+    if metric not in rows:
+        return f"metric {metric!r} missing from artifact"
+    val = rows[metric]
+    if "min" in guard and val < guard["min"]:
+        return f"{metric} = {val} < floor {guard['min']}"
+    if "max" in guard and val > guard["max"]:
+        return f"{metric} = {val} > ceiling {guard['max']}"
+    if "max_metric" in guard:
+        other = guard["max_metric"]
+        if other not in rows:
+            return f"metric {other!r} missing from artifact"
+        if val > rows[other]:
+            return f"{metric} = {val} > {other} = {rows[other]}"
+    return None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=str(REPO),
+                    help="directory holding BENCH_*.json (default: repo root)")
+    ap.add_argument("--profile", choices=("full", "tiny"), default="full")
+    ap.add_argument("--baselines",
+                    default=str(REPO / "benchmarks" / "baselines.json"))
+    args = ap.parse_args(argv)
+
+    guards = json.loads(Path(args.baselines).read_text())[args.profile]
+    art_dir = Path(args.dir)
+
+    failures = []
+    cache = {}
+    for g in guards:
+        bench = g["bench"]
+        if bench not in cache:
+            cache[bench] = load_rows(art_dir, bench)
+        rows = cache[bench]
+        if rows is None:
+            failures.append(f"[{bench}] artifact BENCH_{bench}.json missing "
+                            f"from {art_dir}")
+            continue
+        msg = check(g, rows)
+        tag = f"[{bench}] {g['metric']}"
+        if msg is None:
+            print(f"ok    {tag} = {rows[g['metric']]}")
+        else:
+            failures.append(f"{tag}: {msg}")
+            print(f"FAIL  {tag}: {msg}")
+
+    if failures:
+        print(f"\nperf_guard ({args.profile}): "
+              f"{len(failures)} violation(s)", file=sys.stderr)
+        return 1
+    print(f"\nperf_guard ({args.profile}): all {len(guards)} bounds hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,13 +33,14 @@ from repro.core import bg as B
 from repro.core.durability import wal
 from repro.core import messages as M
 from repro.core import refs
+from repro.core import replica as R
 from repro.core.membership import (Membership, epoch_row, moves_targeting,
                                    owned_entry_count)
 from repro.core.sim import (Cluster, OpIdAllocator, OutboxOverflow,
                             chain_keys, global_keys, make_op_row,
                             materialize_ops, registry_entries,
                             state_sublists)
-from repro.core.types import DiLiConfig, KEY_MAX, KEY_MIN
+from repro.core.types import DiLiConfig, KEY_MAX, KEY_MIN, ST_KEY
 
 Completion = Tuple[int, int, int]           # (op_id, result, src_shard)
 RegEntry = Tuple[int, int, int]             # (keymin, keymax, owner)
@@ -75,6 +76,17 @@ class Backend(Protocol):
     def move(self, s: int, entry_keymax: int, target: int) -> bool: ...
 
     def merge(self, s: int, left_keymax: int, right_keymax: int) -> bool: ...
+
+    # -------------------------------------------------- replication (§15)
+    # op-rate load signal + hot-entry read replication; ``replica_epoch``
+    # bumps whenever the replica map changes so clients know to re-pull
+    # ``replica_sets()`` for FIND routing.
+    def replicate(self, s: int, entry_keymax: int, target: int) -> bool: ...
+
+    def drop_replica(self, s: int, entry_keymax: int,
+                     target: int = -1) -> bool: ...
+
+    def replica_sets(self) -> Dict[int, Tuple[int, int, List[int]]]: ...
 
 
 class LocalBackend:
@@ -198,6 +210,28 @@ class LocalBackend:
 
     def merge(self, s, left_keymax, right_keymax) -> bool:
         return self.cluster.merge(s, left_keymax, right_keymax)
+
+    # -------------------------------------------------- replication (§15)
+    @property
+    def op_rate_ewma(self):
+        return self.cluster.op_rate_ewma
+
+    @property
+    def rep_rate_ewma(self):
+        return self.cluster.rep_rate_ewma
+
+    @property
+    def replica_epoch(self) -> int:
+        return self.cluster.replica_epoch
+
+    def replicate(self, s, entry_keymax, target) -> bool:
+        return self.cluster.replicate(s, entry_keymax, target)
+
+    def drop_replica(self, s, entry_keymax, target=-1) -> bool:
+        return self.cluster.drop_replica(s, entry_keymax, target)
+
+    def replica_sets(self):
+        return self.cluster.replica_sets()
 
     # ------------------------------------------------------------ debugging
     def all_keys(self) -> List[int]:
@@ -330,7 +364,18 @@ class ShardMapBackend:
                     if self.net is not None else {})
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
-                      "move_hits": 0, "blk_hits": 0, "max_bg_active": 0}
+                      "move_hits": 0, "blk_hits": 0, "max_bg_active": 0,
+                      "rep_hits": 0}
+        # same load/replication host state as Cluster (see sim.py): the
+        # balancer and client API read an identical surface off either
+        # backend.
+        self.op_rate_ewma: Dict[int, float] = {}
+        self.rep_rate_ewma: Dict[int, float] = {}
+        self._replica_map: Dict[int, Tuple[int, set]] = {}
+        self.replica_epoch = 0
+        if cfg.replication:
+            tree_map = self._jax.tree_util.tree_map
+            R.warm_commands(tree_map(lambda x: x[0], self._states), cfg)
 
     # ------------------------------------------------------------- protocol
     @property
@@ -509,6 +554,44 @@ class ShardMapBackend:
             self._ids.release(int(slot))
         return comps
 
+    def _update_op_rates(self, ent_hits, rep_hits=None) -> None:
+        """Per-entry op-rate EWMA, mirroring ``Cluster.step``'s update
+        (same alpha/prune so the differential harness sees one model):
+        decay every tracked entry, add this round's per-shard hits keyed
+        by registry keymax, drop entries decayed to noise. ``rep_hits``
+        (per-shard replica-served FIND counts, [S]) feeds the per-shard
+        ``rep_rate_ewma`` the balancer folds into shard load — replica
+        service is invisible to the registry-keyed rates (the entry lives
+        on the primary), and an uncorrected model reads serving replicas
+        as idle and churns moves against phantom imbalance."""
+        hits = np.asarray(ent_hits)                       # [S, M]
+        ent_rates: Dict[int, int] = {}
+        if hits.any():
+            kmax = np.asarray(self._states.registry.keymax)   # [S, M]
+            for s, e in zip(*np.nonzero(hits)):
+                k = int(kmax[s, e])
+                if k != ST_KEY:
+                    ent_rates[k] = ent_rates.get(k, 0) + int(hits[s, e])
+        alpha = 0.3
+        nxt: Dict[int, float] = {}
+        for k, v in self.op_rate_ewma.items():
+            d = v * (1.0 - alpha)
+            if d > 1e-3:
+                nxt[k] = d
+        for k, h in ent_rates.items():
+            nxt[k] = nxt.get(k, 0.0) + alpha * h
+        self.op_rate_ewma = nxt
+        nxt_rep: Dict[int, float] = {}
+        for s, v in self.rep_rate_ewma.items():
+            d = v * (1.0 - alpha)
+            if d > 1e-3:
+                nxt_rep[s] = d
+        if rep_hits is not None:
+            for s, h in enumerate(np.asarray(rep_hits)):
+                if h:
+                    nxt_rep[s] = nxt_rep.get(s, 0.0) + alpha * int(h)
+        self.rep_rate_ewma = nxt_rep
+
     def _step_hostroute(self) -> List[Completion]:
         """One round on the nemesis path: device round (no all_to_all),
         host-side transport routing of the raw outboxes."""
@@ -526,7 +609,7 @@ class ShardMapBackend:
         out = self._rnd(self._states, self._bgs,
                         self._jnp.asarray(inbox),
                         self._jnp.asarray(client))
-        self._states, self._bgs, outbox, cs, cv, cr, rstats = out
+        self._states, self._bgs, outbox, cs, cv, cr, rstats, ent_hits = out
         self._host_states = None
         rstats = np.asarray(rstats)
         out_counts = [int(c) for c in rstats[:, 0]]
@@ -537,6 +620,8 @@ class ShardMapBackend:
         self.stats["fast_hits"] += int(rstats[:, 3].sum())
         self.stats["mut_hits"] += int(rstats[:, 4].sum())
         self.stats["blk_hits"] += int(rstats[:, 5].sum())
+        self.stats["rep_hits"] += int(rstats[:, 6].sum())
+        self._update_op_rates(ent_hits, rstats[:, 6])
         outbox = np.asarray(outbox)
         per_src = []
         for s in range(self.n):
@@ -599,9 +684,10 @@ class ShardMapBackend:
         client = self._feed_client()
         out = self._rnd(self._states, self._bgs, self._inbox,
                         self._jnp.asarray(client))
-        self._states, self._bgs, self._inbox, cs, cv, cr, rstats = out
+        self._states, self._bgs, self._inbox, cs, cv, cr, rstats, \
+            ent_hits = out
         self._host_states = None
-        # per-shard int32[6] round stats computed on-device (the routed
+        # per-shard int32[8] round stats computed on-device (the routed
         # inbox itself never crosses to host on the hot path; see
         # make_dili_round's docstring for the lane layout)
         rstats = np.asarray(rstats)
@@ -611,6 +697,8 @@ class ShardMapBackend:
                                           int(rstats[:, 4].max()))
         self.stats["move_hits"] += int(rstats[:, 5].sum())
         self.stats["blk_hits"] += int(rstats[:, 6].sum())
+        self.stats["rep_hits"] += int(rstats[:, 7].sum())
+        self._update_op_rates(ent_hits, rstats[:, 7])
         delegated = int(rstats[:, 2].sum())
         if delegated:
             self.stats["delegated"] += delegated
@@ -690,6 +778,75 @@ class ShardMapBackend:
     def merge(self, s, left_keymax, right_keymax) -> bool:
         return self._queue_bg(s, B.queue_merge, wal.CMD_MERGE,
                               left_keymax, right_keymax)
+
+    # -------------------------------------------------- replication (§15)
+    def _queue_state(self, s: int, fn, cmd: int, *args) -> bool:
+        """Like ``_queue_bg`` but for commands that edit ``ShardState``
+        (the replication session table) instead of the BgTable."""
+        tree_map = self._jax.tree_util.tree_map
+        st = tree_map(lambda x: x[s], self._states)
+        st, ok = fn(st, self.cfg, *args)
+        self._states = tree_map(lambda col, leaf: col.at[s].set(leaf),
+                                self._states, st)
+        self._host_states = None
+        ok = bool(np.asarray(ok))
+        if self.durability is not None:
+            self.durability.log_command(s, self.round_no, cmd, args, ok)
+        return ok
+
+    def replicate(self, s, entry_keymax, target) -> bool:
+        if not self.cfg.replication:
+            raise ValueError(
+                "replicate: cfg.replication is off — replica serve and "
+                "publication are compiled out of shard_round")
+        ok = self._queue_state(s, R.queue_replicate_jit, wal.CMD_REPLICATE,
+                               entry_keymax, target)
+        if ok:
+            prim, tg = self._replica_map.get(entry_keymax, (s, set()))
+            tg = set(tg) | {int(target)}
+            self._replica_map[int(entry_keymax)] = (s, tg)
+            self.replica_epoch += 1
+        return ok
+
+    def drop_replica(self, s, entry_keymax, target=-1) -> bool:
+        if not self.cfg.replication:
+            raise ValueError("drop_replica: cfg.replication is off")
+        ok = self._queue_state(s, R.queue_drop_replica_jit,
+                               wal.CMD_DROP_REPLICA, entry_keymax, target)
+        if entry_keymax in self._replica_map:
+            prim, tg = self._replica_map[entry_keymax]
+            tg = set() if target < 0 else set(tg) - {int(target)}
+            if tg:
+                self._replica_map[entry_keymax] = (prim, tg)
+            else:
+                del self._replica_map[entry_keymax]
+            self.replica_epoch += 1
+        return ok
+
+    def replica_sets(self):
+        """Same contract as ``Cluster.replica_sets`` (the two backends
+        must expose one routing view to the client API)."""
+        out = {}
+        stale = []
+        states = self.states
+        for kmax, (prim, tg) in self._replica_map.items():
+            reg = states[prim].registry
+            size = int(np.asarray(reg.size))
+            kmaxes = np.asarray(reg.keymax)[:size]
+            at = np.nonzero(kmaxes == kmax)[0]
+            owned = False
+            if at.size:
+                sh = int(np.asarray(reg.subhead)[at[0]])
+                owned = ((sh & refs.SID_MASK) >> refs.IDX_BITS) == prim
+            if not owned:
+                stale.append(kmax)
+                continue
+            kmin = int(np.asarray(reg.keymin)[at[0]])
+            out[int(kmax)] = (kmin, int(prim), sorted(tg))
+        for kmax in stale:
+            del self._replica_map[kmax]
+            self.replica_epoch += 1
+        return out
 
     # ------------------------------------------------------------ debugging
     def all_keys(self) -> List[int]:

@@ -16,9 +16,22 @@ reproduces that contract over any ``Backend``:
     round engine: every in-flight op occupies at most one message per
     round, so capping in-flight ops leaves outbox headroom for move
     replicates and registry broadcasts.
-  * **Ordering.** At most one op per key is in flight at a time; same-key
-    ops are admitted in submission order (ops on different keys commute in
-    a set, so this is exactly the per-key FIFO linearizability needs).
+  * **Ordering.** At most one *mutation* per key is in flight at a time,
+    and a mutation waits for every in-flight op on its key; FINDs on the
+    same key may fly concurrently (reads commute when no write separates
+    them, and any separating write still queued keeps later same-key ops
+    behind it via the skip set). Same-key ops are admitted in submission
+    order — exactly the per-key discipline linearizability needs, relaxed
+    only where commutativity makes the relaxation unobservable. Without
+    the relaxation a Zipfian read-mostly workload would serialize its hot
+    keys one FIND per round, which is the workload replication exists to
+    spread (DESIGN.md §15).
+  * **Replica routing.** When replication is on, the client learns replica
+    sets from the backend (``replica_sets()``, re-pulled whenever
+    ``replica_epoch`` moves) and spreads FINDs round-robin over
+    [primary] + replicas; mutations always go to the primary. A stale or
+    expired replica is safe: the serving gate on the replica shard simply
+    does not fire and the op delegates home like any mis-routed op.
   * **Balancing.** ``pump()`` periodically runs a pluggable balance policy
     (``core.balancer.Balancer`` is the paper's §7.1 policy) over the
     backend's balance surface.
@@ -98,11 +111,19 @@ class DiLiClient:
                                 else self._auto_inflight())
         self._queue: deque = deque()                 # unadmitted OpFutures
         self._inflight: Dict[int, OpFuture] = {}     # op_id -> future
-        self._busy_keys: Set[int] = set()            # keys with op in flight
+        self._busy_mut: Set[int] = set()             # keys with mutation out
+        self._find_out: Dict[int, int] = {}          # key -> in-flight FINDs
         self._cache = RegistryCache(backend.registry_entries(self.home_shard))
         self._refresh_from: Optional[int] = None     # pending cache refresh
         self._rounds = 0
         self.wrong_routes = 0                        # completions off-route
+        # replica routing (§15): {keymax: (keymin, primary, [replicas])}
+        # plus the sorted keymax index for range lookup; re-pulled whenever
+        # the backend's replica_epoch moves.
+        self._replica_sets: Dict[int, Tuple[int, int, List[int]]] = {}
+        self._replica_maxs: List[int] = []
+        self._seen_replica_epoch = getattr(backend, "replica_epoch", 0)
+        self._rr = 0                                 # read spread counter
 
     def _auto_inflight(self) -> int:
         """Pacing budget: each in-flight op contributes at most one outbox
@@ -127,6 +148,12 @@ class DiLiClient:
         n_live = (len(mb.routable) if mb is not None
                   else self.cfg.num_shards)
         bg_budget = self.cfg.bg_slots * (2 * self.cfg.move_batch + 2)
+        if getattr(self.cfg, "replication", False):
+            # publication reserve (§15): each replication session can put
+            # ``replica_batch`` delta rows + an INSTALL/DROP on the wire
+            # in one round
+            bg_budget += self.cfg.replica_sessions * (
+                self.cfg.replica_batch + 2)
         budget = max(1, self.cfg.mailbox_cap - bg_budget - n_live - 4)
         if getattr(self.backend, "net", None) is not None:
             # Lossy-wire headroom (DESIGN.md §11): the transport can
@@ -204,6 +231,11 @@ class DiLiClient:
                 self._refresh_from = self.home_shard
         if self._refresh_from is not None and self.route_cache:
             self.refresh_route_cache(self._refresh_from)
+        rep_epoch = getattr(self.backend, "replica_epoch", 0)
+        if rep_epoch != self._seen_replica_epoch:
+            self._seen_replica_epoch = rep_epoch
+            self._replica_sets = dict(self.backend.replica_sets())
+            self._replica_maxs = sorted(self._replica_sets)
         self._admit()
         ndone = 0
         for op_id, val, src in self.backend.step():
@@ -215,11 +247,21 @@ class DiLiClient:
                 continue
             fut._resolve(val, src)
             fut.op_id = None
-            self._busy_keys.discard(fut.key)
+            if fut.kind == OP_FIND:
+                left = self._find_out.get(fut.key, 1) - 1
+                if left > 0:
+                    self._find_out[fut.key] = left
+                else:
+                    self._find_out.pop(fut.key, None)
+            else:
+                self._busy_mut.discard(fut.key)
             ndone += 1
-            if src != fut.shard:
+            if src != fut.shard and not getattr(fut, "via_replica", False):
                 # wrong-route reply: the executing shard's replica covers
-                # this key freshest — refresh from it next pump
+                # this key freshest — refresh from it next pump. FINDs
+                # deliberately aimed at read replicas (or bounced home by
+                # an expired one) are not routing errors and don't
+                # trigger refresh churn.
                 self.wrong_routes += 1
                 self._refresh_from = src
         self._rounds += 1
@@ -264,6 +306,25 @@ class DiLiClient:
                     return owner
         return self.home_shard
 
+    def route_find(self, key: int) -> Tuple[int, bool]:
+        """Route for a FIND: ``(shard, via_replica)``. When ``key`` falls
+        in a replicated range, reads spread round-robin over the primary
+        and its replicas; everything else (and all mutations) uses
+        ``route``."""
+        if self._replica_maxs:
+            i = bisect_left(self._replica_maxs, key)
+            if i < len(self._replica_maxs):
+                kmax = self._replica_maxs[i]
+                kmin, prim, reps = self._replica_sets[kmax]
+                if kmin < key <= kmax and reps:
+                    mb = getattr(self.backend, "membership", None)
+                    choices = [prim] + [r for r in reps
+                                        if mb is None or mb.is_routable(r)]
+                    pick = choices[self._rr % len(choices)]
+                    self._rr += 1
+                    return pick, pick != prim
+        return self.route(key), False
+
     def refresh_route_cache(self, shard: Optional[int] = None) -> None:
         """Re-seed the route cache from a server's registry replica."""
         src = self.home_shard if shard is None else int(shard)
@@ -272,8 +333,10 @@ class DiLiClient:
 
     def _admit(self) -> None:
         """Admit queued ops up to the pacing budget, preserving per-key
-        submission order (a key with an op in flight, or with an earlier op
-        deferred this pass, keeps its later ops queued)."""
+        submission order (a key with an earlier op deferred this pass
+        keeps its later ops queued). Mutations wait for *every* in-flight
+        op on their key; FINDs only wait for in-flight mutations — any
+        number of same-key FINDs may fly at once (see module docstring)."""
         if not self._queue:
             return
         budget = self.max_inflight - len(self._inflight)
@@ -289,19 +352,29 @@ class DiLiClient:
                 kept.extend(islice(self._queue, qi, None))
                 break
             key = fut.key
-            if key in self._busy_keys or key in skip:
+            is_find = fut.kind == OP_FIND
+            blocked = (key in self._busy_mut or key in skip
+                       or (not is_find and self._find_out.get(key, 0)))
+            if blocked:
                 kept.append(fut)
                 skip.add(key)
                 continue
-            shard = self.route(key)
+            if is_find:
+                shard, via_rep = self.route_find(key)
+            else:
+                shard, via_rep = self.route(key), False
             lane = admit.setdefault(shard, [])
             if len(lane) >= per_round:
                 kept.append(fut)
                 skip.add(key)
                 continue
             fut.shard = shard
+            fut.via_replica = via_rep
             lane.append(fut)
-            self._busy_keys.add(key)
+            if is_find:
+                self._find_out[key] = self._find_out.get(key, 0) + 1
+            else:
+                self._busy_mut.add(key)
             budget -= 1
         self._queue = kept
         for shard, futs in admit.items():

@@ -19,7 +19,7 @@ class OpFuture:
     """One pending DiLi operation."""
 
     __slots__ = ("kind", "key", "value", "shard", "src", "op_id",
-                 "_client", "_result")
+                 "via_replica", "_client", "_result")
 
     def __init__(self, client, kind: int, key: int, value: int = 0):
         self._client = client
@@ -29,6 +29,7 @@ class OpFuture:
         self.shard: Optional[int] = None    # predicted owner at admission
         self.src: Optional[int] = None      # shard that executed the op
         self.op_id: Optional[int] = None    # backend op id while in flight
+        self.via_replica = False            # FIND aimed at a read replica
         self._result: Optional[int] = None
 
     # ------------------------------------------------------------- protocol

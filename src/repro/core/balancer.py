@@ -56,13 +56,36 @@ class BalancePolicy(Protocol):
 class Balancer:
     def __init__(self, cluster, *, split_threshold: Optional[int] = None,
                  move_headroom: float = 1.10, merge_threshold: int = 0,
-                 registry_headroom: int = 4, rng=None):
+                 registry_headroom: int = 4, rng=None,
+                 rate_weight: float = 1.0, hot_rate: float = 8.0,
+                 cold_rate: float = 2.0, hot_share: float = 0.0,
+                 replica_fanout: int = 1):
         self.cl = cluster
         self.split_threshold = (split_threshold if split_threshold is not None
                                 else cluster.cfg.split_threshold)
         self.move_headroom = move_headroom
         self.merge_threshold = merge_threshold
         self.registry_headroom = registry_headroom
+        # Load model (§15): L(e) = size + rate_weight * op_rate_ewma(e).
+        # The op-rate term is the primary signal under traffic; it decays
+        # to zero at rest, where the key count is the tiebreak — so a
+        # settled cluster balances exactly as the key-calibrated policy
+        # always did.
+        self.rate_weight = float(rate_weight)
+        # Hot/cold hysteresis for read replication: an entry whose op-rate
+        # EWMA crosses ``hot_rate`` gets replicated onto the
+        # ``replica_fanout`` least-loaded other shards; replicas are
+        # dropped only once the rate falls below ``cold_rate`` (< hot) —
+        # the band keeps a sublist hovering near the threshold from
+        # flapping replicate/drop every pass.
+        self.hot_rate = float(hot_rate)
+        self.cold_rate = float(cold_rate)
+        # Absolute rate alone can't tell skew from volume: a driven
+        # shard's hottest entry pins near the admission rate at *any*
+        # skew. ``hot_share`` additionally requires the entry to carry
+        # that fraction of the cluster-wide rate (0 disables the gate).
+        self.hot_share = float(hot_share)
+        self.replica_fanout = int(replica_fanout)
         # Move-target tie-break stream. None keeps the historical
         # lowest-index tie-break; passing the backend's ``balancer_rng``
         # (a child of the run's root SeedSequence) makes randomized
@@ -77,7 +100,8 @@ class Balancer:
     def step(self) -> dict:
         """One balancing pass; returns counts of issued commands."""
         cl = self.cl
-        issued = {"split": 0, "move": 0, "merge": 0, "evacuate": 0}
+        issued = {"split": 0, "move": 0, "merge": 0, "evacuate": 0,
+                  "replicate": 0, "drop": 0}
         # membership view (DESIGN.md §13): sources of load are every
         # routable shard, valid destinations for new moves are
         # active+joining, and draining shards get force-evacuated below.
@@ -92,7 +116,53 @@ class Balancer:
             targets = list(mb.targets)
             draining = list(mb.draining)
         owned = {s: self._owned(s) for s in routable}
-        loads = {s: sum(e["size"] for e in owned[s]) for s in routable}
+        # per-entry effective load: op-rate EWMA (keyed by keymax, pulled
+        # off the backend) weighted on top of the key count
+        rates = getattr(cl, "op_rate_ewma", None) or {}
+
+        # read replication (§15): the current replica map, and whether the
+        # backend supports replication at all (raw duck-typed surfaces
+        # without the command are balanced exactly as before)
+        rep_on = (getattr(cl.cfg, "replication", False)
+                  and hasattr(cl, "replica_sets"))
+        repsets = cl.replica_sets() if rep_on else {}
+
+        def eload(e):
+            r = rates.get(e["keymax"], 0.0)
+            rs = repsets.get(e["keymax"])
+            if rs:
+                # the entry rate is cluster-wide (replica shards bump the
+                # same global registry entry when they serve), but the
+                # client spreads reads round-robin over primary+replicas —
+                # charge the owner only its share, or the primary looks
+                # crushed by load it isn't serving and the balancer churns
+                # moves it can never satisfy (the hot entry is pinned).
+                # Serving shards are charged via rep_rate_ewma below.
+                r /= 1 + len(rs[2])
+            return e["size"] + self.rate_weight * r
+
+        def shed_replicas(s, kmax):
+            """True when ``kmax`` is replicated: its replicas are told to
+            drop and the caller must skip restructuring it this pass —
+            Move/Split/Merge on a replicated entry first retires the
+            replicas (the primary's session self-audit is only the safety
+            net for races, not the clean path)."""
+            if kmax not in repsets:
+                return False
+            if cl.drop_replica(s, kmax):
+                issued["drop"] += 1
+            del repsets[kmax]
+            return True
+
+        loads = {s: sum(eload(e) for e in owned[s]) for s in routable}
+        # replica service is real load on the serving shard but invisible
+        # to the registry-keyed entry rates (the entry lives on the
+        # primary): fold each shard's replica-served FIND EWMA in, or the
+        # model reads serving replicas as idle and churns moves (and
+        # `shed_replicas` teardowns) against phantom imbalance.
+        rep_rates = getattr(cl, "rep_rate_ewma", None) or {}
+        for s in routable:
+            loads[s] += self.rate_weight * rep_rates.get(s, 0.0)
         total = sum(loads.values())
         # the mean the policy steers toward is over the shards that will
         # still hold data after the drains complete
@@ -115,8 +185,8 @@ class Balancer:
             for key, tgt in B.active_moves(bgs[s]):
                 e = next((x for x in owned[s] if x["keymax"] == key), None)
                 if e is not None and tgt in loads and tgt != s:
-                    loads[s] -= e["size"]
-                    loads[tgt] += e["size"]
+                    loads[s] -= eload(e)
+                    loads[tgt] += eload(e)
 
         # registry budget for *new* splits this pass. The registry is
         # global (every split adds an entry on every replica), and a split
@@ -153,6 +223,8 @@ class Balancer:
                     break
                 if e["keymax"] in claimed[s] or e["switched"]:
                     continue
+                if shed_replicas(s, e["keymax"]):
+                    continue
                 tgt = pick_target(s)
                 if tgt is None:
                     break
@@ -160,8 +232,8 @@ class Balancer:
                     issued["evacuate"] += 1
                     free[s] -= 1
                     claimed[s].add(e["keymax"])
-                    loads[s] -= e["size"]
-                    loads[tgt] += e["size"]
+                    loads[s] -= eload(e)
+                    loads[tgt] += eload(e)
 
         for s in targets:
             entries = owned[s]
@@ -177,6 +249,8 @@ class Balancer:
             for e in big:
                 if free[s] <= 0 or reg_room <= 0:
                     break
+                if shed_replicas(s, e["keymax"]):
+                    continue
                 mid = cl.middle_item(s, e["head_idx"])
                 if mid is None:
                     continue
@@ -203,16 +277,21 @@ class Balancer:
                 # if it strictly improves the pairwise imbalance (else a
                 # lone big sublist ping-pongs between shards forever)
                 gap = (loads[s] - loads[tgt]) / 2
-                e = min(cands, key=lambda x: abs(x["size"] - gap))
-                if loads[tgt] + e["size"] >= loads[s]:
+                e = min(cands, key=lambda x: abs(eload(x) - gap))
+                if loads[tgt] + eload(e) >= loads[s]:
                     break
+                if shed_replicas(s, e["keymax"]):
+                    # replicas retire first; the move is re-evaluated on a
+                    # later pass once the entry is replica-free
+                    entries = [x for x in entries if x is not e]
+                    continue
                 if not cl.move(s, e["keymax"], tgt):
                     break
                 issued["move"] += 1
                 free[s] -= 1
                 claimed[s].add(e["keymax"])
-                loads[s] -= e["size"]
-                loads[tgt] += e["size"]
+                loads[s] -= eload(e)
+                loads[tgt] += eload(e)
                 entries = [x for x in entries if x is not e]
 
             # 3) merge adjacent runts on the same shard
@@ -224,11 +303,45 @@ class Balancer:
                     if (a["keymax"] == b["keymin"]
                             and a["size"] + b["size"] < self.merge_threshold
                             and unclaimed(a) and unclaimed(b)):
+                        if (shed_replicas(s, a["keymax"])
+                                or shed_replicas(s, b["keymax"])):
+                            continue
                         if cl.merge(s, a["keymax"], b["keymax"]):
                             issued["merge"] += 1
                             free[s] -= 1
                             claimed[s].add(a["keymax"])
                             claimed[s].add(b["keymax"])
+
+            # 4) hot-sublist read replication (§15): entries whose op-rate
+            # EWMA crossed the hot threshold get read replicas on the
+            # least-loaded other shards; entries that cooled below the
+            # (lower) cold threshold shed theirs. Claimed/switched entries
+            # are skipped — a sublist mid-restructure is about to change
+            # hands, and replicate-then-drop within one pass is churn.
+            if rep_on and len(targets) > 1:
+                total_rate = sum(rates.values())
+                for e in entries:
+                    kmax = e["keymax"]
+                    if not unclaimed(e):
+                        continue
+                    r = rates.get(kmax, 0.0)
+                    share = r / total_rate if total_rate > 0 else 0.0
+                    have = set(repsets.get(kmax, (0, 0, []))[2])
+                    if r >= self.hot_rate and share >= self.hot_share:
+                        cands = sorted((d for d in targets
+                                        if d != s and d not in have),
+                                       key=lambda d: loads[d])
+                        want = self.replica_fanout - len(have)
+                        for tgt in cands[:max(want, 0)]:
+                            if cl.replicate(s, kmax, tgt):
+                                issued["replicate"] += 1
+                                have.add(tgt)
+                            else:
+                                break   # session table full: stop asking
+                    elif have and r <= self.cold_rate:
+                        if cl.drop_replica(s, kmax):
+                            issued["drop"] += 1
+                        repsets.pop(kmax, None)
         return issued
 
 
@@ -260,24 +373,32 @@ class AutoscalePolicy:
                  join_headroom: float = 1.25, retire_headroom: float = 0.45,
                  min_shards: int = 1, max_shards: Optional[int] = None,
                  cooldown: int = 3, balancer: Optional[Balancer] = None,
-                 rng=None):
+                 rng=None, rate_weight: float = 1.0):
         if not hasattr(backend, "membership"):
             raise ValueError(
                 "AutoscalePolicy needs a membership-aware backend "
                 "(Cluster / LocalBackend / ShardMapBackend)")
         self.cl = backend
         self.balancer = (balancer if balancer is not None
-                         else Balancer(backend, rng=rng))
+                         else Balancer(backend, rng=rng,
+                                       rate_weight=rate_weight))
         self.target_load = int(target_load)
         self.join_headroom = float(join_headroom)
         self.retire_headroom = float(retire_headroom)
         self.min_shards = int(min_shards)
         self.max_shards = max_shards
         self.cooldown = int(cooldown)
+        # same load model as the inner balancer: op-rate EWMA weighted on
+        # top of the key count (rate decays to zero at rest, where the
+        # sizing decision falls back to pure key counts)
+        self.rate_weight = float(rate_weight)
         self._cool = 0
 
-    def _load(self, s: int) -> int:
-        return sum(e["size"] for e in self.cl.sublists(s)
+    def _load(self, s: int) -> float:
+        rates = getattr(self.cl, "op_rate_ewma", None) or {}
+        return sum(e["size"] + self.rate_weight
+                   * rates.get(e["keymax"], 0.0)
+                   for e in self.cl.sublists(s)
                    if e["owner"] == s and e["size"] is not None
                    and not e["switched"])
 

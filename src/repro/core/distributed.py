@@ -75,6 +75,10 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
       5  MoveItems replayed by the batched scatter splice this round
       6  fast-path lanes answered via the packed-block kernel probe
          (DESIGN.md §12)
+      7  FINDs answered from a replica slot (DESIGN.md §15)
+
+    The trailing ``ent_hits`` output is int32[S, M]: per-entry op
+    attribution this round (the balancer's op-rate EWMA feed).
     """
     num = cfg.num_shards
     assert num == mesh.devices.size, (num, mesh.devices.size)
@@ -104,20 +108,22 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
             out.bg_active,
             out.move_hits,
             out.blk_hits,
+            out.rep_hits,
         ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),
                 jax.tree_util.tree_map(add1, out.bg),
                 inbox_next,
                 out.comp_slot[None], out.comp_val[None],
-                out.comp_src[None], stats[None])
+                out.comp_src[None], stats[None], out.ent_hits[None])
 
     pspec = P(axes)
 
     fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec),
-        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec),
+        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec,
+                   pspec),
         check_rep=False)
     return jax.jit(fn)
 
@@ -132,10 +138,11 @@ def make_dili_round_hostroute(mesh: Mesh, cfg: DiLiConfig):
         (states, bgs, outbox, comp_slot, comp_val, comp_src, stats)
 
     ``outbox`` is the raw [S, mailbox_cap, FIELDS] per-shard outbox;
-    ``stats`` is int32[6] per shard: out_count, bg_active, move_hits,
-    fast_hits, mut_hits, blk_hits. Delegation stats (hops) are computed
-    host-side from the outbox rows themselves — the host sees every frame
-    on this path.
+    ``stats`` is int32[7] per shard: out_count, bg_active, move_hits,
+    fast_hits, mut_hits, blk_hits, rep_hits; the trailing ``ent_hits``
+    output is int32[S, M] per-entry op attribution. Delegation stats
+    (hops) are computed host-side from the outbox rows themselves — the
+    host sees every frame on this path.
     """
     num = cfg.num_shards
     assert num == mesh.devices.size, (num, mesh.devices.size)
@@ -153,19 +160,21 @@ def make_dili_round_hostroute(mesh: Mesh, cfg: DiLiConfig):
             out.fast_hits,
             out.mut_hits,
             out.blk_hits,
+            out.rep_hits,
         ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),
                 jax.tree_util.tree_map(add1, out.bg),
                 out.outbox[None],
                 out.comp_slot[None], out.comp_val[None],
-                out.comp_src[None], stats[None])
+                out.comp_src[None], stats[None], out.ent_hits[None])
 
     pspec = P(axes)
     fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec),
-        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec),
+        out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec,
+                   pspec),
         check_rep=False)
     return jax.jit(fn)
 

@@ -31,11 +31,12 @@ import numpy as np
 
 from .. import bg as B
 from .. import messages as M
+from .. import replica as R
 from ..shard import shard_round
 from ..types import DiLiConfig
 from .snapshot import ShardSnapshots
-from .wal import (CMD_MERGE, CMD_MOVE, CMD_SPLIT, KIND_COMMAND,
-                  KIND_SUBMIT, WriteAheadLog)
+from .wal import (CMD_DROP_REPLICA, CMD_MERGE, CMD_MOVE, CMD_REPLICATE,
+                  CMD_SPLIT, KIND_COMMAND, KIND_SUBMIT, WriteAheadLog)
 
 _LANE = "lane/"
 
@@ -95,9 +96,17 @@ def recover_shard(cfg: DiLiConfig, shard: int, wal: WriteAheadLog,
             # re-queue the host-side balancer command exactly where the
             # live run did (stream order = queue order)
             args = [int(a) for a in np.asarray(rec["args"]).ravel()]
-            queue = {CMD_SPLIT: B.queue_split, CMD_MOVE: B.queue_move,
-                     CMD_MERGE: B.queue_merge}[int(rec["cmd"])]
-            bg, ok = queue(bg, *args)
+            cmd = int(rec["cmd"])
+            if cmd in (CMD_REPLICATE, CMD_DROP_REPLICA):
+                # replication commands edit ShardState.rep, not the
+                # BgTable — same journal, different substrate (§15)
+                fn = (R.queue_replicate_jit if cmd == CMD_REPLICATE
+                      else R.queue_drop_replica_jit)
+                state, ok = fn(state, cfg, *args)
+            else:
+                queue = {CMD_SPLIT: B.queue_split, CMD_MOVE: B.queue_move,
+                         CMD_MERGE: B.queue_merge}[cmd]
+                bg, ok = queue(bg, *args)
             if bool(np.asarray(ok)) != bool(int(rec["ok"])):
                 raise RecoveryError(
                     f"shard {shard} round {rnd}: replayed command "

@@ -54,6 +54,9 @@ KIND_COMMAND = 2
 CMD_SPLIT = 0
 CMD_MOVE = 1
 CMD_MERGE = 2
+CMD_REPLICATE = 3       # host replicate(entry_keymax, target) — §15;
+                        # replays against ShardState.rep, not the BgTable
+CMD_DROP_REPLICA = 4    # host drop_replica(entry_keymax, target)
 
 
 def _encode(record: Dict[str, np.ndarray]) -> bytes:
@@ -75,12 +78,27 @@ class WriteAheadLog:
         self.path = path
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._fh = open(path, "ab")
+        self.fsyncs = 0
 
     # ---------------------------------------------------------------- write
-    def append(self, record: Dict[str, np.ndarray]) -> None:
+    def append(self, record: Dict[str, np.ndarray],
+               sync: bool = True) -> None:
+        """Append a record; with ``sync`` (the default) it is flushed and
+        fsync'd before returning. ``sync=False`` leaves the record in the
+        OS buffer for a later ``sync()`` — the group-commit path
+        (``DurabilityConfig.group_commit_rounds``): durability of the
+        batched records is deferred to the batch boundary, where the
+        fsync-before-ack discipline is re-established."""
         self._fh.write(_encode(record))
+        if sync:
+            self.sync()
+
+    def sync(self) -> None:
+        """Flush + fsync everything appended so far (a group-commit
+        barrier)."""
         self._fh.flush()
         os.fsync(self._fh.fileno())
+        self.fsyncs += 1
 
     # ----------------------------------------------------------------- read
     def records(self) -> Iterator[Dict[str, np.ndarray]]:

@@ -51,7 +51,24 @@ MSG_EPOCH = 18          # membership-epoch announcement (DESIGN.md §13):
                         # F_KEY = epoch, F_X1 = live-peer bitmask. The
                         # handler merges monotonically (max on epoch), so
                         # duplicated/reordered deliveries are idempotent.
-N_KINDS = 19            # dispatch-table size (shard_round lax.switch)
+MSG_REPLICA_DELTA = 19  # read-replication image delta (DESIGN.md §15):
+                        # F_KEY = entry keymax (replica-slot identity),
+                        # F_X1 = image position, F_X3 = key at that
+                        # position (ST_KEY clears it), F_X2 = publication
+                        # version. Rewrites one cell of the replica image
+                        # in place, so re-application is idempotent.
+MSG_REPLICA_INSTALL = 20  # publication commit / lease grant: sent after a
+                        # publication's deltas on the same FIFO lane, so
+                        # the image it commits is fully applied on
+                        # arrival. F_KEY = keymax, F_X1 = keymin,
+                        # F_X2 = version, F_X3 = live key count. Resets
+                        # the replica's staleness lease (ttl). A
+                        # duplicate re-commits the same image — benign.
+MSG_REPLICA_DROP = 21   # primary retires a replica: F_KEY = keymax.
+                        # Frees the matching slot; a duplicate (or a drop
+                        # for a slot never installed) finds no slot and
+                        # is a no-op.
+N_KINDS = 22            # dispatch-table size (shard_round lax.switch)
 
 # ---------------------------------------------------------------- layout
 # field meanings are per-kind; see docstrings at the emit sites.
@@ -111,6 +128,22 @@ def push(outbox, count, row, do: bool | jnp.ndarray = True):
     pos = jnp.clip(count, 0, cap - 1)
     new = jnp.where(do & (count < cap), outbox.at[pos].set(row), outbox)
     return new, count + do.astype(jnp.int32)
+
+
+def push_many(outbox, count, rows, do):
+    """Functionally append every ``rows[i]`` where ``do[i]``, in order —
+    one scatter instead of ``len(rows)`` chained ``push`` calls (the
+    replication publisher emits hundreds of candidate rows per round and
+    per-row pushes dominate the round's op count). Order is preserved, so
+    the per-lane FIFO contract holds exactly as with sequential ``push``;
+    ``count`` counts every attempted push and rows past the cap are
+    dropped, leaving the final count as the overflow signal."""
+    cap = outbox.shape[0]
+    do = jnp.asarray(do)
+    idx = count + jnp.cumsum(do.astype(jnp.int32)) - 1
+    at = jnp.where(do & (idx < cap), idx, cap)
+    outbox = outbox.at[at].set(rows, mode="drop")
+    return outbox, count + jnp.sum(do.astype(jnp.int32))
 
 
 def make_row(kind, dst, src, *, a=0, key=0, ref1=0, sid=0, ts=0,

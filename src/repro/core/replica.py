@@ -1,0 +1,431 @@
+"""Hot-sublist read replication (DESIGN.md §15).
+
+Under Zipfian skew one hot sublist caps cluster throughput no matter how
+well the balancer spreads *keys* — moving the hot entry just moves the
+bottleneck. This module promotes the Move protocol's "temporary replica
+of a sublist" into a first-class read path: the primary of a hot entry
+streams a packed-block image of the sublist (the ``core.blocks`` layout:
+one sorted ``int32[C]`` row of live keys) to replica shards, which then
+answer FINDs in the entry's range locally. Inserts/removes still go to
+the primary; replicas are bounded-staleness caches in the spirit of
+distributionally linearizable relaxations.
+
+Protocol (all rows cross the reliable transport, so delivery is
+exactly-once in-order per (src, dst) lane):
+
+  * A host ``replicate`` command claims a primary-side *session* keyed by
+    the entry's keymax and poisons its published mirror, forcing the
+    first publication to stream the full image.
+  * Each round ``replica_step`` advances every session: it (re)walks the
+    chain when the session has never committed, or on the lease-renewal
+    cadence once the shard saw traffic or mutations (a cluster at rest
+    stays quiescent, and a write-heavy primary pays one walk per
+    ``replica_refresh_rounds``, not one per mutated round). Positions where the
+    fresh image differs from the published mirror become REPLICA_DELTA
+    rows, streamed ``replica_batch`` per round; when the diff drains, a
+    REPLICA_INSTALL commit follows *on the same FIFO lane* — by the time
+    it arrives, every delta before it has been applied, so the commit
+    atomically (from the replica's view) publishes the new version and
+    renews the staleness lease. A renewal with no content change is a
+    single INSTALL row.
+  * The replica applies deltas in place. In-place application is safe
+    because FIND is a single-key probe: each cell is either the old or
+    the new published value, both within the staleness bound.
+  * The lease is hard: a slot serves only while ``ttl > 0``; ttl is set
+    to ``replica_staleness_rounds`` by each commit and decremented every
+    round. An un-refreshed replica therefore self-invalidates and
+    FINDs fall through to normal delegation — the primary is always the
+    correct fallback.
+  * Sessions self-audit: if the entry is no longer owned, live and
+    non-moving at the primary (a Move or Merge took it), the session
+    drops its replicas (REPLICA_DROP) and frees itself. The balancer
+    additionally drops replicas *before* restructuring a replicated
+    entry (claim-aware lifecycle), so this is a safety net, not the
+    normal path.
+
+Replication state lives in ``ShardState`` (``rep`` sessions on the
+primary, ``rslots`` images on the replica), so WAL round replay and
+snapshots cover it with no extra machinery; the host ``replicate`` /
+``drop_replica`` commands are journaled like balancer commands and
+replay byte-identically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import messages as M
+from . import refs
+from . import registry as REG
+from .types import (DiLiConfig, OP_FIND, RES_FALSE, RES_TRUE, SH_KEY,
+                    ST_KEY, ShardState)
+
+
+# ------------------------------------------------------------- commands
+
+def queue_replicate(state: ShardState, cfg: DiLiConfig, keymax, target):
+    """Host command: start (or widen) read replication of the owned entry
+    with upper bound ``keymax`` onto shard ``target``. Returns
+    ``(state, ok)``; rejects an unknown/foreign entry, a self-target or
+    session exhaustion. Pure, so WAL recovery can replay it literally.
+    """
+    keymax = jnp.asarray(keymax, jnp.int32)
+    target = jnp.asarray(target, jnp.int32)
+    rep = state.rep
+    s = rep.keymax.shape[0]
+    e = REG.get_by_key(state.registry, keymax)
+    ec = jnp.clip(e, 0, state.registry.keymin.shape[0] - 1)
+    owner = refs.ref_sid(state.registry.subhead[ec]).astype(jnp.int32)
+    me = refs.ref_sid(state.registry.subhead[ec])  # owner == issuing shard
+    valid = (e >= 0) & (state.registry.keymax[ec] == keymax) & \
+        (target >= 0) & (target < cfg.num_shards) & (target != owner)
+
+    have = (rep.keymax == keymax)
+    free = (rep.keymax == SH_KEY)
+    j = jnp.where(jnp.any(have), jnp.argmax(have), jnp.argmax(free))
+    ok = valid & (jnp.any(have) | jnp.any(free))
+    bit = jnp.where(ok, jnp.int32(1) << target, 0)
+    at = jnp.where(ok, j, s)                      # s drops the scatter
+    # a new target must receive the full image: poison the published
+    # mirror (SH_KEY differs from every real image cell and every ST_KEY
+    # pad) so the next publication streams all C positions
+    rep = rep._replace(
+        keymax=rep.keymax.at[at].set(keymax, mode="drop"),
+        targets=rep.targets.at[at].set(rep.targets[j] | bit, mode="drop"),
+        version=rep.version.at[at].set(
+            jnp.where(jnp.any(have), rep.version[j], 0), mode="drop"),
+        cursor=rep.cursor.at[at].set(-1, mode="drop"),
+        age=rep.age.at[at].set(0, mode="drop"),
+        keys=rep.keys.at[at].set(jnp.full((cfg.block_cap,), SH_KEY,
+                                          jnp.int32), mode="drop"),
+        diff=rep.diff.at[at].set(False, mode="drop"),
+    )
+    del me
+    return state._replace(rep=rep), ok
+
+
+def queue_drop_replica(state: ShardState, cfg: DiLiConfig, keymax,
+                       target=-1):
+    """Host command: retire replicas of ``keymax`` on ``target`` (or all
+    targets when ``target`` is -1). The session flushes REPLICA_DROP rows
+    next round and frees itself once no targets remain."""
+    keymax = jnp.asarray(keymax, jnp.int32)
+    target = jnp.asarray(target, jnp.int32)
+    rep = state.rep
+    s = rep.keymax.shape[0]
+    have = (rep.keymax == keymax)
+    j = jnp.argmax(have)
+    ok = jnp.any(have)
+    bits = jnp.where(target < 0, rep.targets[j],
+                     rep.targets[j] & (jnp.int32(1) << jnp.clip(target, 0, 30)))
+    at = jnp.where(ok, j, s)
+    rep = rep._replace(
+        targets=rep.targets.at[at].set(rep.targets[j] & ~bits, mode="drop"),
+        drops=rep.drops.at[at].set(rep.drops[j] | bits, mode="drop"),
+        cursor=rep.cursor.at[at].set(-1, mode="drop"),
+        diff=rep.diff.at[at].set(False, mode="drop"),
+    )
+    return state._replace(rep=rep), ok & (bits != 0)
+
+
+# Eagerly dispatched, each queue command costs tens of ms of per-op
+# overhead on the balancer's path — enough to dominate a benchmark round.
+# cfg is a NamedTuple of scalars, so it jits as a static argument; keymax
+# and target stay dynamic so one compilation covers every entry/shard.
+queue_replicate_jit = jax.jit(queue_replicate, static_argnums=(1,))
+queue_drop_replica_jit = jax.jit(queue_drop_replica, static_argnums=(1,))
+
+
+def warm_commands(state: ShardState, cfg: DiLiConfig) -> None:
+    """Pre-compile the jitted queue commands (no-op state probe), so the
+    first real ``replicate`` mid-run doesn't pay the trace+compile."""
+    if not cfg.replication:
+        return
+    jax.block_until_ready(queue_replicate_jit(state, cfg, 0, 0))
+    jax.block_until_ready(queue_drop_replica_jit(state, cfg, 0, -1))
+
+
+# ---------------------------------------------------------- serve path
+
+def replica_serve(state: ShardState, rows, me, cfg: DiLiConfig):
+    """Vectorized replica read pre-pass: answer fresh local FINDs whose
+    key falls in a serving replica slot's range. Returns ``(elig, res)``.
+
+    Serving gate: slot occupied, committed (version >= 0), lease alive
+    (ttl > 0), key in (keymin, keymax], and the key NOT covered by a
+    locally-owned registry entry (if ownership moved here, the chain is
+    the truth and the slot is a stale leftover pending its DROP).
+    Delegated rows (sid != me) are never replica-served: their origin
+    already made a routing decision and expects an authoritative answer.
+    """
+    rs = state.rslots
+    me = jnp.asarray(me, jnp.int32)
+    kind = rows[:, M.F_KIND]
+    key = rows[:, M.F_KEY]
+    cand = (kind == M.MSG_OP) & (rows[:, M.F_A] == OP_FIND) & \
+        (rows[:, M.F_SID] == me)
+
+    serving = (rs.keymax != SH_KEY) & (rs.version >= 0) & (rs.ttl > 0)
+    inrange = (key[:, None] > rs.keymin[None, :]) & \
+        (key[:, None] <= rs.keymax[None, :]) & serving[None, :]
+    hit = jnp.any(inrange, axis=1)
+    j = jnp.argmax(inrange, axis=1)
+
+    reg = state.registry
+    e = REG.get_by_key(reg, key)
+    ec = jnp.clip(e, 0, reg.keymin.shape[0] - 1)
+    owned = (e >= 0) & (refs.ref_sid(reg.subhead[ec]) == me)
+
+    elig = cand & hit & ~owned
+    krow = rs.keys[j]                                  # [B, C]
+    pos = jax.vmap(lambda r, q: jnp.searchsorted(r, q, side="left"))(
+        krow, key).astype(jnp.int32)
+    found = krow[jnp.arange(rows.shape[0]),
+                 jnp.clip(pos, 0, krow.shape[1] - 1)] == key
+    res = jnp.where(found, RES_TRUE, RES_FALSE).astype(jnp.int32)
+    return elig, res
+
+
+# ------------------------------------------------------ replica handlers
+
+def h_replica_delta(state, bg, me, row, outbox, count, cfg: DiLiConfig):
+    """Apply one image-cell rewrite. Claims a free slot on first contact
+    (version -1: deltas arriving, not serving until the commit lands);
+    with no matching and no free slot the row is dropped — the replica
+    simply never serves and reads keep bouncing home."""
+    rs = state.rslots
+    r = rs.keymax.shape[0]
+    key = row[M.F_KEY]
+    have = rs.keymax == key
+    free = rs.keymax == SH_KEY
+    j = jnp.where(jnp.any(have), jnp.argmax(have), jnp.argmax(free))
+    ok = jnp.any(have) | jnp.any(free)
+    claim = ok & ~jnp.any(have)
+    at = jnp.where(ok, j, r)
+    # a reclaimed slot must not leak the previous tenant's image
+    keys_j = jnp.where(claim, jnp.full((rs.keys.shape[1],), ST_KEY,
+                                       jnp.int32), rs.keys[j])
+    pos = jnp.clip(row[M.F_X1], 0, rs.keys.shape[1] - 1)
+    keys_j = keys_j.at[pos].set(row[M.F_X3])
+    rs = rs._replace(
+        keymax=rs.keymax.at[at].set(key, mode="drop"),
+        keymin=rs.keymin.at[at].set(
+            jnp.where(claim, key, rs.keymin[j]), mode="drop"),
+        src=rs.src.at[at].set(row[M.F_SRC], mode="drop"),
+        version=rs.version.at[at].set(
+            jnp.where(claim, -1, rs.version[j]), mode="drop"),
+        ttl=rs.ttl.at[at].set(jnp.where(claim, 0, rs.ttl[j]), mode="drop"),
+        keys=rs.keys.at[at].set(keys_j, mode="drop"),
+    )
+    return state._replace(rslots=rs), bg, outbox, count
+
+
+def h_replica_install(state, bg, me, row, outbox, count, cfg: DiLiConfig):
+    """Commit a publication / renew the lease. Only an existing slot
+    commits: the initial publication's deltas travel the same FIFO lane
+    and created the slot, so a commit with no slot is a renewal that
+    outlived an eviction — committing an empty image would serve wrong
+    absences, so it is ignored."""
+    rs = state.rslots
+    r = rs.keymax.shape[0]
+    key = row[M.F_KEY]
+    have = rs.keymax == key
+    j = jnp.argmax(have)
+    ok = jnp.any(have)
+    at = jnp.where(ok, j, r)
+    rs = rs._replace(
+        keymin=rs.keymin.at[at].set(row[M.F_X1], mode="drop"),
+        src=rs.src.at[at].set(row[M.F_SRC], mode="drop"),
+        version=rs.version.at[at].set(row[M.F_X2], mode="drop"),
+        ttl=rs.ttl.at[at].set(
+            jnp.asarray(cfg.replica_staleness_rounds, jnp.int32),
+            mode="drop"),
+    )
+    return state._replace(rslots=rs), bg, outbox, count
+
+
+def h_replica_drop(state, bg, me, row, outbox, count, cfg: DiLiConfig):
+    """Free the slot the sending primary installed. Matches (keymax, src)
+    so a late drop from a previous primary cannot kill a successor's
+    fresh replica; a duplicate finds nothing and is a no-op."""
+    rs = state.rslots
+    r = rs.keymax.shape[0]
+    have = (rs.keymax == row[M.F_KEY]) & (rs.src == row[M.F_SRC])
+    j = jnp.argmax(have)
+    at = jnp.where(jnp.any(have), j, r)
+    rs = rs._replace(
+        keymax=rs.keymax.at[at].set(SH_KEY, mode="drop"),
+        keymin=rs.keymin.at[at].set(SH_KEY, mode="drop"),
+        src=rs.src.at[at].set(-1, mode="drop"),
+        version=rs.version.at[at].set(-1, mode="drop"),
+        ttl=rs.ttl.at[at].set(0, mode="drop"),
+        keys=rs.keys.at[at].set(jnp.full((rs.keys.shape[1],), ST_KEY,
+                                         jnp.int32), mode="drop"),
+    )
+    return state._replace(rslots=rs), bg, outbox, count
+
+
+# ------------------------------------------------------ publication step
+
+def replica_step(state: ShardState, me, mutated, traffic, outbox, count,
+                 cfg: DiLiConfig):
+    """Advance every primary-side publication session by one round and
+    tick the replica-side staleness leases. Runs after the serial loop
+    and bg step, so a cadence walk sees every mutation up to and
+    including this round's.
+
+    Emission budget per session per round: ``replica_batch`` deltas plus
+    one commit, each fanned to every target, plus owed DROP rows.
+    """
+    me_i = jnp.asarray(me, jnp.int32)
+    rep = state.rep
+    reg = state.registry
+    n_sess = rep.keymax.shape[0]
+    c = cfg.block_cap
+    nsh = cfg.num_shards
+
+    # --- replica-side lease tick (only occupied slots change at all;
+    # ttl saturates at 0, so a cluster at rest goes bit-static)
+    rs = state.rslots
+    occupied = rs.keymax != SH_KEY
+    rs = rs._replace(ttl=jnp.where(occupied, jnp.maximum(rs.ttl - 1, 0),
+                                   rs.ttl))
+    state = state._replace(rslots=rs)
+
+    active = rep.keymax != SH_KEY
+    if not bool(cfg.replication):
+        return state, outbox, count
+
+    # --- session entry audit: still owned, live, non-moving here?
+    e = REG.get_by_key(reg, rep.keymax)
+    ec = jnp.clip(e, 0, reg.keymin.shape[0] - 1)
+    head_idx = jnp.clip(refs.ref_idx(reg.subhead[ec]).astype(jnp.int32),
+                        0, state.pool.key.shape[0] - 1)
+    slot = jnp.clip(reg.ctr[ec], 0, state.stct.shape[0] - 1)
+    valid = active & (e >= 0) & (reg.keymax[ec] == rep.keymax) & \
+        (refs.ref_sid(reg.subhead[ec]) == me_i) & \
+        (state.stct[slot] >= 0) & refs.is_null(state.pool.newloc[head_idx])
+    lost = active & ~valid
+    drops = rep.drops | jnp.where(lost, rep.targets, 0)
+    targets = jnp.where(lost, 0, rep.targets)
+    rep = rep._replace(targets=targets, drops=drops,
+                       cursor=jnp.where(lost, -1, rep.cursor))
+
+    # --- age tick (saturating) and publication triggers
+    refresh = jnp.asarray(cfg.replica_refresh_rounds, jnp.int32)
+    rep = rep._replace(age=jnp.where(active & valid,
+                                     jnp.minimum(rep.age + 1, refresh),
+                                     rep.age))
+    streaming = rep.cursor >= 0
+    # publications run on the refresh cadence: a mutation is picked up by
+    # the next cadence walk rather than forcing a full chain walk every
+    # mutated round (under write traffic that walk dominated round cost).
+    # Staleness is still bounded by the ttl lease alone — the cadence
+    # only adds <= refresh rounds of propagation delay, and refresh <=
+    # replica_staleness_rounds by construction.
+    renewal_due = (rep.age >= refresh) & (traffic | mutated)
+    need_walk = valid & (rep.targets != 0) & ~streaming & \
+        ((rep.version == 0) | renewal_due)
+
+    # Image source: the packed-block mirror the fast paths already
+    # maintain (core.blocks). ``blk.keys[e]`` is exactly the publication
+    # layout — sorted live keys, ST_KEY-padded — and a valid row proves
+    # the chain was entirely local/non-moving/non-switched with writers
+    # invalidating since, so validity at this point in the round means
+    # the row is current. No chain walk on the publication path; an
+    # invalid row defers the publication to a later cadence round (if
+    # the row never revalidates, replica leases lapse and reads bounce
+    # home — degraded, never stale).
+    images = state.blk.keys[ec]
+    good = state.blk.valid[ec]
+    can = need_walk & good
+    diff = (images != rep.keys) & can[:, None]
+    anydiff = jnp.any(diff, axis=1)
+    start = can & anydiff
+    renew_only = can & ~anydiff & (rep.version > 0)
+    rep = rep._replace(
+        keys=jnp.where(start[:, None], images, rep.keys),
+        diff=jnp.where(start[:, None], diff, rep.diff),
+        version=jnp.where(start, rep.version + 1, rep.version),
+        cursor=jnp.where(start, 0, rep.cursor),
+    )
+
+    # --- emit (vectorized): build every candidate row as one array and
+    # append the valid ones with a single scatter. Per-session row order
+    # is DROPs, then deltas in position order, then the commit — so on
+    # each FIFO (src, dst) lane a commit still lands after the deltas of
+    # the publication it seals, exactly as the unrolled per-row pushes
+    # did. Per-row M.push here costs ~n_sess*(nsh*2 + batch*nsh) XLA ops
+    # every round, which dominated round wall time on CPU.
+    tgt = jnp.arange(nsh, dtype=jnp.int32)
+    tbit = ((rep.targets[:, None] >> tgt[None, :]) & 1) != 0    # [S, T]
+    dbit = ((rep.drops[:, None] >> tgt[None, :]) & 1) != 0
+    live = rep.keymax != SH_KEY
+    streaming = rep.cursor >= 0
+
+    # first replica_batch set diff positions, lowest index first — the
+    # same set a per-position argmax drain would pick. The argsort key
+    # pushes clear positions past C, so the candidate block stays K rows
+    # per session (K = replica_batch) instead of C: emit cost tracks the
+    # per-round delta budget, not the block capacity.
+    k = int(cfg.replica_batch)
+    colix = jnp.arange(c, dtype=jnp.int32)
+    pos = jnp.argsort(jnp.where(rep.diff, colix, colix + c),
+                      axis=1)[:, :k].astype(jnp.int32)          # [S, K]
+    picked = jnp.take_along_axis(rep.diff, pos, axis=1)         # [S, K]
+    sent = live & streaming
+    done = sent & (jnp.sum(rep.diff.astype(jnp.int32), axis=1) <= k)
+    commit = done | (live & renew_only)
+    livecnt = jnp.sum((rep.keys != ST_KEY).astype(jnp.int32), axis=1)
+
+    def rows(shape, fields):
+        out = jnp.zeros(shape + (M.FIELDS,), jnp.int32)
+        for f, v in fields:
+            out = out.at[..., f].set(v)
+        return out
+
+    drop_rows = rows((n_sess, nsh), [
+        (M.F_KIND, M.MSG_REPLICA_DROP), (M.F_DST, tgt[None, :]),
+        (M.F_SRC, me_i), (M.F_KEY, rep.keymax[:, None]),
+        (M.F_SID, me_i)])
+    delta_rows = rows((n_sess, k, nsh), [
+        (M.F_KIND, M.MSG_REPLICA_DELTA), (M.F_DST, tgt[None, None, :]),
+        (M.F_SRC, me_i), (M.F_KEY, rep.keymax[:, None, None]),
+        (M.F_SID, me_i), (M.F_X1, pos[:, :, None]),
+        (M.F_X2, rep.version[:, None, None]),
+        (M.F_X3, jnp.take_along_axis(rep.keys, pos, axis=1)[:, :, None])])
+    commit_rows = rows((n_sess, nsh), [
+        (M.F_KIND, M.MSG_REPLICA_INSTALL), (M.F_DST, tgt[None, :]),
+        (M.F_SRC, me_i), (M.F_KEY, rep.keymax[:, None]),
+        (M.F_SID, me_i), (M.F_X1, reg.keymin[ec][:, None]),
+        (M.F_X2, rep.version[:, None]), (M.F_X3, livecnt[:, None])])
+
+    delta_ok = picked[:, :, None] & sent[:, None, None] & tbit[:, None, :]
+    all_rows = jnp.concatenate(
+        [drop_rows, delta_rows.reshape(n_sess, k * nsh, M.FIELDS),
+         commit_rows], axis=1).reshape(-1, M.FIELDS)
+    all_ok = jnp.concatenate(
+        [dbit, delta_ok.reshape(n_sess, k * nsh),
+         commit[:, None] & tbit], axis=1).reshape(-1)
+    outbox, count = M.push_many(outbox, count, all_rows, all_ok)
+
+    rows_ix = jnp.arange(n_sess, dtype=jnp.int32)[:, None]
+    selmask = jnp.zeros_like(rep.diff).at[rows_ix, pos].set(
+        picked & sent[:, None])
+    rep = rep._replace(
+        diff=rep.diff & ~selmask,
+        drops=jnp.zeros_like(rep.drops),
+        cursor=jnp.where(done, -1, rep.cursor),
+        age=jnp.where(commit, 0, rep.age))
+
+    # free fully-retired sessions (no targets, owed drops just flushed)
+    gone = live & (rep.targets == 0)
+    rep = rep._replace(
+        keymax=jnp.where(gone, SH_KEY, rep.keymax),
+        version=jnp.where(gone, 0, rep.version),
+        cursor=jnp.where(gone, -1, rep.cursor),
+        age=jnp.where(gone, 0, rep.age),
+        keys=jnp.where(gone[:, None], ST_KEY, rep.keys),
+        diff=rep.diff & ~gone[:, None])
+
+    return state._replace(rep=rep), outbox, count

@@ -32,6 +32,9 @@ from . import bg as B
 from . import blocks as BL
 from . import messages as M
 from . import ops as O
+from . import refs
+from . import registry as REG
+from . import replica as R
 from .types import DiLiConfig, RES_PENDING, ShardState
 
 
@@ -56,6 +59,13 @@ class RoundOut(NamedTuple):
                              # was the packed-block hybrid-search kernel
                              # (subset of fast_hits + mut_hits;
                              # DESIGN.md §12)
+    rep_hits: jnp.ndarray    # int32 — FINDs answered from a replica slot
+                             # (DESIGN.md §15)
+    ent_hits: jnp.ndarray    # int32[M] — ops this round attributed to
+                             # each local registry entry (owned-entry
+                             # arrivals + replica serves). The host feeds
+                             # these into the per-entry op-rate EWMA the
+                             # balancer's load model reads.
 
 
 def _handle_op(state, bg, me, row, outbox, count, cfg):
@@ -124,6 +134,9 @@ _HANDLERS = {
     M.MSG_SWITCH_SERVER: _wrap_bg(B.h_switch_server),
     M.MSG_REG_MERGED: _wrap_bg(B.h_reg_merged),
     M.MSG_EPOCH: _handle_epoch,
+    M.MSG_REPLICA_DELTA: _wrap_bg(R.h_replica_delta),
+    M.MSG_REPLICA_INSTALL: _wrap_bg(R.h_replica_install),
+    M.MSG_REPLICA_DROP: _wrap_bg(R.h_replica_drop),
 }
 _N_KINDS = M.N_KINDS
 
@@ -139,9 +152,11 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
 
     # rebuild dirty packed blocks against round-start state, BEFORE any
     # mutation — a block validated here mirrors exactly the state both
-    # pre-passes classify against (DESIGN.md §12). Off, the mirror stays
-    # all-invalid and costs nothing.
-    if cfg.block_probe:
+    # pre-passes classify against (DESIGN.md §12). Replication also needs
+    # the mirror: replica_step publishes blk rows as session images
+    # (§15), so a replicating shard refreshes even with the probe off.
+    # With both off, the mirror stays all-invalid and costs nothing.
+    if cfg.block_probe or cfg.replication:
         state = BL.refresh_blocks(state, me, cfg)
 
     # one combined pre-pass: answers eligible FINDs from round-start state
@@ -163,6 +178,16 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     mrp = B.replay_prepass(state, rows, me, outbox, count, cfg)
     state, outbox, count = mrp.state, mrp.outbox, mrp.count
 
+    # replica read pre-pass (DESIGN.md §15): fresh local FINDs whose key
+    # lands in a serving replica slot are answered from the packed image
+    # and skip the serial loop. Compiled out unless cfg.replication.
+    if cfg.replication:
+        rep_elig, rep_res = R.replica_serve(state, rows, me, cfg)
+        rep_elig = rep_elig & ~pre.find_elig & ~pre.mut_elig & ~mrp.handled
+    else:
+        rep_elig = jnp.zeros((n_rows,), bool)
+        rep_res = jnp.zeros((n_rows,), jnp.int32)
+
     # Stable-partition the rows the serial pass must execute to the front,
     # so it runs a *dynamic* trip count: padding costs nothing (rounds are
     # usually mostly MSG_NONE), and fast-path-answered rows never enter
@@ -172,7 +197,7 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     # with it per-(src,dst) FIFO) intact. The composite key skip*n + i is
     # unique, so the sort is order-preserving on the kept rows.
     skip = (rows[:, M.F_KIND] == M.MSG_NONE) | pre.find_elig \
-        | pre.mut_elig | mrp.handled
+        | pre.mut_elig | mrp.handled | rep_elig
     # blanket packed-block invalidation trigger (DESIGN.md §12): any row
     # the serial loop will execute, other than pure result routing and
     # transport acks, may mutate a chain or shift the registry's entry
@@ -180,15 +205,35 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     # entry (fast-path apply, bg phase hooks); everything else drops the
     # whole mirror below.
     kind0 = rows[:, M.F_KIND]
+    # replica rows rewrite only the rslots tables — never a chain, never
+    # the registry — so they don't trigger the blanket block drop.
     serial_mut = jnp.any((~skip) & (kind0 != M.MSG_NONE)
                          & (kind0 != M.MSG_RESULT)
                          & (kind0 != M.MSG_NET_ACK)
-                         & (kind0 != M.MSG_EPOCH))
+                         & (kind0 != M.MSG_EPOCH)
+                         & (kind0 != M.MSG_REPLICA_DELTA)
+                         & (kind0 != M.MSG_REPLICA_INSTALL)
+                         & (kind0 != M.MSG_REPLICA_DROP))
+
+    # per-entry op attribution (pre-reorder): an MSG_OP row counts at the
+    # shard that will answer it — owned-entry arrivals here, or a replica
+    # serve here; delegated-away rows count on arrival at their owner.
+    m_ent = state.registry.keymin.shape[0]
+    ent = REG.get_by_key(state.registry, rows[:, M.F_KEY])
+    entc = jnp.clip(ent, 0, m_ent - 1)
+    owned_ent = (ent >= 0) & \
+        (refs.ref_sid(state.registry.subhead[entc]) == me)
+    count_here = (kind0 == M.MSG_OP) & (owned_ent | rep_elig)
+    ent_hits = jnp.zeros((m_ent,), jnp.int32).at[
+        jnp.where(count_here, entc, m_ent)].add(1, mode="drop")
+
     order = jnp.argsort(skip.astype(jnp.int32) * n_rows
                         + jnp.arange(n_rows, dtype=jnp.int32))
     rows = rows[order]
     elig = pre.find_elig[order]
     melig = pre.mut_elig[order]
+    relig = rep_elig[order]
+    res_all = jnp.where(rep_elig, rep_res, pre.res)
     n_live = jnp.sum(~skip)
 
     branches = []
@@ -220,8 +265,10 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     # sit past n_live); the serial loop overwrites its own rows' slots.
     # Pre-pass rows are local clients answered here, so their src is ``me``.
     init = (jnp.zeros((), jnp.int32), state, bg, outbox, count,
-            jnp.where(elig | melig, rows[:, M.F_TS], -1).astype(jnp.int32),
-            jnp.where(elig | melig, pre.res[order], 0).astype(jnp.int32),
+            jnp.where(elig | melig | relig,
+                      rows[:, M.F_TS], -1).astype(jnp.int32),
+            jnp.where(elig | melig | relig,
+                      res_all[order], 0).astype(jnp.int32),
             jnp.full((n_rows,), me, jnp.int32))
     _, state, bg, outbox, count, cslots, cvals, csrcs = jax.lax.while_loop(
         cond, body, init)
@@ -229,6 +276,15 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     bg_busy = jnp.any(bg.phase != B.BG_IDLE)
     state, bg, outbox, count = B.bg_step(state, bg, me, outbox, count, cfg)
     bg_busy = bg_busy | jnp.any(bg.phase != B.BG_IDLE)
+
+    # publication engine (DESIGN.md §15): runs after the serial loop and
+    # bg step so a fresh image walk already sees this round's mutations —
+    # a change at the primary is on the wire the same round it happened.
+    if cfg.replication:
+        traffic = jnp.any(kind0 != M.MSG_NONE)
+        mutated = serial_mut | jnp.any(pre.mut_elig) | bg_busy
+        state, outbox, count = R.replica_step(
+            state, me, mutated, traffic, outbox, count, cfg)
 
     # blanket invalidation: serial mutating rows, any bg slot active
     # around bg_step, or a replayed move splice — a stale valid bit here
@@ -244,4 +300,6 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
                     bg_active=jnp.sum(bg.phase != B.BG_IDLE)
                     .astype(jnp.int32),
                     move_hits=jnp.sum(mrp.handled).astype(jnp.int32),
-                    blk_hits=pre.blk_hits)
+                    blk_hits=pre.blk_hits,
+                    rep_hits=jnp.sum(rep_elig).astype(jnp.int32),
+                    ent_hits=ent_hits)

@@ -33,6 +33,7 @@ import numpy as np
 from . import bg as B
 from . import messages as M
 from . import refs
+from . import replica as R
 from .durability import Durability, wal
 from .membership import (Membership, epoch_broadcast, moves_targeting,
                          owned_entry_count)
@@ -318,7 +319,26 @@ class Cluster:
         self.round_trace: List[str] = []
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
-                      "move_hits": 0, "blk_hits": 0, "max_bg_active": 0}
+                      "move_hits": 0, "blk_hits": 0, "max_bg_active": 0,
+                      "rep_hits": 0}
+        # per-entry op-rate EWMA (keyed by entry keymax), fed from every
+        # round's RoundOut.ent_hits — the load signal the balancer's
+        # op-rate model and hot-entry replication stage read (§15). Decays
+        # to zero at rest, so key-count calibrated behavior is unchanged
+        # for settled clusters.
+        self.op_rate_ewma: Dict[int, float] = {}
+        # per-shard EWMA of replica-served FINDs (keyed by shard id) — the
+        # balancer folds this into shard load so serving replicas don't
+        # read as idle (see step()).
+        self.rep_rate_ewma: Dict[int, float] = {}
+        # host-authoritative replica map (keymax -> (primary, targets)),
+        # maintained by the replicate/drop_replica commands; replica_epoch
+        # bumps on every change so clients know to refresh routing.
+        self._replica_map: Dict[int, Tuple[int, set]] = {}
+        self.replica_epoch = 0
+        # pre-compile the jitted replicate/drop commands so the first hot
+        # entry detected mid-run doesn't pay trace+compile on that round
+        R.warm_commands(self.states[0], cfg)
 
     # ------------------------------------------------------------ client API
     def submit(self, shard: int, kinds: Sequence[int],
@@ -527,6 +547,8 @@ class Cluster:
         new_msgs: List[np.ndarray] = []
         out_counts: List[int] = []
         comp_by_shard: List[np.ndarray] = []
+        ent_rates: Dict[int, int] = {}
+        rep_served: Dict[int, int] = {}
         for s, out in enumerate(outs):
             if out is None:                      # crashed: emitted nothing
                 out_counts.append(0)
@@ -538,8 +560,20 @@ class Cluster:
             self.stats["mut_hits"] += int(out.mut_hits)
             self.stats["move_hits"] += int(out.move_hits)
             self.stats["blk_hits"] += int(out.blk_hits)
+            rh = int(out.rep_hits)
+            self.stats["rep_hits"] += rh
+            if rh:
+                rep_served[s] = rep_served.get(s, 0) + rh
             self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
                                               int(out.bg_active))
+            hits = np.asarray(out.ent_hits)
+            nz = np.nonzero(hits)[0]
+            if nz.size:
+                kmax = np.asarray(out.state.registry.keymax)
+                for e in nz:
+                    k = int(kmax[e])
+                    if k != ST_KEY:
+                        ent_rates[k] = ent_rates.get(k, 0) + int(hits[e])
             cnt = int(out.out_count)
             out_counts.append(cnt)
             self.stats["max_outbox"] = max(self.stats["max_outbox"], cnt)
@@ -571,6 +605,32 @@ class Cluster:
                 self.last_completions.append((int(slot), int(val), int(src)))
                 self._pending_ops.pop(int(slot), None)
                 ndone += 1
+
+        # per-entry op-rate EWMA update (once per round): decay every
+        # tracked entry, add this round's hits, drop entries decayed to
+        # noise so the dict tracks only recently-active sublists.
+        alpha = 0.3
+        nxt_rates: Dict[int, float] = {}
+        for k, v in self.op_rate_ewma.items():
+            d = v * (1.0 - alpha)
+            if d > 1e-3:
+                nxt_rates[k] = d
+        for k, h in ent_rates.items():
+            nxt_rates[k] = nxt_rates.get(k, 0.0) + alpha * h
+        self.op_rate_ewma = nxt_rates
+        # per-shard replica-service EWMA (keyed by shard): FINDs a shard
+        # serves from its read replicas are real load but invisible to the
+        # registry-keyed entry rates (the entry lives on the primary), so
+        # without this the balancer sees serving replicas as idle and
+        # churns moves against phantom imbalance.
+        nxt_rep: Dict[int, float] = {}
+        for s2, v in self.rep_rate_ewma.items():
+            d = v * (1.0 - alpha)
+            if d > 1e-3:
+                nxt_rep[s2] = d
+        for s2, h in rep_served.items():
+            nxt_rep[s2] = nxt_rep.get(s2, 0.0) + alpha * h
+        self.rep_rate_ewma = nxt_rep
 
         # host->shard membership announcements join the routed stream
         # here (after the shard outboxes, a deterministic position) so
@@ -702,6 +762,72 @@ class Cluster:
                                         right_keymax)
         self._log_command(s, wal.CMD_MERGE, (left_keymax, right_keymax), ok)
         return bool(ok)
+
+    def replicate(self, s: int, entry_keymax: int, target: int) -> bool:
+        """Start (or widen) read replication of the entry ``s`` owns with
+        upper bound ``entry_keymax`` onto shard ``target`` (§15). Like the
+        bg commands, this is a host-side state edit journaled through the
+        WAL so recovery replays it byte-identically."""
+        if not self.cfg.replication:
+            raise ValueError(
+                "replicate: cfg.replication is off — replica serve and "
+                "publication are compiled out of shard_round")
+        self.states[s], ok = R.queue_replicate_jit(
+            self.states[s], self.cfg, entry_keymax, target)
+        ok = bool(np.asarray(ok))
+        self._log_command(s, wal.CMD_REPLICATE, (entry_keymax, target), ok)
+        if ok:
+            prim, tg = self._replica_map.get(entry_keymax, (s, set()))
+            tg = set(tg) | {int(target)}
+            self._replica_map[int(entry_keymax)] = (s, tg)
+            self.replica_epoch += 1
+        return ok
+
+    def drop_replica(self, s: int, entry_keymax: int,
+                     target: int = -1) -> bool:
+        """Retire replicas of ``entry_keymax`` on ``target`` (-1 = all)."""
+        if not self.cfg.replication:
+            raise ValueError("drop_replica: cfg.replication is off")
+        self.states[s], ok = R.queue_drop_replica_jit(
+            self.states[s], self.cfg, entry_keymax, target)
+        ok = bool(np.asarray(ok))
+        self._log_command(s, wal.CMD_DROP_REPLICA,
+                          (entry_keymax, target), ok)
+        if entry_keymax in self._replica_map:
+            prim, tg = self._replica_map[entry_keymax]
+            tg = set() if target < 0 else set(tg) - {int(target)}
+            if tg:
+                self._replica_map[entry_keymax] = (prim, tg)
+            else:
+                del self._replica_map[entry_keymax]
+            self.replica_epoch += 1
+        return ok
+
+    def replica_sets(self):
+        """Live replica routing view for clients: ``{keymax: (keymin,
+        primary, [replica shards])}``. Entries whose primary no longer
+        owns a matching registry entry are pruned (ownership moved; the
+        session's self-audit is dropping those replicas anyway)."""
+        out = {}
+        stale = []
+        for kmax, (prim, tg) in self._replica_map.items():
+            reg = self.states[prim].registry
+            size = int(np.asarray(reg.size))
+            kmaxes = np.asarray(reg.keymax)[:size]
+            at = np.nonzero(kmaxes == kmax)[0]
+            owned = False
+            if at.size:
+                sh = int(np.asarray(reg.subhead)[at[0]])
+                owned = ((sh & refs.SID_MASK) >> refs.IDX_BITS) == prim
+            if not owned:
+                stale.append(kmax)
+                continue
+            kmin = int(np.asarray(reg.keymin)[at[0]])
+            out[int(kmax)] = (kmin, int(prim), sorted(tg))
+        for kmax in stale:
+            del self._replica_map[kmax]
+            self.replica_epoch += 1
+        return out
 
     def _log_command(self, s: int, cmd: int, args, ok) -> None:
         """Balancer commands mutate the BgTable outside the inbox, so

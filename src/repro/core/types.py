@@ -76,6 +76,27 @@ class DiLiConfig(NamedTuple):
                                      # threshold + insert slack, like
                                      # fast_scan_bound; fuller sublists
                                      # simply never validate a block)
+    replication: bool = False        # hot-sublist read replication
+                                     # (DESIGN.md §15): compile the replica
+                                     # serve pre-pass + publication engine
+                                     # into shard_round. Off by default so
+                                     # non-replicated runs pay nothing.
+    replica_sessions: int = 2        # primary-side publication sessions per
+                                     # shard (concurrently replicated
+                                     # entries a shard can be primary for)
+    replica_slots: int = 4           # replica-side image slots per shard
+    replica_batch: int = 8           # delta rows a session streams per
+                                     # round per target (outbox budget)
+    replica_refresh_rounds: int = 8  # lease-renewal cadence: an idle
+                                     # session republishes (or re-commits)
+                                     # once this old, but only in rounds
+                                     # where the primary saw live traffic —
+                                     # a cluster at rest stays quiescent
+    replica_staleness_rounds: int = 32  # hard staleness lease: a replica
+                                     # slot serves for at most this many
+                                     # rounds after its last commit, then
+                                     # self-invalidates and bounces reads
+                                     # to the primary
 
 
 class Pool(NamedTuple):
@@ -126,6 +147,41 @@ class Blocks(NamedTuple):
     valid: jnp.ndarray   # bool[M]
 
 
+class RepSessions(NamedTuple):
+    """Primary-side replication sessions (DESIGN.md §15): one row per
+    entry this shard is currently publishing read replicas for. Sessions
+    are keyed by the entry's keymax (like BgTable slots), not by registry
+    index — registry indices shift under unrelated splits/merges, keymax
+    is stable for the entry's upper half. ``keys`` holds the last image
+    committed to (or being streamed at) the replicas; ``diff`` marks the
+    positions of the in-flight publication still to stream.
+    """
+    keymax: jnp.ndarray   # int32[S]; SH_KEY = free session
+    targets: jnp.ndarray  # int32[S] live replica bitmask (bit t = shard t)
+    drops: jnp.ndarray    # int32[S] bitmask of targets owed a DROP row
+    version: jnp.ndarray  # int32[S] publication version counter
+    cursor: jnp.ndarray   # int32[S] stream position; -1 = idle/committed
+    age: jnp.ndarray      # int32[S] rounds since last commit send
+                          # (saturates at replica_refresh_rounds)
+    keys: jnp.ndarray     # int32[S, C] published image, padding = ST_KEY
+    diff: jnp.ndarray     # bool[S, C] positions still to stream
+
+
+class ReplicaSlots(NamedTuple):
+    """Replica-side read-only sublist images (DESIGN.md §15). A slot
+    serves FINDs in (keymin, keymax] while its lease holds (ttl > 0 and a
+    commit has been seen); an expired slot keeps its image but bounces
+    reads home until the next commit renews the lease.
+    """
+    keymax: jnp.ndarray   # int32[R]; SH_KEY = free slot
+    keymin: jnp.ndarray   # int32[R] serving range lower bound (exclusive)
+    src: jnp.ndarray      # int32[R] primary shard id
+    version: jnp.ndarray  # int32[R] last committed version; -1 = deltas
+                          # arriving but no commit yet (not serving)
+    ttl: jnp.ndarray      # int32[R] staleness lease, rounds remaining
+    keys: jnp.ndarray     # int32[R, C] sorted image, padding = ST_KEY
+
+
 class ShardState(NamedTuple):
     """Everything one 'server' (device) owns."""
     pool: Pool
@@ -146,6 +202,11 @@ class ShardState(NamedTuple):
                             # gates registry-broadcast fan-out so retired
                             # shards drop out of the mesh without a
                             # recompile (bit s set => shard s is a member)
+    rep: RepSessions        # primary-side replication sessions (§15);
+                            # all-free when replication is unused, and
+                            # bit-static then — non-replicated runs keep
+                            # their exact pre-replication state digests
+    rslots: ReplicaSlots    # replica-side read images (§15)
 
 
 class OpBatch(NamedTuple):
@@ -187,6 +248,32 @@ def empty_blocks(cfg: DiLiConfig) -> Blocks:
         keys=jnp.full((m, c), ST_KEY, jnp.int32),
         idx=jnp.zeros((m, c), jnp.int32),
         valid=jnp.zeros((m,), bool),
+    )
+
+
+def empty_rep_sessions(cfg: DiLiConfig) -> RepSessions:
+    s, c = cfg.replica_sessions, cfg.block_cap
+    return RepSessions(
+        keymax=jnp.full((s,), SH_KEY, jnp.int32),
+        targets=jnp.zeros((s,), jnp.int32),
+        drops=jnp.zeros((s,), jnp.int32),
+        version=jnp.zeros((s,), jnp.int32),
+        cursor=jnp.full((s,), -1, jnp.int32),
+        age=jnp.zeros((s,), jnp.int32),
+        keys=jnp.full((s, c), ST_KEY, jnp.int32),
+        diff=jnp.zeros((s, c), bool),
+    )
+
+
+def empty_replica_slots(cfg: DiLiConfig) -> ReplicaSlots:
+    r, c = cfg.replica_slots, cfg.block_cap
+    return ReplicaSlots(
+        keymax=jnp.full((r,), SH_KEY, jnp.int32),
+        keymin=jnp.full((r,), SH_KEY, jnp.int32),
+        src=jnp.full((r,), -1, jnp.int32),
+        version=jnp.full((r,), -1, jnp.int32),
+        ttl=jnp.zeros((r,), jnp.int32),
+        keys=jnp.full((r, c), ST_KEY, jnp.int32),
     )
 
 
@@ -248,4 +335,6 @@ def init_shard(cfg: DiLiConfig, sid: int, *, bootstrap: bool = False,
         epoch=jnp.zeros((), jnp.int32),
         peers=jnp.asarray(full_peer_mask(cfg.num_shards)
                           if peers_mask is None else peers_mask, jnp.int32),
+        rep=empty_rep_sessions(cfg),
+        rslots=empty_replica_slots(cfg),
     )

@@ -66,7 +66,10 @@ def _scripted_move_workload():
     copies (replicates), a merge on the target, and cross-shard client
     ops (delegation + results), and a shard join (epoch announcements).
     Returns (cluster, recorded frames)."""
-    cfg = small_cfg(3)._replace(move_batch=2)
+    cfg = small_cfg(3)._replace(move_batch=2, replication=True,
+                                replica_sessions=2, replica_slots=4,
+                                replica_batch=4, replica_refresh_rounds=2,
+                                replica_staleness_rounds=16)
     cl = Cluster(cfg, seed=1, nemesis=NemesisConfig(), initial_shards=2)
     rec = []
     orig = cl.net.nemesis.perturb
@@ -106,6 +109,30 @@ def _scripted_move_workload():
     assert cl.merge(1, subs1[0]["keymax"], subs1[1]["keymax"])
     cl.run_until_quiet(600)
 
+    # read replication (§15): replicate shard 1's merged entry onto
+    # shard 0, race mutations against the delta stream, then retire it —
+    # REPLICA_DELTA (image cells), REPLICA_INSTALL (version commits /
+    # lease renewals) and REPLICA_DROP (teardown) all cross the recorded
+    # wire
+    ent = sorted((e for e in cl.sublists(1) if e["owner"] == 1),
+                 key=lambda e: e["keymin"])[0]
+    assert cl.replicate(1, ent["keymax"], 0)
+    lo = max(ent["keymin"] + 1, 11)
+    hi = min(ent["keymax"], 209)
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        ks = rng.integers(lo, hi, 2).tolist()
+        cl.submit(1, [OP_INSERT, OP_REMOVE], ks)
+        cl.step()
+    cl.run_until_quiet(600)
+    assert cl.drop_replica(1, ent["keymax"])
+    cl.run_until_quiet(600)
+    # teardown complete: no live lease or session may keep ticking, or
+    # the digest comparisons below would drift with every extra round
+    assert all(int(np.asarray(st.rslots.ttl).max(initial=0)) == 0
+               for st in cl.states)
+    assert cl.replica_sets() == {}
+
     # cross-shard client traffic: submitted at 0, owned by 1
     cl.submit(0, [OP_FIND] * 4, [20, 60, 120, 180])
     cl.run_until_quiet(600)
@@ -141,7 +168,9 @@ def test_duplicate_delivery_idempotence_matrix():
     required = {M.MSG_OP, M.MSG_RESULT, M.MSG_MOVE_SH, M.MSG_MOVE_SH_ACK,
                 M.MSG_MOVE_ITEMS, M.MSG_MOVE_ITEM, M.MSG_MOVE_ACK,
                 M.MSG_SWITCH_ST, M.MSG_SWITCH_ST_ACK, M.MSG_SWITCH_SERVER,
-                M.MSG_REG_SPLIT, M.MSG_REG_MERGED, M.MSG_EPOCH}
+                M.MSG_REG_SPLIT, M.MSG_REG_MERGED, M.MSG_EPOCH,
+                M.MSG_REPLICA_DELTA, M.MSG_REPLICA_INSTALL,
+                M.MSG_REPLICA_DROP}
     assert required <= kinds, f"missing kinds: {sorted(required - kinds)}"
 
     d0 = _digest(cl)

@@ -1,0 +1,244 @@
+"""Hot-sublist read replication tests (DESIGN.md §15).
+
+R1  Lifecycle: replicate -> delta stream -> INSTALL -> replica-served
+    FINDs -> drop_replica retires the slot and routing falls back home.
+R2  Staleness lease: with renewals effectively disabled, a replica stops
+    serving within ``replica_staleness_rounds`` of its last commit and
+    reads bounce home — still correct, just no longer replica-served.
+R3  Mutation propagation: a write at the primary reaches the replica
+    image within one refresh cadence (plus streaming slack).
+R4  Move interaction: moving a replicated entry prunes the routing view
+    and the session self-audit retires the remote slot; reads stay
+    correct throughout.
+R5  Replay: the journaled replicate command is part of the (seed,
+    config) witness — a crash-restart of the primary recovers the
+    session, and two identical executions digest-match.
+R6  Differential under nemesis with replication forced on: the windowed
+    referee (bounded staleness for replica-served FINDs) holds against
+    the sequential oracle, and the final key set is exact.
+R7  Same differential across a crash-restart schedule.
+"""
+import numpy as np
+import pytest
+
+from nemesis_harness import check, default_nemesis, run_differential
+from repro.api import DiLiClient, LocalBackend
+from repro.core.net import NemesisConfig
+from repro.core.net.nemesis import CrashPlan
+from repro.core.sim import Cluster
+from repro.core.types import DiLiConfig, OP_FIND, OP_INSERT, SH_KEY
+
+
+def rep_cfg(**over):
+    base = dict(num_shards=3, pool_capacity=4096, max_sublists=32,
+                max_ctrs=32, max_scan=4096, batch_size=16,
+                mailbox_cap=256, move_batch=8, replication=True,
+                replica_sessions=2, replica_slots=4, replica_batch=8,
+                replica_refresh_rounds=4, replica_staleness_rounds=32)
+    base.update(over)
+    return DiLiConfig(**base)
+
+
+KEYS = list(range(10, 400, 3))
+
+
+def _loaded_backend(cfg):
+    be = LocalBackend(cfg)
+    client = DiLiClient(be)
+    client.insert_batch(KEYS)
+    client.drain(2000)
+    return be, client
+
+
+def _only_entry_kmax(be, shard=0):
+    ents = [e for e in be.sublists(shard) if e["owner"] == shard]
+    assert len(ents) == 1
+    return ents[0]["keymax"]
+
+
+def _pump_until(client, pred, rounds=200):
+    for _ in range(rounds):
+        if pred():
+            return True
+        client.pump()
+    return pred()
+
+
+def test_replicate_install_serve_drop_lifecycle():
+    be, client = _loaded_backend(rep_cfg())
+    kmax = _only_entry_kmax(be)
+    assert be.replicate(0, kmax, 1)
+    assert be.replicate(0, kmax, 2)
+    sets = be.replica_sets()
+    assert sets[kmax][1] == 0 and sets[kmax][2] == [1, 2]
+
+    def installed():
+        return all(int(np.asarray(be.cluster.states[t].rslots.ttl).max()) > 0
+                   for t in (1, 2))
+    assert _pump_until(client, installed), "replica images never committed"
+
+    # replica-served reads: spread over primary+replicas, all correct
+    probe = KEYS[::7] + [11, 12, 200, 399]
+    futs = client.find_batch(probe)
+    client.drain(2000)
+    assert [bool(r) for r in futs.results()] == [k in set(KEYS)
+                                                 for k in probe]
+    assert be.stats["rep_hits"] > 0
+
+    # drop: slots retire, routing falls back home, reads stay correct
+    assert be.drop_replica(0, kmax)
+    def retired():
+        return all(int(np.asarray(be.cluster.states[t].rslots.ttl).max()) == 0
+                   for t in (1, 2))
+    assert _pump_until(client, retired), "replica slots never retired"
+    assert be.replica_sets() == {}
+    h0 = be.stats["rep_hits"]
+    futs = client.find_batch(probe)
+    client.drain(2000)
+    assert [bool(r) for r in futs.results()] == [k in set(KEYS)
+                                                 for k in probe]
+    assert be.stats["rep_hits"] == h0
+
+
+def test_staleness_lease_lapses_without_refresh():
+    # renewals pushed past any horizon this test runs: after the first
+    # INSTALL the lease only decays, so the slot must self-invalidate
+    # within replica_staleness_rounds and reads bounce home
+    cfg = rep_cfg(replica_refresh_rounds=10_000,
+                  replica_staleness_rounds=6)
+    be, client = _loaded_backend(cfg)
+    kmax = _only_entry_kmax(be)
+    assert be.replicate(0, kmax, 1)
+    assert _pump_until(
+        client,
+        lambda: int(np.asarray(be.cluster.states[1].rslots.ttl).max()) > 0)
+    for _ in range(cfg.replica_staleness_rounds + 2):
+        client.pump()
+    assert int(np.asarray(be.cluster.states[1].rslots.ttl).max()) == 0
+    h0 = be.stats["rep_hits"]
+    probe = KEYS[:8] + [11, 14]
+    futs = client.find_batch(probe)
+    client.drain(2000)
+    assert [bool(r) for r in futs.results()] == [k in set(KEYS)
+                                                 for k in probe]
+    # lease lapsed: nothing was replica-served, yet every read answered
+    assert be.stats["rep_hits"] == h0
+
+
+def test_mutation_reaches_replica_within_cadence():
+    cfg = rep_cfg(replica_refresh_rounds=3)
+    be, client = _loaded_backend(cfg)
+    kmax = _only_entry_kmax(be)
+    assert be.replicate(0, kmax, 1)
+    assert _pump_until(
+        client,
+        lambda: int(np.asarray(be.cluster.states[1].rslots.ttl).max()) > 0)
+    new_key = 101   # inside the range, not in KEYS (KEYS are 10+3k)
+    assert new_key not in set(KEYS)
+    client.insert(new_key)
+    client.drain(2000)
+
+    def image_has_key():
+        # keep FIND traffic flowing: cadence renewals require traffic
+        client.find(KEYS[0])
+        return new_key in np.asarray(be.cluster.states[1].rslots.keys)
+    budget = cfg.replica_refresh_rounds + cfg.replica_batch + 16
+    assert _pump_until(client, image_has_key, rounds=budget), \
+        "mutation did not reach the replica image within one cadence"
+    client.drain(2000)
+
+
+def test_move_of_replicated_entry_retires_replicas():
+    be, client = _loaded_backend(rep_cfg())
+    kmax = _only_entry_kmax(be)
+    assert be.replicate(0, kmax, 1)
+    assert _pump_until(
+        client,
+        lambda: int(np.asarray(be.cluster.states[1].rslots.ttl).max()) > 0)
+    # raw move (no balancer shed): the routing view prunes on ownership
+    # loss and the primary session's self-audit drops the remote slot
+    assert be.move(0, kmax, 2)
+    client.drain(2000)
+    assert be.replica_sets() == {}
+    assert _pump_until(
+        client,
+        lambda: int(np.asarray(be.cluster.states[1].rslots.ttl).max()) == 0)
+    # session freed on the old primary
+    assert all(int(k) == SH_KEY
+               for k in np.asarray(be.cluster.states[0].rep.keymax))
+    probe = KEYS[::11] + [11, 398]
+    futs = client.find_batch(probe)
+    client.drain(2000)
+    assert [bool(r) for r in futs.results()] == [k in set(KEYS)
+                                                 for k in probe]
+
+
+def _scripted_replicated_run(tmpdir, crashes=()):
+    nem = NemesisConfig(crashes=tuple(crashes)) if crashes else None
+    cl = Cluster(rep_cfg(), seed=7, nemesis=nem,
+                 durability=str(tmpdir))
+    cl.submit(0, [OP_INSERT] * len(KEYS), list(KEYS))
+    cl.run_until_quiet(800)
+    ents = [e for e in cl.sublists(0) if e["owner"] == 0]
+    assert cl.replicate(0, ents[0]["keymax"], 1)
+    for _ in range(50):
+        cl.step()
+    cl.submit(1, [OP_FIND] * 5, [10, 11, 13, 397, 399])
+    cl.run_until_quiet(800)
+    return cl
+
+
+def test_replicate_command_replays_byte_identically(tmp_path):
+    from repro.core.net.digest import state_digest
+    a = _scripted_replicated_run(tmp_path / "a")
+    b = _scripted_replicated_run(tmp_path / "b")
+    assert state_digest(a.states, a.bgs) == state_digest(b.states, b.bgs)
+
+
+def test_replicate_survives_primary_crash_restart(tmp_path):
+    # crash the primary after the replicate command lands: recovery
+    # replays the journaled command and the session (plus its lease
+    # bookkeeping) is rebuilt into the same state
+    cl = _scripted_replicated_run(
+        tmp_path, crashes=[CrashPlan(shard=0, crash_round=15,
+                                     restart_round=35)])
+    assert cl.durability.stats["recoveries"] == 1
+    assert cl.durability.stats["commands"] >= 1
+    kmaxes = np.asarray(cl.states[0].rep.keymax)
+    assert (kmaxes != SH_KEY).any(), \
+        "recovered primary lost its replication session"
+    cl.submit(2, [OP_FIND] * 3, [10, 11, 399])
+    cl.run_until_quiet(800)
+    assert cl.results
+
+
+REP_OVERRIDES = dict(replication=True, replica_sessions=4, replica_slots=8,
+                     replica_batch=8, replica_refresh_rounds=4,
+                     replica_staleness_rounds=32)
+# hot_rate floor of 1 op/round + no share gate: the balancer replicates
+# whatever the differential workload touches, so the windowed referee and
+# the REPLICA_* wire kinds are actually exercised
+REP_BAL = dict(hot_rate=1.0, hot_share=0.0, cold_rate=0.0,
+               replica_fanout=2)
+
+
+def test_differential_nemesis_with_replication():
+    nem = default_nemesis(0.10)
+    res = run_differential("local", 47, nem, n_ops=400,
+                           cfg_overrides=REP_OVERRIDES,
+                           balancer_kwargs=REP_BAL, keep_backend=True)
+    check(res, nem.repro(47))
+    assert res["backend"].stats["rep_hits"] > 0, \
+        "replication never engaged — the run exercised nothing new"
+
+
+def test_differential_crash_restart_with_replication():
+    nem = NemesisConfig(drop_prob=0.05, dup_prob=0.05, reorder_prob=0.05,
+                        crashes=(CrashPlan(shard=1, crash_round=60,
+                                           restart_round=110),))
+    res = run_differential("local", 29, nem, n_ops=300,
+                           cfg_overrides=REP_OVERRIDES,
+                           balancer_kwargs=REP_BAL, keep_backend=True)
+    check(res, nem.repro(29))
+    dur = res["backend"].cluster.durability
+    assert dur.stats["recoveries"] == 1

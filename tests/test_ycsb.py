@@ -1,0 +1,89 @@
+"""Distribution tests for the bounded YCSB Zipfian generator (§7.2).
+
+The generator is the closed-form inverse-CDF from Gray et al. — rank i
+of n has probability (1/i^θ)/ζ_n(θ). These tests pin the head masses
+against that theory (the property the zipf benchmark's skew sweep is
+calibrated on), the θ=0 uniform degenerate case, the scrambled variant's
+dispersal, and the bounds/rejection contract.
+"""
+import numpy as np
+import pytest
+
+from repro.data.ycsb import _zeta, mixed_phase, zipf_keys
+from repro.core.types import OP_FIND, OP_INSERT, OP_REMOVE
+
+N = 200_000
+SPACE = 1000
+
+
+def _mass(keys, ranks):
+    return np.isin(keys, ranks).mean()
+
+
+@pytest.mark.parametrize("theta", [0.5, 0.9, 0.99])
+def test_head_mass_matches_zeta_theory(theta):
+    rng = np.random.default_rng(0)
+    keys = zipf_keys(rng, N, SPACE, theta=theta)
+    zetan = _zeta(SPACE, theta)
+    p1 = 1.0 / zetan
+    p10 = float(np.sum(1.0 / np.arange(1, 11) ** theta)) / zetan
+    got1 = _mass(keys, [1])
+    got10 = _mass(keys, np.arange(1, 11))
+    # the closed-form inverse CDF is an approximation; YCSB accepts a
+    # few percent of relative error at the head
+    assert got1 == pytest.approx(p1, rel=0.08), (got1, p1)
+    assert got10 == pytest.approx(p10, rel=0.05), (got10, p10)
+
+
+def test_theta_orders_skew():
+    rng = np.random.default_rng(1)
+    heads = [_mass(zipf_keys(rng, N, SPACE, theta=t), np.arange(1, 11))
+             for t in (0.0, 0.5, 0.9, 0.99)]
+    assert heads == sorted(heads), heads
+    # θ=0 is uniform: top-10 mass is 10/SPACE
+    assert heads[0] == pytest.approx(10 / SPACE, rel=0.15)
+
+
+def test_bounds_and_dtype():
+    rng = np.random.default_rng(2)
+    for theta in (0.0, 0.5, 0.99):
+        for scrambled in (False, True):
+            keys = zipf_keys(rng, 10_000, SPACE, theta=theta,
+                             scrambled=scrambled)
+            assert keys.dtype == np.int32
+            assert keys.min() >= 1 and keys.max() <= SPACE
+    with pytest.raises(ValueError):
+        zipf_keys(rng, 10, SPACE, theta=1.0)
+
+
+def test_scrambled_disperses_the_hot_prefix():
+    rng = np.random.default_rng(3)
+    plain = zipf_keys(rng, N, SPACE, theta=0.99)
+    rng = np.random.default_rng(3)
+    scram = zipf_keys(rng, N, SPACE, theta=0.99, scrambled=True)
+    # same skew: the hottest single key carries (at least) rank 1's mass
+    # either way — FNV collisions can only merge ranks, never split one
+    top_plain = np.bincount(plain).max() / N
+    top_scram = np.bincount(scram).max() / N
+    assert top_scram >= 0.9 * top_plain
+    assert top_scram <= 2.0 * top_plain
+    # but the plain hot ranks are a contiguous prefix while the
+    # scrambled ones scatter: compare the span of the top-10 hot keys
+    def top10_span(keys):
+        counts = np.bincount(keys, minlength=SPACE + 1)
+        hot = np.argsort(counts)[-10:]
+        return int(hot.max() - hot.min())
+    assert top10_span(plain) <= 10
+    assert top10_span(scram) > SPACE // 10
+
+
+def test_mixed_phase_read_write_split():
+    kinds, keys = mixed_phase(N, SPACE, 0.9, seed=4, theta=0.9)
+    frac_find = (kinds == OP_FIND).mean()
+    frac_ins = (kinds == OP_INSERT).mean()
+    frac_rem = (kinds == OP_REMOVE).mean()
+    assert frac_find == pytest.approx(0.9, abs=0.01)
+    # writes split evenly between inserts and removes
+    assert frac_ins == pytest.approx(0.05, abs=0.01)
+    assert frac_rem == pytest.approx(0.05, abs=0.01)
+    assert keys.shape == kinds.shape
