@@ -14,6 +14,10 @@
   recovery crash-restart cost vs snapshot cadence: WAL replay length,
          restart-round wall time, client latency through the crash window
          (DESIGN.md §14)
+  serving decode throughput during live page-table migration:
+         refresh_seq-via-RANGE vs the full-rescan fallback, with a
+         deterministic token-equality check (DESIGN.md §16); zipf also
+         gains a YCSB-E scan-mix row
 
 Prints ``name,metric,value`` CSV rows; ``python -m benchmarks.run [names]``.
 Each benchmark additionally persists a ``BENCH_<name>.json`` artifact (rows
@@ -712,6 +716,36 @@ def zipf(n_load=1000, n_ops=4000, key_space=4000):
         emit("zipf", f"{tlab}_on_over_off",
              round(thr["on"] / thr["off"], 2))
 
+    # YCSB-E: scan-heavy mix (95% short RANGE scans / 5% inserts) at
+    # θ=0.99 — the ordered-structure payoff row (DESIGN.md §16). Each
+    # scan routes to its span's primary via one registry lookup and is
+    # served by the gather pre-pass; a hash-partitioned store would
+    # scatter-gather every shard per scan. Replication stays off (scans
+    # are pinned to primaries) and the client keeps its automatic
+    # outbox budget — each in-flight scan charges range_batch + 2.
+    backend = LocalBackend(cfg_for(False)._replace(range_scan=True))
+    bal = Balancer(backend, hot_rate=6.0, cold_rate=1.0)
+    client = DiLiClient(backend, balance=bal)
+    _drive_client(client, load_kinds, load_keys, 32)
+    client.settle(max_rounds=8000)
+    n_e = max(n_ops // 8, 64)
+    _, starts = mixed_phase(n_e, key_space, 1.0, seed=15, theta=0.99)
+    rng = np.random.default_rng(16)
+    scans = []
+    t0 = time.perf_counter()
+    for i, st in enumerate(starts):
+        if i % 20 == 19:                       # the 5% insert leg
+            client.insert(int(rng.integers(1, key_space)))
+        else:
+            scans.append(client.range(int(st), int(st) + 100, limit=50))
+        client.pump()
+    client.drain(16000)
+    dt = time.perf_counter() - t0
+    emit("zipf", "ycsbE_ops_per_s", round(len(starts) / dt))
+    emit("zipf", "ycsbE_scans_done", sum(1 for f in scans if f.done))
+    emit("zipf", "ycsbE_items_scanned", sum(f.count() for f in scans))
+    emit("zipf", "ycsbE_range_hits", backend.stats["range_hits"])
+
 
 # ----------------------------------------------------------------- nemesis
 
@@ -859,9 +893,89 @@ def recovery(n_load=400, n_ops=800, key_space=2500, crash_r=90, outage=50):
              int(st["recoveries"] == 1 and res["quiet"]))
 
 
+# ----------------------------------------------------------------- serving
+
+def serving(steps=20, migrate_every=4, max_batch=4, prompt_len=24,
+            max_new=64, idle_seqs=60, page_size=8):
+    """Decode throughput during live page-table migration (DESIGN.md §16).
+
+    A smoke-sized model decodes a fixed batch while ``idle_seqs`` parked
+    sequences pad the DiLi page table (the realistic shape: the table is
+    dominated by sequences that are *not* decoding this step). Every
+    ``migrate_every`` steps the balancer splits/moves the page index and
+    the engine heals its snapshot — three modes:
+
+      static   no migration (ceiling)
+      rescan   migrate + cluster-wide chain walk (``refresh_table``):
+               pays for every parked sequence on each heal
+      range    migrate + one RANGE scan per *live* sequence
+               (``refresh_seq``): pays only for the decode batch
+
+    The acceptance row is ``range_over_rescan`` (>1 means the RANGE path
+    wins); the ``*_tokens_match`` rows assert migration never corrupted
+    the KV mapping (greedy decode is deterministic, so all three modes
+    must emit identical tokens — the aliasing regression this PR fixes
+    would flip them).
+    """
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving.engine import Request, ServingEngine
+
+    acfg = get_smoke_config("qwen2_5_3b")
+    params = T.init_params(acfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, acfg.vocab, prompt_len).astype(np.int32)
+               for _ in range(max_batch)]
+    pages_per_seq = (prompt_len + max_new + page_size - 1) // page_size
+    num_pages = (max_batch + idle_seqs + 2) * pages_per_seq
+
+    def run(refresh_mode, migrate):
+        eng = ServingEngine(acfg, params, page_size=page_size,
+                            num_pages=num_pages, max_batch=max_batch,
+                            dili_shards=2, refresh_mode=refresh_mode)
+        eng.balancer = Balancer(eng.kv.backend, split_threshold=48,
+                                merge_threshold=4)
+        for sid in range(max_batch, max_batch + idle_seqs):
+            eng.kv.alloc_pages(sid, pages_per_seq)
+        reqs = [Request(seq_id=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.admit(r)
+        eng.step()                               # warm the jit cache
+        migrations = 0
+        t0 = time.perf_counter()
+        for s in range(steps):
+            reb = migrate and (s % migrate_every == migrate_every - 1)
+            migrations += int(reb)
+            eng.step(rebalance=reb)
+        dt = time.perf_counter() - t0
+        toks = steps * max_batch
+        return {"tok_per_s": toks / dt, "migrations": migrations,
+                "range_hits": eng.kv.backend.stats["range_hits"],
+                "out": [list(r.out) for r in reqs]}
+
+    static = run("rescan", migrate=False)
+    rescan = run("rescan", migrate=True)
+    ranged = run("range", migrate=True)
+    emit("serving", "static_tok_per_s", round(static["tok_per_s"], 1))
+    emit("serving", "migrate_rescan_tok_per_s",
+         round(rescan["tok_per_s"], 1))
+    emit("serving", "migrate_range_tok_per_s",
+         round(ranged["tok_per_s"], 1))
+    emit("serving", "range_over_rescan",
+         round(ranged["tok_per_s"] / rescan["tok_per_s"], 2))
+    emit("serving", "migrations", ranged["migrations"])
+    emit("serving", "range_refresh_hits", ranged["range_hits"])
+    emit("serving", "rescan_tokens_match",
+         int(rescan["out"] == static["out"]))
+    emit("serving", "range_tokens_match",
+         int(ranged["out"] == static["out"]))
+
+
 ALL = {"fig3a": fig3a, "fig3b": fig3b, "bgops": bgops,
        "rebalance": rebalance, "kernels": kernels, "lmstep": lmstep,
-       "zipf": zipf, "nemesis": nemesis, "recovery": recovery}
+       "zipf": zipf, "nemesis": nemesis, "recovery": recovery,
+       "serving": serving}
 
 # shrunken workloads for the CI smoke lane (--tiny): same code paths,
 # minutes -> seconds. Benches without parameters run as-is.
@@ -874,6 +988,8 @@ TINY = {
     "nemesis": dict(n_load=200, n_ops=400, key_space=1000),
     "recovery": dict(n_load=150, n_ops=300, key_space=1000,
                      crash_r=40, outage=25),
+    "serving": dict(steps=8, migrate_every=4, max_batch=2, prompt_len=12,
+                    max_new=16, idle_seqs=16, page_size=4),
 }
 
 

@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import bg as B
 from repro.core.durability import wal
 from repro.core import messages as M
+from repro.core import range_scan as RS
 from repro.core import refs
 from repro.core import replica as R
 from repro.core.membership import (Membership, epoch_row, moves_targeting,
@@ -40,7 +41,8 @@ from repro.core.sim import (Cluster, OpIdAllocator, OutboxOverflow,
                             chain_keys, global_keys, make_op_row,
                             materialize_ops, registry_entries,
                             state_sublists)
-from repro.core.types import DiLiConfig, KEY_MAX, KEY_MIN, ST_KEY
+from repro.core.types import (DiLiConfig, KEY_MAX, KEY_MIN, SH_KEY,
+                              ST_KEY)
 
 Completion = Tuple[int, int, int]           # (op_id, result, src_shard)
 RegEntry = Tuple[int, int, int]             # (keymin, keymax, owner)
@@ -57,6 +59,14 @@ class Backend(Protocol):
 
     def submit(self, shard: int, kinds: Sequence[int], keys: Sequence[int],
                values: Optional[Sequence[int]] = None) -> List[int]: ...
+
+    # RANGE scans (DESIGN.md §16): completion carries the item *count*
+    # (or a negative RES_* error); the (key, value) pairs are fetched
+    # once with ``take_range_items`` after the op completes.
+    def submit_range(self, shard: int, lo: int, hi: int,
+                     limit: int) -> int: ...
+
+    def take_range_items(self, op_id: int) -> List[Tuple[int, int]]: ...
 
     def step(self) -> List[Completion]: ...
 
@@ -118,6 +128,12 @@ class LocalBackend:
         self.cluster = cluster
         self.cfg = cluster.cfg
         self._issued: set = set()
+        # RANGE ops issued through this backend; items are captured at
+        # harvest time (``Cluster.take_result`` purges the cluster-side
+        # parts, so they must be pulled *before* the id is recycled) and
+        # held here until the caller fetches them.
+        self._range_issued: set = set()
+        self._range_items: Dict[int, List[Tuple[int, int]]] = {}
 
     # ------------------------------------------------------------- protocol
     @property
@@ -132,6 +148,16 @@ class LocalBackend:
         ids = self.cluster.submit(shard, kinds, keys, values)
         self._issued.update(ids)
         return ids
+
+    def submit_range(self, shard: int, lo: int, hi: int,
+                     limit: int) -> int:
+        op_id = self.cluster.submit_range(shard, lo, hi, limit)
+        self._issued.add(op_id)
+        self._range_issued.add(op_id)
+        return op_id
+
+    def take_range_items(self, op_id: int) -> List[Tuple[int, int]]:
+        return self._range_items.pop(op_id)
 
     def step(self) -> List[Completion]:
         """One round; returns and recycles completions of ops issued
@@ -148,6 +174,11 @@ class LocalBackend:
                 if op_id in self.cluster.results]
         for op_id in done:
             src = self.cluster.result_src.get(op_id, -1)
+            if op_id in self._range_issued:
+                # pull the scan items before take_result purges them
+                self._range_items[op_id] = \
+                    self.cluster.take_range_items(op_id)
+                self._range_issued.discard(op_id)
             val = self.cluster.take_result(op_id)   # pops + recycles the id
             self._issued.discard(op_id)
             comps.append((op_id, val, src))
@@ -365,7 +396,15 @@ class ShardMapBackend:
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
                       "move_hits": 0, "blk_hits": 0, "max_bg_active": 0,
-                      "rep_hits": 0}
+                      "rep_hits": 0, "range_hits": 0}
+        # RANGE reassembly (DESIGN.md §16) — same count-gated protocol
+        # as ``Cluster``: items and the terminal count ride separate
+        # completion rows (and, across shards, separate transport lanes),
+        # so publication waits until every journaled item arrived.
+        self._range_ops: set = set()
+        self._range_parts: Dict[int, List[Tuple[int, int]]] = {}
+        self._range_done: Dict[int, Tuple[int, int]] = {}
+        self._range_items: Dict[int, List[Tuple[int, int]]] = {}
         # same load/replication host state as Cluster (see sim.py): the
         # balancer and client API read an identical surface off either
         # backend.
@@ -397,6 +436,34 @@ class ShardMapBackend:
                                                    slot))
             ids.append(slot)
         return ids
+
+    def submit_range(self, shard: int, lo: int, hi: int,
+                     limit: int) -> int:
+        """Enqueue one RANGE(lo, hi, limit) scan at ``shard`` (§16)."""
+        if not self.cfg.range_scan:
+            raise ValueError(
+                "submit_range: cfg.range_scan is off — the scan pre-pass "
+                "and MSG_RANGE handlers are compiled out of shard_round")
+        if not self.membership.is_routable(shard):
+            raise ValueError(
+                f"submit_range: shard {shard} is "
+                f"{self.membership.state_of(shard)} at epoch "
+                f"{self.membership.epoch}")
+        if lo < KEY_MIN or hi > KEY_MAX + 1 or limit < 1:
+            raise ValueError(
+                f"submit_range: span [{lo}, {hi}) limit={limit} outside "
+                f"[{KEY_MIN}, {KEY_MAX + 1}) or non-positive limit")
+        slot = self._ids.alloc()
+        self._queues[shard].append(RS.make_range_row(shard, lo, hi,
+                                                     limit, slot))
+        self._range_ops.add(slot)
+        self._range_parts[slot] = []
+        # a recycled id must not inherit a prior scan's unfetched items
+        self._range_items.pop(slot, None)
+        return slot
+
+    def take_range_items(self, op_id: int) -> List[Tuple[int, int]]:
+        return self._range_items.pop(op_id)
 
     # ------------------------------------------------- membership (§13)
     def join_shard(self, shard: Optional[int] = None) -> int:
@@ -543,15 +610,39 @@ class ShardMapBackend:
                 f"{self.round_no}, mailbox_cap={self.cfg.mailbox_cap} — "
                 f"raise mailbox_cap or reduce the per-round feed")
 
-    def _harvest(self, cs, cv, cr) -> List[Completion]:
+    def _harvest(self, cs, cv, cr, ck) -> List[Completion]:
         """Completions of one round as (op_id, result, src) with id
-        recycling — shared by both round paths."""
+        recycling — shared by both round paths. ``ck`` is the comp_key
+        lane: SH_KEY marks a scalar completion; a real key marks a RANGE
+        item row (key, value) for the slot's scan (DESIGN.md §16)."""
         comps: List[Completion] = []
-        cs, cv, cr = np.asarray(cs), np.asarray(cv), np.asarray(cr)
+        cs, cv = np.asarray(cs), np.asarray(cv)
+        cr, ck = np.asarray(cr), np.asarray(ck)
         done = cs >= 0
-        for slot, val, src in zip(cs[done], cv[done], cr[done]):
-            comps.append((int(slot), int(val), int(src)))
-            self._ids.release(int(slot))
+        for slot, val, src, key in zip(cs[done], cv[done], cr[done],
+                                       ck[done]):
+            slot, key = int(slot), int(key)
+            if key != SH_KEY:
+                self._range_parts.setdefault(slot, []).append(
+                    (key, int(val)))
+                continue
+            if slot in self._range_ops:
+                # terminal row: F_A is the total item count (negative =
+                # error). Publication is count-gated below — items from
+                # other serving shards may still be in flight.
+                self._range_done[slot] = (int(val), int(src))
+                continue
+            comps.append((slot, int(val), int(src)))
+            self._ids.release(slot)
+        for slot, (total, src) in list(self._range_done.items()):
+            if total >= 0 and len(self._range_parts.get(slot, ())) < total:
+                continue
+            self._range_items[slot] = sorted(
+                self._range_parts.pop(slot, []))
+            self._range_ops.discard(slot)
+            del self._range_done[slot]
+            comps.append((slot, total, src))
+            self._ids.release(slot)
         return comps
 
     def _update_op_rates(self, ent_hits, rep_hits=None) -> None:
@@ -609,7 +700,8 @@ class ShardMapBackend:
         out = self._rnd(self._states, self._bgs,
                         self._jnp.asarray(inbox),
                         self._jnp.asarray(client))
-        self._states, self._bgs, outbox, cs, cv, cr, rstats, ent_hits = out
+        self._states, self._bgs, outbox, cs, cv, cr, ck, rstats, \
+            ent_hits = out
         self._host_states = None
         rstats = np.asarray(rstats)
         out_counts = [int(c) for c in rstats[:, 0]]
@@ -621,6 +713,7 @@ class ShardMapBackend:
         self.stats["mut_hits"] += int(rstats[:, 4].sum())
         self.stats["blk_hits"] += int(rstats[:, 5].sum())
         self.stats["rep_hits"] += int(rstats[:, 6].sum())
+        self.stats["range_hits"] += int(rstats[:, 7].sum())
         self._update_op_rates(ent_hits, rstats[:, 6])
         outbox = np.asarray(outbox)
         per_src = []
@@ -634,7 +727,7 @@ class ShardMapBackend:
             per_src.append((s, rows))
         pre_lens = [b.shape[0] for b in self._net_backlog]
         self.net.route_round(self._net_backlog, per_src, self.round_no)
-        comps = self._harvest(cs, cv, cr)
+        comps = self._harvest(cs, cv, cr, ck)
         self._membership_maintenance()
         if self.durability is not None:
             # journal per live shard (same record layout as Cluster.step):
@@ -642,6 +735,7 @@ class ShardMapBackend:
             # bg phases + epoch (replay audit), post-routing lane image.
             cs_h = np.asarray(cs)
             cv_h, cr_h = np.asarray(cv), np.asarray(cr)
+            ck_h = np.asarray(ck)
             phases = np.asarray(self._bgs.phase)
             epochs = np.asarray(self._states.epoch)
             for s in range(self.n):
@@ -649,7 +743,8 @@ class ShardMapBackend:
                     continue
                 done = cs_h[s] >= 0
                 comp = np.stack([cs_h[s][done], cv_h[s][done],
-                                 cr_h[s][done]], axis=1).astype(np.int32)
+                                 cr_h[s][done], ck_h[s][done]],
+                                axis=1).astype(np.int32)
                 lanes = self.net.export_shard_lanes(s)
                 self.durability.log_round(
                     s, self.round_no,
@@ -684,10 +779,10 @@ class ShardMapBackend:
         client = self._feed_client()
         out = self._rnd(self._states, self._bgs, self._inbox,
                         self._jnp.asarray(client))
-        self._states, self._bgs, self._inbox, cs, cv, cr, rstats, \
+        self._states, self._bgs, self._inbox, cs, cv, cr, ck, rstats, \
             ent_hits = out
         self._host_states = None
-        # per-shard int32[8] round stats computed on-device (the routed
+        # per-shard int32[9] round stats computed on-device (the routed
         # inbox itself never crosses to host on the hot path; see
         # make_dili_round's docstring for the lane layout)
         rstats = np.asarray(rstats)
@@ -698,13 +793,14 @@ class ShardMapBackend:
         self.stats["move_hits"] += int(rstats[:, 5].sum())
         self.stats["blk_hits"] += int(rstats[:, 6].sum())
         self.stats["rep_hits"] += int(rstats[:, 7].sum())
+        self.stats["range_hits"] += int(rstats[:, 8].sum())
         self._update_op_rates(ent_hits, rstats[:, 7])
         delegated = int(rstats[:, 2].sum())
         if delegated:
             self.stats["delegated"] += delegated
             self.stats["max_hops"] = max(self.stats["max_hops"],
                                          int(rstats[:, 3].max()))
-        comps = self._harvest(cs, cv, cr)
+        comps = self._harvest(cs, cv, cr, ck)
         self._membership_maintenance()
         self.round_no += 1
         self.stats["rounds"] += 1

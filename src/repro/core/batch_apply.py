@@ -81,9 +81,13 @@ from .types import (DiLiConfig, OP_FIND, OP_INSERT, OP_REMOVE, RES_FALSE,
                     RES_TRUE, ShardState)
 
 # message kinds that cannot invalidate a round-start read or mutation
-# window: padding, result routing (no list-state writes) and client ops
-# (same-key interactions are handled by the group fold).
-_BENIGN_KINDS = (M.MSG_NONE, M.MSG_RESULT, M.MSG_OP)
+# window: padding, result routing (no list-state writes), client ops
+# (same-key interactions are handled by the group fold) and RANGE rows
+# (pure reads — the gather pre-pass serves them against the round-start
+# snapshot before any fast-path mutation, and the serial walk never
+# delinks; DESIGN.md §16).
+_BENIGN_KINDS = (M.MSG_NONE, M.MSG_RESULT, M.MSG_OP, M.MSG_RANGE,
+                 M.MSG_RANGE_ITEM)
 
 
 class PreOut(NamedTuple):

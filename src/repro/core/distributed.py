@@ -57,13 +57,17 @@ def bucket_by_dst(outbox, count, num_shards: int, cap_pair: int):
 
 def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
     """Build the jitted SPMD round: (states, bgs, inbox, client) ->
-    (states, bgs, inbox_next, comp_slot, comp_val, comp_src, stats).
+    (states, bgs, inbox_next, comp_slot, comp_val, comp_src, comp_key,
+    stats).
 
     All arguments are stacked over the leading shard axis and sharded over
     the mesh's flattened device axes. ``comp_src`` is the shard that
     executed each completed op (route-correction feedback for the client
-    API). ``stats`` is int32[7] per shard, computed on-device so the host
-    driver never pulls the routed inbox:
+    API); ``comp_key`` tags completion rows — SH_KEY for scalar results,
+    a real key for RANGE items (DESIGN.md §16; the routed inbox never
+    crosses to the host on this path, so the completion lanes are the
+    only channel scan items can ride). ``stats`` is int32[9] per shard,
+    computed on-device so the host driver never pulls the routed inbox:
 
       0  out_count — attempted outbox pushes (detects ``bucket_by_dst``
          overflow instead of silently losing rows)
@@ -76,6 +80,8 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
       6  fast-path lanes answered via the packed-block kernel probe
          (DESIGN.md §12)
       7  FINDs answered from a replica slot (DESIGN.md §15)
+      8  RANGE segments served by the packed-block gather pre-pass
+         (DESIGN.md §16)
 
     The trailing ``ent_hits`` output is int32[S, M]: per-entry op
     attribution this round (the balancer's op-rate EWMA feed).
@@ -109,13 +115,15 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
             out.move_hits,
             out.blk_hits,
             out.rep_hits,
+            out.range_hits,
         ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),
                 jax.tree_util.tree_map(add1, out.bg),
                 inbox_next,
                 out.comp_slot[None], out.comp_val[None],
-                out.comp_src[None], stats[None], out.ent_hits[None])
+                out.comp_src[None], out.comp_key[None], stats[None],
+                out.ent_hits[None])
 
     pspec = P(axes)
 
@@ -123,7 +131,7 @@ def make_dili_round(mesh: Mesh, cfg: DiLiConfig, cap_pair: int = 8):
         per_shard, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec),
         out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                   pspec),
+                   pspec, pspec),
         check_rep=False)
     return jax.jit(fn)
 
@@ -135,14 +143,15 @@ def make_dili_round_hostroute(mesh: Mesh, cfg: DiLiConfig):
     outboxes and inboxes, so routing must cross the host).
 
     (states, bgs, inbox, client) ->
-        (states, bgs, outbox, comp_slot, comp_val, comp_src, stats)
+        (states, bgs, outbox, comp_slot, comp_val, comp_src, comp_key,
+         stats)
 
     ``outbox`` is the raw [S, mailbox_cap, FIELDS] per-shard outbox;
-    ``stats`` is int32[7] per shard: out_count, bg_active, move_hits,
-    fast_hits, mut_hits, blk_hits, rep_hits; the trailing ``ent_hits``
-    output is int32[S, M] per-entry op attribution. Delegation stats
-    (hops) are computed host-side from the outbox rows themselves — the
-    host sees every frame on this path.
+    ``stats`` is int32[8] per shard: out_count, bg_active, move_hits,
+    fast_hits, mut_hits, blk_hits, rep_hits, range_hits; the trailing
+    ``ent_hits`` output is int32[S, M] per-entry op attribution.
+    Delegation stats (hops) are computed host-side from the outbox rows
+    themselves — the host sees every frame on this path.
     """
     num = cfg.num_shards
     assert num == mesh.devices.size, (num, mesh.devices.size)
@@ -161,20 +170,22 @@ def make_dili_round_hostroute(mesh: Mesh, cfg: DiLiConfig):
             out.mut_hits,
             out.blk_hits,
             out.rep_hits,
+            out.range_hits,
         ])
         add1 = lambda x: x[None]
         return (jax.tree_util.tree_map(add1, out.state),
                 jax.tree_util.tree_map(add1, out.bg),
                 out.outbox[None],
                 out.comp_slot[None], out.comp_val[None],
-                out.comp_src[None], stats[None], out.ent_hits[None])
+                out.comp_src[None], out.comp_key[None], stats[None],
+                out.ent_hits[None])
 
     pspec = P(axes)
     fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec),
         out_specs=(pspec, pspec, pspec, pspec, pspec, pspec, pspec,
-                   pspec),
+                   pspec, pspec),
         check_rep=False)
     return jax.jit(fn)
 

@@ -124,7 +124,7 @@ class Durability:
             "round": np.int64(round_no), "kind": np.int64(KIND_ROUND),
             "appends": np.asarray(appends, np.int32),
             "client": np.asarray(client, np.int32),
-            "comp": np.asarray(comp, np.int32).reshape(-1, 3),
+            "comp": np.asarray(comp, np.int32).reshape(-1, 4),
             "bg_phases": np.asarray(bg_phases),
             "epoch": np.int64(epoch),
         }

@@ -55,14 +55,17 @@ class RecoveredShard(NamedTuple):
 
 
 def completions_array(out) -> np.ndarray:
-    """The (op_id, result, src) triples one RoundOut completed, in row
+    """The (op_id, result, src, key) rows one RoundOut completed, in row
     order — the same harvest the live engines journal, so replay can
-    compare bit-for-bit."""
+    compare bit-for-bit. ``key`` is SH_KEY for scalar completions and
+    the scanned key for RANGE item rows (DESIGN.md §16)."""
     cs = np.asarray(out.comp_slot)
     cv = np.asarray(out.comp_val)
     cr = np.asarray(out.comp_src)
+    ck = np.asarray(out.comp_key)
     done = cs >= 0
-    return np.stack([cs[done], cv[done], cr[done]], axis=1).astype(np.int32)
+    return np.stack([cs[done], cv[done], cr[done], ck[done]],
+                    axis=1).astype(np.int32)
 
 
 def lane_image_of(record: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
@@ -126,7 +129,7 @@ def recover_shard(cfg: DiLiConfig, shard: int, wal: WriteAheadLog,
                           jnp.asarray(client), cfg)
         state, bg = out.state, out.bg
         comp = completions_array(out)
-        want = np.asarray(rec["comp"], np.int32).reshape(-1, 3)
+        want = np.asarray(rec["comp"], np.int32).reshape(-1, 4)
         if not np.array_equal(comp, want):
             raise RecoveryError(
                 f"shard {shard} round {rnd}: replayed completions "

@@ -68,7 +68,24 @@ MSG_REPLICA_DROP = 21   # primary retires a replica: F_KEY = keymax.
                         # Frees the matching slot; a duplicate (or a drop
                         # for a slot never installed) finds no slot and
                         # is a no-op.
-N_KINDS = 22            # dispatch-table size (shard_round lax.switch)
+MSG_RANGE = 22          # range-scan segment cursor (DESIGN.md §16):
+                        # F_KEY = cursor (inclusive lo of the remaining
+                        # span), F_X1 = hi (exclusive), F_X3 = remaining
+                        # item budget, F_X4 = items emitted so far,
+                        # F_SID = reply shard, F_TS = client op slot,
+                        # F_X2 = hops. Read-only: serves one covering
+                        # registry entry, emits MSG_RANGE_ITEM rows, and
+                        # either forwards a narrowed cursor or terminates
+                        # with MSG_RESULT (F_A = total count emitted).
+MSG_RANGE_ITEM = 23     # one scanned (key, value) pair flowing back to
+                        # the reply shard: F_KEY = key, F_VAL = value,
+                        # F_TS = client op slot, F_SRC = serving shard.
+                        # Surfaced to the host through the completion
+                        # lanes (comp_key marks it as an item, not a
+                        # scalar result) — the device-path inbox never
+                        # crosses to host, so completions are the only
+                        # host-visible channel.
+N_KINDS = 24            # dispatch-table size (shard_round lax.switch)
 
 # ---------------------------------------------------------------- layout
 # field meanings are per-kind; see docstrings at the emit sites.

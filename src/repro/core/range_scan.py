@@ -1,0 +1,318 @@
+"""RANGE(lo, hi, limit) — ordered scans over the distributed list
+(DESIGN.md §16).
+
+A scan is a travelling cursor: an ``MSG_RANGE`` row carries the inclusive
+low end of the *remaining* span (F_KEY), the exclusive high end (F_X1),
+the remaining item budget (F_X3) and the count emitted so far (F_X4).
+Each shard that receives the cursor serves the one registry entry covering
+the cursor, emits ``MSG_RANGE_ITEM`` rows to the reply shard, and either
+forwards a narrowed cursor to the next entry's owner or terminates with a
+plain ``MSG_RESULT`` whose F_A is the total item count. The reply shard
+surfaces items through the completion lanes (``comp_key`` tags a row as an
+item rather than a scalar result); the host withholds the client
+completion until the collected items match the terminal count, so
+cross-shard segments may arrive on any lane order.
+
+Two serving paths, mirroring the point-op fast/serial split:
+
+  * ``range_prepass`` — when the covering entry's packed block
+    (DESIGN.md §12) is valid, the segment is one masked gather over the
+    block row: round-start snapshot, no pointer chasing. A valid block
+    *is* the per-entry version check — it certifies the chain was
+    entirely local, non-moving and non-switched as of round start.
+
+  * ``h_range`` — the serial chain walk, the universal fallback for
+    dirty/moving entries. It mirrors the §4 bounce taxonomy: a remote or
+    switched subhead delegates the cursor to its owner (Thm 4 hops); a
+    moving/switched/remote *interior* node aborts the walk and re-issues
+    the cursor past the last emitted key — the "re-read on restructure"
+    rule. The cursor only ever advances past keys that were emitted, so
+    a re-read can neither skip nor duplicate a key.
+
+Linearization: each segment linearizes at the round that serves it (the
+gather pre-pass at round start, the serial walk at its position in the
+round's serial order). The scan as a whole linearizes at its final
+segment; the client pins mutations that overlap an in-flight span (and
+vice versa), so no single client can observe a cut that contradicts its
+own program order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import messages as M
+from . import refs
+from . import registry as reg_ops
+from .ops import RES_OVERFLOW, pool_slot
+from .types import DiLiConfig, SH_KEY, ST_KEY, ShardState
+
+# walk outcome codes
+_D_NONE = 0   # still walking
+_D_TERM = 1   # span complete — emit terminal result
+_D_CONT = 2   # segment done / bounced — re-issue narrowed cursor
+_D_OVER = 3   # traversal bound hit with no progress — error result
+
+
+def make_range_row(shard: int, lo: int, hi: int, limit: int,
+                   slot: int) -> np.ndarray:
+    """Host-side builder for a fresh RANGE cursor row (both backends)."""
+    row = np.zeros((M.FIELDS,), np.int32)
+    row[M.F_KIND] = M.MSG_RANGE
+    row[M.F_DST] = shard
+    row[M.F_SRC] = shard
+    row[M.F_KEY] = lo
+    row[M.F_X1] = hi
+    row[M.F_X3] = limit
+    row[M.F_X4] = 0
+    row[M.F_SID] = shard   # reply shard = submission shard
+    row[M.F_TS] = slot
+    return row
+
+
+def _item_rows(shape, me, reply, slot, keys, vals):
+    """MSG_RANGE_ITEM rows from broadcastable field arrays."""
+    rows = jnp.zeros(shape + (M.FIELDS,), M.MSG_DTYPE)
+    rows = rows.at[..., M.F_KIND].set(M.MSG_RANGE_ITEM)
+    rows = rows.at[..., M.F_DST].set(reply)
+    rows = rows.at[..., M.F_SRC].set(me)
+    rows = rows.at[..., M.F_KEY].set(keys)
+    rows = rows.at[..., M.F_VAL].set(vals)
+    rows = rows.at[..., M.F_TS].set(slot)
+    return rows
+
+
+def h_range(state: ShardState, bg, me, row, outbox, count,
+            cfg: DiLiConfig):
+    """Serial RANGE segment serve — read-only, returns the 8-tuple handler
+    shape. The walk collects up to ``range_batch`` in-span live keys from
+    the covering entry's chain; any dirty node bounces the remainder."""
+    me = jnp.asarray(me, jnp.int32)
+    cursor = row[M.F_KEY]
+    hi = row[M.F_X1]
+    remaining = row[M.F_X3]
+    emitted = row[M.F_X4]
+    reply = row[M.F_SID]
+    slot = row[M.F_TS]
+    hops = row[M.F_X2]
+
+    reg = state.registry
+    pool = state.pool
+    n = pool.key.shape[0]
+    m = reg.keymin.shape[0]
+    batch = int(cfg.range_batch)
+
+    span_empty = (cursor >= hi) | (remaining <= 0)
+    entry = reg_ops.get_by_key(reg, cursor)
+    e = jnp.clip(entry, 0, m - 1)
+    sh_ref = refs.unmarked(reg.subhead[e])
+    owner = refs.ref_sid(sh_ref)
+    head_idx = pool_slot(state, refs.ref_idx(sh_ref))
+    head_ctr = jnp.clip(pool.ctr[head_idx], 0, state.stct.shape[0] - 1)
+    head_moved = (owner == me) & (state.stct[head_ctr] < 0)
+    head_newloc = refs.unmarked(pool.newloc[head_idx])
+
+    no_route = (~span_empty) & (entry < 0)
+    deleg = (~span_empty) & (entry >= 0) & ((owner != me) | head_moved)
+    deleg_dst = jnp.where(owner != me, owner, refs.ref_sid(head_newloc))
+    serve = (~span_empty) & (entry >= 0) & (~deleg)
+
+    # ------------------------------------------------ bounded chain walk
+    take = jnp.minimum(jnp.asarray(batch, jnp.int32), remaining)
+    bound = int(cfg.max_scan)
+
+    def w_cond(c):
+        i, cur, keys, vals, got, code, nxt_cur = c
+        return (code == _D_NONE) & (i < bound)
+
+    def w_body(c):
+        i, cur, keys, vals, got, code, nxt_cur = c
+        ci = jnp.clip(refs.ref_idx(cur).astype(jnp.int32), 0, n - 1)
+        word = pool.nxt[ci]
+        marked = refs.ref_mark(word)
+        moving = ~refs.is_null(pool.newloc[ci])
+        switched = state.stct[jnp.clip(pool.ctr[ci], 0,
+                                       state.stct.shape[0] - 1)] < 0
+        k = pool.key[ci]
+        is_sh = k == SH_KEY
+        is_st = k == ST_KEY
+        # dirty node → bounce: re-issue the cursor past the last emitted
+        # key (or unchanged when nothing was emitted yet). A marked ST is
+        # a merge-neutralized subtail mid-restructure — bounce too.
+        bad = (refs.ref_sid(cur) != me) | refs.is_null(cur) | moving \
+            | switched | (is_st & marked)
+        last = jnp.where(got > 0, keys[jnp.clip(got - 1, 0, batch - 1)],
+                         cursor - 1)
+        st_stop = (~bad) & is_st
+        st_covers = st_stop & (pool.keymax[ci] >= hi - 1)
+        past = (~bad) & (~is_sh) & (~is_st) & (k >= hi)
+        in_span = (~bad) & (~is_sh) & (~is_st) & (~marked) \
+            & (k >= cursor) & (k < hi)
+        trunc = in_span & (got >= take)
+        coll = in_span & (got < take)
+
+        code = jnp.where(bad, _D_CONT,
+               jnp.where(st_covers | past, _D_TERM,
+               jnp.where(st_stop | trunc, _D_CONT, _D_NONE)))
+        nxt_cur = jnp.where(bad, last + 1,
+                  jnp.where(st_stop & ~st_covers, pool.keymax[ci] + 1,
+                  jnp.where(trunc, k, nxt_cur)))
+
+        at = jnp.where(coll, got, batch)
+        keys = keys.at[at].set(k, mode="drop")
+        vals = vals.at[at].set(pool.keymax[ci], mode="drop")
+        got = got + coll.astype(jnp.int32)
+        cur = jnp.where(code == _D_NONE, word, cur)
+        return i + 1, cur, keys, vals, got, code, nxt_cur
+
+    init = (jnp.zeros((), jnp.int32), refs.make_ref(me, head_idx),
+            jnp.full((batch,), ST_KEY, jnp.int32),
+            jnp.zeros((batch,), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.where(serve, _D_NONE, _D_TERM).astype(jnp.int32), cursor)
+    _, _, keys, vals, got, code, nxt_cur = jax.lax.while_loop(
+        w_cond, w_body, init)
+
+    # bound hit while still walking: progress → continue, else overflow
+    last = jnp.where(got > 0, keys[jnp.clip(got - 1, 0, batch - 1)],
+                     cursor - 1)
+    hit_bound = serve & (code == _D_NONE)
+    nxt_cur = jnp.where(hit_bound, last + 1, nxt_cur)
+    code = jnp.where(hit_bound,
+                     jnp.where(got > 0, _D_CONT, _D_OVER), code)
+
+    got = jnp.where(serve, got, 0)
+    total = emitted + got
+    rem2 = remaining - got
+
+    # ------------------------------------------------ emit items
+    items = _item_rows((batch,), me, reply, slot, keys, vals)
+    do_items = serve & (jnp.arange(batch, dtype=jnp.int32) < got)
+    outbox, count = M.push_many(outbox, count, items, do_items)
+
+    # ------------------------------------------------ final row
+    # terminal when the span is served out or the budget is spent;
+    # otherwise forward the (possibly unchanged) cursor — to the next
+    # entry's owner on a clean continue, to the delegate on a stale
+    # route, to self on a transient registry gap or an interior bounce.
+    over = serve & (code == _D_OVER)
+    term = span_empty | (serve & (code == _D_TERM)) \
+        | (serve & (code == _D_CONT) & (rem2 <= 0))
+    is_term = term | over
+    e2 = reg_ops.get_by_key(reg, nxt_cur)
+    dst2 = jnp.where(
+        e2 >= 0,
+        refs.ref_sid(refs.unmarked(reg.subhead[jnp.clip(e2, 0, m - 1)])),
+        me)
+    fwd_dst = jnp.where(deleg, deleg_dst,
+                        jnp.where(no_route, me, dst2))
+    fwd_cursor = jnp.where(serve, nxt_cur, cursor)
+    final = M.make_row(
+        jnp.where(is_term, M.MSG_RESULT, M.MSG_RANGE),
+        jnp.where(is_term, reply, fwd_dst), me,
+        a=jnp.where(over, RES_OVERFLOW, total),
+        key=fwd_cursor, x1=hi, x3=rem2, x4=total,
+        sid=reply, ts=slot, x2=hops + 1)
+    outbox, count = M.push(outbox, count, final)
+
+    neg = jnp.asarray(-1, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    return (state, bg, outbox, count, neg, z, z,
+            jnp.asarray(SH_KEY, jnp.int32))
+
+
+def h_range_item(state: ShardState, bg, me, row, outbox, count,
+                 cfg: DiLiConfig):
+    """One scanned pair arriving at the reply shard: echo it onto the
+    completion lanes. ``comp_key`` carries the real key (> SH_KEY), which
+    is what distinguishes an item row from a scalar completion."""
+    return (state, bg, outbox, count, row[M.F_TS], row[M.F_VAL],
+            row[M.F_SRC], row[M.F_KEY])
+
+
+def range_prepass(state: ShardState, rows, me, outbox, count,
+                  cfg: DiLiConfig):
+    """Vectorized RANGE segment serve from valid packed blocks.
+
+    Runs at round start, before any mutation, against the same snapshot
+    ``refresh_blocks`` just validated. Up to ``range_lanes`` MSG_RANGE
+    rows whose covering entry has a valid block are each answered with
+    one masked gather over the block row; unservable cursors fall
+    through to the serial ``h_range``. Returns
+    ``(outbox, count, handled[n_rows], hits)``.
+    """
+    me = jnp.asarray(me, jnp.int32)
+    kind = rows[:, M.F_KIND]
+    n_rows = kind.shape[0]
+    lanes = int(cfg.range_lanes)
+    cand = kind == M.MSG_RANGE
+    sel = jnp.argsort((~cand).astype(jnp.int32) * n_rows
+                      + jnp.arange(n_rows, dtype=jnp.int32))[:lanes]
+    lane = cand[sel]
+    r = rows[sel]
+    cursor = r[:, M.F_KEY]
+    hi = r[:, M.F_X1]
+    remaining = r[:, M.F_X3]
+    emitted = r[:, M.F_X4]
+    reply = r[:, M.F_SID]
+    slot = r[:, M.F_TS]
+    hops = r[:, M.F_X2]
+
+    reg = state.registry
+    blk = state.blk
+    m, c = blk.keys.shape
+    entry = reg_ops.get_by_key(reg, cursor)
+    e = jnp.clip(entry, 0, m - 1)
+    owned = refs.ref_sid(refs.unmarked(reg.subhead[e])) == me
+    # a valid block IS the version check: chain entirely local,
+    # non-moving, non-switched as of round start (DESIGN.md §12)
+    usable = lane & (entry >= 0) & blk.valid[e] & owned \
+        & (cursor < hi) & (remaining > 0)
+
+    batch = jnp.minimum(jnp.asarray(int(cfg.range_batch), jnp.int32),
+                        remaining)
+    bkeys = blk.keys[e]                                        # [L, C]
+    bvals = state.pool.keymax[pool_slot(state, blk.idx[e])]    # [L, C]
+    in_span = (bkeys != ST_KEY) & (bkeys >= cursor[:, None]) \
+        & (bkeys < hi[:, None])
+    rank = jnp.cumsum(in_span.astype(jnp.int32), axis=1) - 1
+    take = in_span & (rank < batch[:, None])
+    got = jnp.sum(take.astype(jnp.int32), axis=1)
+
+    items = _item_rows((lanes, c), me, reply[:, None], slot[:, None],
+                       bkeys, bvals)
+    do_items = usable[:, None] & take
+    outbox, count = M.push_many(
+        outbox, count, items.reshape(lanes * c, M.FIELDS),
+        do_items.reshape(-1))
+
+    # continuation / terminal — one row per served lane
+    truncated = jnp.sum(in_span.astype(jnp.int32), axis=1) > batch
+    last_taken = jnp.max(jnp.where(take, bkeys, SH_KEY), axis=1)
+    ekmax = reg.keymax[e]
+    total = emitted + got
+    rem2 = remaining - got
+    done = ((~truncated) & (ekmax >= hi - 1)) | (rem2 <= 0)
+    nxt_cur = jnp.where(truncated, last_taken + 1, ekmax + 1)
+    e2 = reg_ops.get_by_key(reg, nxt_cur)
+    dst2 = jnp.where(
+        e2 >= 0,
+        refs.ref_sid(refs.unmarked(reg.subhead[jnp.clip(e2, 0, m - 1)])),
+        me)
+    final = jnp.zeros((lanes, M.FIELDS), M.MSG_DTYPE)
+    final = final.at[:, M.F_KIND].set(
+        jnp.where(done, M.MSG_RESULT, M.MSG_RANGE))
+    final = final.at[:, M.F_DST].set(jnp.where(done, reply, dst2))
+    final = final.at[:, M.F_SRC].set(me)
+    final = final.at[:, M.F_A].set(jnp.where(done, total, 0))
+    final = final.at[:, M.F_KEY].set(nxt_cur)
+    final = final.at[:, M.F_X1].set(hi)
+    final = final.at[:, M.F_X3].set(rem2)
+    final = final.at[:, M.F_X4].set(total)
+    final = final.at[:, M.F_SID].set(reply)
+    final = final.at[:, M.F_TS].set(slot)
+    final = final.at[:, M.F_X2].set(hops + 1)
+    outbox, count = M.push_many(outbox, count, final, usable)
+
+    handled = jnp.zeros((n_rows,), bool).at[sel].set(usable)
+    return outbox, count, handled, jnp.sum(usable).astype(jnp.int32)

@@ -32,10 +32,11 @@ from . import bg as B
 from . import blocks as BL
 from . import messages as M
 from . import ops as O
+from . import range_scan as RS
 from . import refs
 from . import registry as REG
 from . import replica as R
-from .types import DiLiConfig, RES_PENDING, ShardState
+from .types import DiLiConfig, RES_PENDING, SH_KEY, ShardState
 
 
 class RoundOut(NamedTuple):
@@ -50,6 +51,11 @@ class RoundOut(NamedTuple):
                              # delegated, i.e. the client's route was stale
                              # (the client API uses this to refresh its
                              # registry cache; DESIGN.md §9)
+    comp_key: jnp.ndarray    # [K] SH_KEY for scalar completions; a real
+                             # key marks the row as one RANGE item
+                             # (comp_val is then the item's value and the
+                             # host accumulates it instead of publishing
+                             # a result; DESIGN.md §16)
     fast_hits: jnp.ndarray   # int32 — finds answered by the fast-path
     mut_hits: jnp.ndarray    # int32 — mutations applied by the fast-path
     bg_active: jnp.ndarray   # int32 — background slots busy after the round
@@ -61,11 +67,20 @@ class RoundOut(NamedTuple):
                              # DESIGN.md §12)
     rep_hits: jnp.ndarray    # int32 — FINDs answered from a replica slot
                              # (DESIGN.md §15)
+    range_hits: jnp.ndarray  # int32 — RANGE segments served by the
+                             # packed-block gather pre-pass (vs the
+                             # serial chain walk; DESIGN.md §16)
     ent_hits: jnp.ndarray    # int32[M] — ops this round attributed to
                              # each local registry entry (owned-entry
                              # arrivals + replica serves). The host feeds
                              # these into the per-entry op-rate EWMA the
                              # balancer's load model reads.
+
+
+# handlers return (state, bg, outbox, count, cslot, cval, csrc, ckey);
+# ckey is SH_KEY for scalar completions — only MSG_RANGE_ITEM rows carry
+# a real key there (DESIGN.md §16).
+_NOKEY = SH_KEY
 
 
 def _handle_op(state, bg, me, row, outbox, count, cfg):
@@ -75,13 +90,15 @@ def _handle_op(state, bg, me, row, outbox, count, cfg):
         (row[M.F_A] != 0)
     cslot = jnp.where(local_done, slot, -1)
     cval = jnp.where(local_done, out.result, 0)
-    return out.state, bg, out.outbox, out.count, cslot, cval, me
+    return (out.state, bg, out.outbox, out.count, cslot, cval, me,
+            jnp.asarray(_NOKEY, jnp.int32))
 
 
 def _handle_result(state, bg, me, row, outbox, count, cfg):
     # F_SRC is the shard that executed the op and routed the result home —
     # the corrected route for the op's key.
-    return state, bg, outbox, count, row[M.F_TS], row[M.F_A], row[M.F_SRC]
+    return (state, bg, outbox, count, row[M.F_TS], row[M.F_A],
+            row[M.F_SRC], jnp.asarray(_NOKEY, jnp.int32))
 
 
 def _wrap_bg(fn):
@@ -89,14 +106,14 @@ def _wrap_bg(fn):
         state, bg, outbox, count = fn(state, bg, me, row, outbox, count, cfg)
         neg = jnp.asarray(-1, jnp.int32)
         return (state, bg, outbox, count, neg, jnp.zeros((), jnp.int32),
-                jnp.zeros((), jnp.int32))
+                jnp.zeros((), jnp.int32), jnp.asarray(_NOKEY, jnp.int32))
     return h
 
 
 def _noop(state, bg, me, row, outbox, count, cfg):
     neg = jnp.asarray(-1, jnp.int32)
     return (state, bg, outbox, count, neg, jnp.zeros((), jnp.int32),
-            jnp.zeros((), jnp.int32))
+            jnp.zeros((), jnp.int32), jnp.asarray(_NOKEY, jnp.int32))
 
 
 def _handle_epoch(state, bg, me, row, outbox, count, cfg):
@@ -111,7 +128,7 @@ def _handle_epoch(state, bg, me, row, outbox, count, cfg):
         peers=jnp.where(take, row[M.F_X1], state.peers))
     neg = jnp.asarray(-1, jnp.int32)
     return (state, bg, outbox, count, neg, jnp.zeros((), jnp.int32),
-            jnp.zeros((), jnp.int32))
+            jnp.zeros((), jnp.int32), jnp.asarray(_NOKEY, jnp.int32))
 
 
 _HANDLERS = {
@@ -137,6 +154,8 @@ _HANDLERS = {
     M.MSG_REPLICA_DELTA: _wrap_bg(R.h_replica_delta),
     M.MSG_REPLICA_INSTALL: _wrap_bg(R.h_replica_install),
     M.MSG_REPLICA_DROP: _wrap_bg(R.h_replica_drop),
+    M.MSG_RANGE: RS.h_range,
+    M.MSG_RANGE_ITEM: RS.h_range_item,
 }
 _N_KINDS = M.N_KINDS
 
@@ -156,8 +175,19 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     # the mirror: replica_step publishes blk rows as session images
     # (§15), so a replicating shard refreshes even with the probe off.
     # With both off, the mirror stays all-invalid and costs nothing.
-    if cfg.block_probe or cfg.replication:
+    if cfg.block_probe or cfg.replication or cfg.range_scan:
         state = BL.refresh_blocks(state, me, cfg)
+
+    # RANGE gather pre-pass (DESIGN.md §16): serve scan cursors whose
+    # covering entry has a valid packed block, against the same
+    # round-start snapshot the blocks mirror — before anything mutates.
+    # Unserved cursors fall through to the serial h_range walk.
+    if cfg.range_scan:
+        outbox, count, range_handled, range_hits = RS.range_prepass(
+            state, rows, me, outbox, count, cfg)
+    else:
+        range_handled = jnp.zeros((n_rows,), bool)
+        range_hits = jnp.zeros((), jnp.int32)
 
     # one combined pre-pass: answers eligible FINDs from round-start state
     # and applies eligible INSERT/REMOVEs against it (eligible finds never
@@ -197,7 +227,7 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     # with it per-(src,dst) FIFO) intact. The composite key skip*n + i is
     # unique, so the sort is order-preserving on the kept rows.
     skip = (rows[:, M.F_KIND] == M.MSG_NONE) | pre.find_elig \
-        | pre.mut_elig | mrp.handled | rep_elig
+        | pre.mut_elig | mrp.handled | rep_elig | range_handled
     # blanket packed-block invalidation trigger (DESIGN.md §12): any row
     # the serial loop will execute, other than pure result routing and
     # transport acks, may mutate a chain or shift the registry's entry
@@ -207,13 +237,17 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
     kind0 = rows[:, M.F_KIND]
     # replica rows rewrite only the rslots tables — never a chain, never
     # the registry — so they don't trigger the blanket block drop.
+    # RANGE rows are pure reads (serial h_range walks without delinking),
+    # so they don't either.
     serial_mut = jnp.any((~skip) & (kind0 != M.MSG_NONE)
                          & (kind0 != M.MSG_RESULT)
                          & (kind0 != M.MSG_NET_ACK)
                          & (kind0 != M.MSG_EPOCH)
                          & (kind0 != M.MSG_REPLICA_DELTA)
                          & (kind0 != M.MSG_REPLICA_INSTALL)
-                         & (kind0 != M.MSG_REPLICA_DROP))
+                         & (kind0 != M.MSG_REPLICA_DROP)
+                         & (kind0 != M.MSG_RANGE)
+                         & (kind0 != M.MSG_RANGE_ITEM))
 
     # per-entry op attribution (pre-reorder): an MSG_OP row counts at the
     # shard that will answer it — owned-entry arrivals here, or a replica
@@ -252,14 +286,14 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
         return c[0] < n_live
 
     def body(c):
-        i, st, b, ob, ct, cslots, cvals, csrcs = c
+        i, st, b, ob, ct, cslots, cvals, csrcs, ckeys = c
         row = rows[i]
         kind = jnp.clip(row[M.F_KIND], 0, _N_KINDS - 1)
-        st, b, ob, ct, cs, cv, cr = jax.lax.switch(
+        st, b, ob, ct, cs, cv, cr, ck = jax.lax.switch(
             kind, branches, (st, b, row, ob, ct))
         return (i + 1, st, b, ob, ct,
                 cslots.at[i].set(cs), cvals.at[i].set(cv),
-                csrcs.at[i].set(cr))
+                csrcs.at[i].set(cr), ckeys.at[i].set(ck))
 
     # completions start pre-filled with the pre-pass answers (those rows
     # sit past n_live); the serial loop overwrites its own rows' slots.
@@ -269,9 +303,10 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
                       rows[:, M.F_TS], -1).astype(jnp.int32),
             jnp.where(elig | melig | relig,
                       res_all[order], 0).astype(jnp.int32),
-            jnp.full((n_rows,), me, jnp.int32))
-    _, state, bg, outbox, count, cslots, cvals, csrcs = jax.lax.while_loop(
-        cond, body, init)
+            jnp.full((n_rows,), me, jnp.int32),
+            jnp.full((n_rows,), SH_KEY, jnp.int32))
+    (_, state, bg, outbox, count, cslots, cvals, csrcs,
+     ckeys) = jax.lax.while_loop(cond, body, init)
 
     bg_busy = jnp.any(bg.phase != B.BG_IDLE)
     state, bg, outbox, count = B.bg_step(state, bg, me, outbox, count, cfg)
@@ -295,6 +330,7 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
                         state.blk.valid)))
     return RoundOut(state=state, bg=bg, outbox=outbox, out_count=count,
                     comp_slot=cslots, comp_val=cvals, comp_src=csrcs,
+                    comp_key=ckeys,
                     fast_hits=jnp.sum(pre.find_elig).astype(jnp.int32),
                     mut_hits=jnp.sum(pre.mut_elig).astype(jnp.int32),
                     bg_active=jnp.sum(bg.phase != B.BG_IDLE)
@@ -302,4 +338,5 @@ def shard_round(state: ShardState, bg: B.BgTable, me, inbox, client,
                     move_hits=jnp.sum(mrp.handled).astype(jnp.int32),
                     blk_hits=pre.blk_hits,
                     rep_hits=jnp.sum(rep_elig).astype(jnp.int32),
+                    range_hits=range_hits,
                     ent_hits=ent_hits)

@@ -32,6 +32,7 @@ import numpy as np
 
 from . import bg as B
 from . import messages as M
+from . import range_scan as RS
 from . import refs
 from . import replica as R
 from .durability import Durability, wal
@@ -262,6 +263,13 @@ class Cluster:
         self.last_completions: List[Tuple[int, int, int]] = []
         self._ids = OpIdAllocator()
         self._pending_ops: Dict[int, Tuple[int, int]] = {}
+        # RANGE scans in flight (DESIGN.md §16): item rows accumulate in
+        # ``_range_parts`` until the terminal result's count says the set
+        # is complete — items from different serving shards ride
+        # different transport lanes, so arrival order proves nothing.
+        self._range_ops: set = set()
+        self._range_parts: Dict[int, List[Tuple[int, int]]] = {}
+        self._range_done: Dict[int, Tuple[int, int]] = {}
         self.round_no = 0
         self.delay_prob = delay_prob
         # One splittable root: independent child streams for channel
@@ -320,7 +328,7 @@ class Cluster:
         self.stats = {"max_outbox": 0, "max_hops": 0, "rounds": 0,
                       "fast_hits": 0, "mut_hits": 0, "delegated": 0,
                       "move_hits": 0, "blk_hits": 0, "max_bg_active": 0,
-                      "rep_hits": 0}
+                      "rep_hits": 0, "range_hits": 0}
         # per-entry op-rate EWMA (keyed by entry keymax), fed from every
         # round's RoundOut.ent_hits — the load signal the balancer's
         # op-rate model and hot-entry replication stage read (§15). Decays
@@ -381,6 +389,45 @@ class Cluster:
                                            np.stack(rows))
         return ids
 
+    def submit_range(self, shard: int, lo: int, hi: int,
+                     limit: int) -> int:
+        """Enqueue a RANGE(lo, hi, limit) scan at server ``shard``
+        (DESIGN.md §16): all keys in ``[lo, hi)``, at most ``limit`` of
+        them. Returns an op id; the result value is the item count and
+        ``take_range_items`` pops the (key, value) pairs — call it
+        *before* ``take_result`` recycles the id."""
+        if not self.cfg.range_scan:
+            raise ValueError(
+                "submit_range: cfg.range_scan is off — the RANGE "
+                "pre-pass and serial walk are compiled out of "
+                "shard_round")
+        if not self.membership.is_routable(shard):
+            raise ValueError(
+                f"submit_range: shard {shard} is "
+                f"{self.membership.state_of(shard)} at epoch "
+                f"{self.membership.epoch} — route ops to one of "
+                f"{self.membership.routable}")
+        lo, hi, limit = int(lo), int(hi), int(limit)
+        if lo < KEY_MIN or hi > KEY_MAX + 1 or limit < 1:
+            raise ValueError(
+                f"submit_range: span [{lo}, {hi}) / limit {limit} out "
+                f"of bounds (keys in [{KEY_MIN}, {KEY_MAX}], "
+                f"limit >= 1)")
+        slot = self._ids.alloc()
+        row = RS.make_range_row(shard, lo, hi, limit, slot)
+        self.backlog[shard] = np.concatenate(
+            [self.backlog[shard], row[None]], axis=0)
+        if self.durability is not None:
+            self.durability.log_submit(shard, self.round_no, row[None])
+        self._pending_ops[slot] = (-1, lo)
+        self._range_ops.add(slot)
+        self._range_parts[slot] = []
+        return slot
+
+    def take_range_items(self, op_id: int) -> List[Tuple[int, int]]:
+        """Pop a completed RANGE's (key, value) pairs, sorted by key."""
+        return sorted(self._range_parts.pop(op_id, []))
+
     def take_result(self, op_id: int) -> int:
         """Pop a completed op's result and recycle its id.
 
@@ -391,6 +438,9 @@ class Cluster:
         """
         val = self.results.pop(op_id)
         self.result_src.pop(op_id, None)
+        # a recycled id must not inherit a stale scan's items
+        self._range_parts.pop(op_id, None)
+        self._range_ops.discard(op_id)
         self._ids.release(op_id)
         return val
 
@@ -552,7 +602,7 @@ class Cluster:
         for s, out in enumerate(outs):
             if out is None:                      # crashed: emitted nothing
                 out_counts.append(0)
-                comp_by_shard.append(np.zeros((0, 3), np.int32))
+                comp_by_shard.append(np.zeros((0, 4), np.int32))
                 continue
             self.states[s] = out.state
             self.bgs[s] = out.bg
@@ -562,6 +612,7 @@ class Cluster:
             self.stats["blk_hits"] += int(out.blk_hits)
             rh = int(out.rep_hits)
             self.stats["rep_hits"] += rh
+            self.stats["range_hits"] += int(out.range_hits)
             if rh:
                 rep_served[s] = rep_served.get(s, 0) + rh
             self.stats["max_bg_active"] = max(self.stats["max_bg_active"],
@@ -596,15 +647,30 @@ class Cluster:
             cs = np.asarray(out.comp_slot)
             cv = np.asarray(out.comp_val)
             cr = np.asarray(out.comp_src)
+            ck = np.asarray(out.comp_key)
             done = cs >= 0
             comp_by_shard.append(np.stack(
-                [cs[done], cv[done], cr[done]], axis=1).astype(np.int32))
-            for slot, val, src in zip(cs[done], cv[done], cr[done]):
-                self.results[int(slot)] = int(val)
-                self.result_src[int(slot)] = int(src)
-                self.last_completions.append((int(slot), int(val), int(src)))
-                self._pending_ops.pop(int(slot), None)
+                [cs[done], cv[done], cr[done], ck[done]],
+                axis=1).astype(np.int32))
+            for slot, val, src, key in zip(cs[done], cv[done], cr[done],
+                                           ck[done]):
+                slot = int(slot)
+                if int(key) != SH_KEY:
+                    # one RANGE item — accumulate, publication waits for
+                    # the terminal count (DESIGN.md §16)
+                    self._range_parts.setdefault(slot, []).append(
+                        (int(key), int(val)))
+                    continue
+                if slot in self._range_ops:
+                    # terminal scan result: F_A is the total item count
+                    self._range_done[slot] = (int(val), int(src))
+                    continue
+                self.results[slot] = int(val)
+                self.result_src[slot] = int(src)
+                self.last_completions.append((slot, int(val), int(src)))
+                self._pending_ops.pop(slot, None)
                 ndone += 1
+        ndone += self._publish_ranges()
 
         # per-entry op-rate EWMA update (once per round): decay every
         # tracked entry, add this round's hits, drop entries decayed to
@@ -698,6 +764,24 @@ class Cluster:
         self.round_no += 1
         self.stats["rounds"] += 1
         return ndone
+
+    def _publish_ranges(self) -> int:
+        """Publish RANGE completions whose item parts have all arrived.
+        Items from different serving shards ride different transport
+        lanes, so the terminal count — not arrival order — gates
+        publication. A negative count is an error result (e.g.
+        RES_OVERFLOW) and publishes immediately."""
+        n = 0
+        for slot, (total, src) in list(self._range_done.items()):
+            if total >= 0 and len(self._range_parts.get(slot, ())) < total:
+                continue
+            self.results[slot] = total
+            self.result_src[slot] = src
+            self.last_completions.append((slot, total, src))
+            self._pending_ops.pop(slot, None)
+            del self._range_done[slot]
+            n += 1
+        return n
 
     def run(self, rounds: int) -> None:
         for _ in range(rounds):

@@ -97,6 +97,19 @@ class DiLiConfig(NamedTuple):
                                      # rounds after its last commit, then
                                      # self-invalidates and bounces reads
                                      # to the primary
+    range_scan: bool = False         # RANGE(lo, hi, limit) scan op
+                                     # (DESIGN.md §16): compile the
+                                     # packed-block gather pre-pass and
+                                     # the serial chain-walk fallback
+                                     # into shard_round. Off by default
+                                     # so point-op runs pay nothing.
+    range_lanes: int = 4             # RANGE cursors the gather pre-pass
+                                     # serves per round; excess cursors
+                                     # fall to the serial handler
+    range_batch: int = 32            # items one RANGE cursor emits per
+                                     # round per segment (outbox budget);
+                                     # longer spans continue via a
+                                     # self-forwarded narrowed cursor
 
 
 class Pool(NamedTuple):

@@ -21,6 +21,11 @@ from repro.models.config import ArchConfig
 from .paged import PagedKVManager, paged_decode_step
 
 
+class BatchOverflow(RuntimeError):
+    """Admission past ``max_batch`` (explicit — must survive ``python -O``,
+    unlike the bare assert it replaced)."""
+
+
 @dataclasses.dataclass
 class Request:
     seq_id: int
@@ -34,7 +39,7 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
                  num_pages: int = 256, max_batch: int = 8,
                  dili_shards: int = 1, dtype=jnp.float32,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, refresh_mode: str = "range"):
         self.cfg, self.params = cfg, params
         self.kv = PagedKVManager(cfg, num_pages=num_pages,
                                  page_size=page_size,
@@ -42,6 +47,14 @@ class ServingEngine:
         self.page_size = page_size
         self.max_batch = max_batch
         self.use_kernel = use_kernel
+        if refresh_mode not in ("range", "rescan"):
+            raise ValueError(f"refresh_mode={refresh_mode!r} not in "
+                             f"('range', 'rescan')")
+        # how the page-table snapshot heals after a live migration:
+        # "range" = one RANGE scan per live sequence (DESIGN.md §16),
+        # "rescan" = the legacy cluster-wide chain walk (benchmark
+        # baseline)
+        self.refresh_mode = refresh_mode
         self.active: List[Request] = []
         self.balancer = Balancer(self.kv.backend, split_threshold=64)
         self._decode = jax.jit(
@@ -51,11 +64,13 @@ class ServingEngine:
 
     # --------------------------------------------------------------- admit
     def admit(self, req: Request) -> None:
-        assert len(self.active) < self.max_batch
+        if len(self.active) >= self.max_batch:
+            raise BatchOverflow(
+                f"admit: decode batch is full ({len(self.active)}/"
+                f"{self.max_batch}) — finish or evict a sequence first")
         s = len(req.prompt)
         n_pages = (s + req.max_new + self.page_size - 1) // self.page_size
-        for p in range(n_pages):
-            self.kv.alloc_page(req.seq_id, p)
+        self.kv.alloc_pages(req.seq_id, n_pages)
         # prefill with a contiguous cache, then scatter into pages
         cache = T.init_cache(self.cfg, 1,
                              n_pages * self.page_size, dtype=self.kv.dtype)
@@ -77,11 +92,14 @@ class ServingEngine:
         if rebalance:
             self.balancer.step()
             self.kv.client.drain(600)
-            self.kv.refresh_table()
+            if self.refresh_mode == "range":
+                self.kv.refresh_seqs([r.seq_id for r in live])
+            else:
+                self.kv.refresh_table()
         b = len(live)
-        pp = max((len(r.prompt) + r.max_new + self.page_size - 1)
-                 // self.page_size for r in live)
-        page_table = self.kv.page_table([r.seq_id for r in live], pp)
+        counts = [(len(r.prompt) + r.max_new + self.page_size - 1)
+                  // self.page_size for r in live]
+        page_table = self.kv.page_table([r.seq_id for r in live], counts)
         seq_lens = jnp.asarray(
             [len(r.prompt) + len(r.out) - 1 for r in live], jnp.int32)
         tokens = jnp.asarray([[r.out[-1]] for r in live], jnp.int32)

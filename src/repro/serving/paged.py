@@ -1,4 +1,4 @@
-"""Paged KV cache with a DiLi page table (DESIGN.md §3.1).
+"""Paged KV cache with a DiLi page table (DESIGN.md §3.1, §16).
 
 The page table is a DiLi instance: key = (seq_id << PAGE_BITS) | page_idx,
 value = physical page slot. This buys the serving layer exactly what the
@@ -10,7 +10,14 @@ temporary replication covers the in-flight page allocations).
 The decode hot path is jitted and consumes an array *snapshot* of the table
 (page_table[b, p]) refreshed from DiLi state between steps; lookups inside
 the step are O(1) gathers (or the hybrid_search kernel when the table is
-consulted by key).
+consulted by key). Because page keys pack (seq_id, page) into one sorted
+key space, a sequence's pages occupy one contiguous key interval — so the
+snapshot refresh after a migration is a single ``RANGE`` scan over
+``[seq_id << PAGE_BITS, (seq_id+1) << PAGE_BITS)`` per live sequence
+(``refresh_seq``), not a cluster-wide chain rescan (``refresh_table``,
+kept as the slow fallback and the benchmark baseline). Snapshot misses are
+surfaced as a ``-1`` sentinel and masked out of the decode gather/scatter;
+they must never alias onto physical slot 0.
 """
 from __future__ import annotations
 
@@ -30,6 +37,12 @@ from repro.models.layers import apply_rope, rms_norm, swiglu
 
 PAGE_BITS = 12                      # up to 4096 pages per sequence
 MAX_SEQS = 1 << 17
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free physical page slots (explicit — must survive ``python -O``,
+    unlike the bare assert it replaced; same class of fix as
+    ``OutboxOverflow``)."""
 
 
 def page_key(seq_id: int, page: int) -> int:
@@ -53,36 +66,98 @@ class PagedKVManager:
                           pool_capacity=max(4 * num_pages, 1024),
                           max_sublists=64, max_ctrs=64,
                           max_scan=max(4 * num_pages, 1024),
-                          batch_size=32, mailbox_cap=256, move_batch=16)
+                          batch_size=32, mailbox_cap=256, move_batch=16,
+                          range_scan=True)
         self.backend = LocalBackend(dcfg)
         self.client = DiLiClient(self.backend)
         # the raw cluster stays reachable for tests/tools that inject
         # background commands or inspect chains directly
         self.dili = self.backend.cluster
         self._table: Dict[int, int] = {}   # key -> slot (snapshot cache)
+        # authoritative host-side allocation record (key -> slot): the
+        # ground truth for "was this page ever allocated", independent of
+        # the snapshot cache's staleness during migrations
+        self._allocated: Dict[int, int] = {}
 
     # ------------------------------------------------------------ alloc/free
     def alloc_page(self, seq_id: int, page: int) -> int:
-        assert self.free_slots, "page pool exhausted"
+        if not self.free_slots:
+            raise PagePoolExhausted(
+                f"page pool exhausted: all {self.num_pages} physical "
+                f"slots are live (alloc seq={seq_id} page={page})")
         slot = self.free_slots.pop()
         key = page_key(seq_id, page)
-        self.client.insert(key, value=slot)
+        fut = self.client.insert(key, value=slot)
         self.client.drain()
+        if not fut.result(wait=False):
+            self.free_slots.append(slot)
+            raise RuntimeError(
+                f"alloc_page: key {key} (seq={seq_id} page={page}) is "
+                f"already present in the page table — double allocation")
         self._table[key] = slot
+        self._allocated[key] = slot
         return slot
 
-    def free_seq(self, seq_id: int, num_pages: int) -> None:
-        keys = [page_key(seq_id, p) for p in range(num_pages)]
-        self.client.remove_batch(keys)
+    def alloc_pages(self, seq_id: int, n_pages: int) -> List[int]:
+        """Allocate ``n_pages`` consecutive pages for one sequence in a
+        single batched insert (one drain instead of one per page)."""
+        if len(self.free_slots) < n_pages:
+            raise PagePoolExhausted(
+                f"page pool exhausted: {len(self.free_slots)} free slots "
+                f"< {n_pages} requested (alloc seq={seq_id})")
+        keys = [page_key(seq_id, p) for p in range(n_pages)]
+        slots = [self.free_slots.pop() for _ in keys]
+        res = self.client.insert_batch(keys, slots)
         self.client.drain()
-        for k in keys:
-            slot = self._table.pop(k, None)
-            if slot is not None:
+        oks = res.results(wait=False)
+        bad = []
+        for k, slot, ok in zip(keys, slots, oks):
+            if ok:
+                # live in DiLi now — must be tracked even on a partial
+                # failure, or its slot could be recycled into an alias
+                self._table[k] = slot
+                self._allocated[k] = slot
+            else:
                 self.free_slots.append(slot)
+                bad.append(k)
+        if bad:
+            raise RuntimeError(
+                f"alloc_pages: keys {bad[:4]} (seq={seq_id}) already "
+                f"present in the page table — double allocation")
+        return slots
+
+    def free_seq(self, seq_id: int, num_pages: int) -> None:
+        """Remove a sequence's page mappings and recycle their slots.
+
+        A slot is recycled only once its remove is *confirmed*: a bounced
+        or failed remove would leave the key live in DiLi while the slot
+        is reissued to another sequence — serving-level key resurrection.
+        ``drain()`` raises if the backend never reaches quiescence, so a
+        stuck remove cannot silently fall through to recycling either.
+        """
+        keys = [page_key(seq_id, p) for p in range(num_pages)]
+        res = self.client.remove_batch(keys)
+        self.client.drain()
+        for k, ok in zip(keys, res.results(wait=False)):
+            if k not in self._allocated:
+                continue        # never allocated — nothing to recycle
+            if not ok:
+                raise RuntimeError(
+                    f"free_seq: remove of page key {k} (seq={seq_id}) "
+                    f"failed — the key is still live in the page table; "
+                    f"recycling its slot would alias another sequence's "
+                    f"KV")
+            slot = self._allocated.pop(k)
+            self._table.pop(k, None)
+            self.free_slots.append(slot)
 
     # -------------------------------------------------------------- lookups
     def refresh_table(self) -> None:
-        """Re-snapshot key->slot from the DiLi chains (after Split/Move)."""
+        """Re-snapshot key->slot from the DiLi chains (after Split/Move).
+
+        The cluster-wide full rescan — kept as the slow fallback and the
+        benchmark baseline; ``refresh_seq`` is the RANGE-based fast path.
+        """
         table: Dict[int, int] = {}
         for s in range(self.backend.n):
             for e in self.backend.sublists(s):
@@ -93,14 +168,68 @@ class PagedKVManager:
                     table[k] = val
         self._table = table
 
-    def page_table(self, seq_ids: List[int], pages_per_seq: int
-                   ) -> jnp.ndarray:
-        rows = []
+    def refresh_seq(self, seq_id: int) -> int:
+        """Refresh one sequence's snapshot rows with a single RANGE scan
+        over its key interval (DESIGN.md §16) — the ordered-structure
+        payoff: no other sequence's chains are touched. Returns the
+        number of live mappings found."""
+        return self.refresh_seqs([seq_id])
+
+    def refresh_seqs(self, seq_ids: List[int]) -> int:
+        """Refresh several sequences' snapshot rows concurrently: the
+        spans are disjoint, so every scan is admitted in the same batch
+        and one drain resolves them all (the decode loop refreshes the
+        whole live batch this way after a migration). Returns the total
+        number of live mappings found."""
+        futs = []
         for sid in seq_ids:
-            row = [self._table.get(page_key(sid, p), 0)
-                   for p in range(pages_per_seq)]
-            rows.append(row)
-        return jnp.asarray(np.asarray(rows, np.int32))
+            lo = page_key(sid, 0)
+            hi = page_key(sid + 1, 0)
+            futs.append((lo, hi, self.client.range(lo, hi,
+                                                   limit=1 << PAGE_BITS)))
+        self.client.drain()
+        n = 0
+        for lo, hi, fut in futs:
+            items = fut.items(wait=False)
+            for k in [k for k in self._table if lo <= k < hi]:
+                del self._table[k]
+            for k, slot in items:
+                self._table[k] = slot
+            n += len(items)
+        return n
+
+    def page_table(self, seq_ids: List[int], pages_per_seq) -> jnp.ndarray:
+        """Dense [B, PP] slot snapshot for the decode step.
+
+        ``pages_per_seq`` is one int or a per-sequence list; rows are
+        padded to the max with ``-1``. A page inside a sequence's declared
+        count that is missing from the snapshot yields ``-1`` (stale
+        snapshot during a live migration — the decode step masks it) when
+        it was ever allocated, and raises when it never was: slot 0 is a
+        real page, and defaulting to it serves another sequence's KV.
+        """
+        if isinstance(pages_per_seq, int):
+            pages_per_seq = [pages_per_seq] * len(seq_ids)
+        if len(pages_per_seq) != len(seq_ids):
+            raise ValueError(f"{len(pages_per_seq)} page counts vs "
+                             f"{len(seq_ids)} seq ids")
+        pp = max(pages_per_seq, default=0)
+        rows = []
+        for sid, n in zip(seq_ids, pages_per_seq):
+            row = []
+            for p in range(n):
+                key = page_key(sid, p)
+                slot = self._table.get(key)
+                if slot is None:
+                    if key not in self._allocated:
+                        raise KeyError(
+                            f"page_table: seq {sid} page {p} was never "
+                            f"allocated — refusing to alias slot 0")
+                    slot = -1       # allocated, snapshot stale: masked
+                row.append(slot)
+            rows.append(row + [-1] * (pp - n))
+        return jnp.asarray(np.asarray(rows, np.int32).reshape(
+            len(seq_ids), pp))
 
     # ------------------------------------------------------------ KV writes
     def write_prefill(self, layer_caches, seq_ids: List[int],
@@ -152,19 +281,33 @@ def paged_decode_step(params, cfg: ArchConfig, tokens, k_pages, v_pages,
         k = apply_rope(k.reshape(b, 1, kh, hd), positions, cfg.rope_theta)
         v = v.reshape(b, 1, kh, hd)
 
-        # scatter the new token's K/V into its page slot
+        # scatter the new token's K/V into its page slot. A -1 sentinel
+        # (stale snapshot during migration) must not clamp onto slot 0 —
+        # aim the write past the end instead; JAX drops out-of-bounds
+        # scatter indices.
         slot = page_table[jnp.arange(b), seq_lens // page_size]
         off = seq_lens % page_size
-        kp = kp.at[slot, off].set(k[:, 0].astype(kp.dtype))
-        vp = vp.at[slot, off].set(v[:, 0].astype(vp.dtype))
+        safe = jnp.where(slot >= 0, slot, kp.shape[0])
+        kp = kp.at[safe, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[safe, off].set(v[:, 0].astype(vp.dtype))
 
         if use_kernel:
-            attn = K.paged_attention(q[:, 0], kp, vp, page_table,
+            # the kernel indexes pages by table entry; -1 would clamp to
+            # page 0 inside its gather (aliasing another sequence's KV),
+            # so clamp host-side — sentinel pages sit at/beyond each
+            # sequence's length and are masked by the kernel's length
+            # predicate, never attended.
+            attn = K.paged_attention(q[:, 0], kp, vp,
+                                     jnp.maximum(page_table, 0),
                                      seq_lens + 1, page_size=page_size)
             attn = attn[:, None]
         else:
-            kc = kp[page_table].reshape(b, -1, kh, hd)
-            vc = vp[page_table].reshape(b, -1, kh, hd)
+            # gather clamps -1 -> 0: zero-mask sentinel pages instead of
+            # serving page 0's (another sequence's) KV
+            pt = jnp.maximum(page_table, 0)
+            live = (page_table >= 0)[:, :, None, None, None]
+            kc = jnp.where(live, kp[pt], 0).reshape(b, -1, kh, hd)
+            vc = jnp.where(live, vp[pt], 0).reshape(b, -1, kh, hd)
             attn = decode_attention(q, kc, vc, seq_lens + 1)
         x = attn.reshape(b, 1, nh * hd) @ blk["attn"]["wo"]
         h = h + x

@@ -61,7 +61,8 @@ def run_differential(backend_kind: str, seed: int, nemesis, *,
                      split_threshold: int = 24,
                      drain_rounds: int = 12000, keep_backend: bool = False,
                      cfg_overrides: dict | None = None,
-                     balancer_kwargs: dict | None = None):
+                     balancer_kwargs: dict | None = None,
+                     scan_every: int = 0):
     """One full differential run; returns a result dict (raises on a
     drain timeout, asserts nothing itself — callers check the fields).
     ``cfg_overrides`` are ``DiLiConfig._replace`` kwargs layered over
@@ -83,6 +84,17 @@ def run_differential(backend_kind: str, seed: int, nemesis, *,
     cfg = small_cfg(num_shards, big=(backend_kind == "local"))
     if cfg_overrides:
         cfg = cfg._replace(**cfg_overrides)
+    if scan_every:
+        # RANGE parity (DESIGN.md §16): every ``scan_every`` batches a
+        # scan over a random span races the op stream; the client's
+        # span-conflict admission makes the sequential oracle *at the
+        # scan's submission index* the exact referee. The outbox must
+        # absorb a full gather pre-pass burst (lanes × (batch+1)) on top
+        # of normal traffic.
+        cfg = cfg._replace(
+            range_scan=True,
+            mailbox_cap=max(cfg.mailbox_cap,
+                            cfg.range_lanes * (cfg.range_batch + 1) + 64))
     backend = make_backend(backend_kind, cfg, seed, nemesis)
     bal = Balancer(backend, split_threshold=split_threshold,
                    merge_threshold=6, rng=backend.balancer_rng,
@@ -113,7 +125,12 @@ def run_differential(backend_kind: str, seed: int, nemesis, *,
     client.drain(drain_rounds, run_balance=True)
 
     futs, exps, starts = [load], [[True] * len(base)], [0]
-    done = 0
+    # RANGE scans race the stream on a separate rng child so the main op
+    # schedule (and its byte-identical trace digests) is untouched when
+    # scan_every == 0
+    srng = np.random.default_rng(seed + 2)
+    scans = []                       # (lo, hi, limit, expected_keys, fut)
+    done = batch_no = 0
     while done < n_ops:
         k = min(ops_per_round, n_ops - done)
         kinds = rng.choice([OP_FIND, OP_INSERT, OP_REMOVE], k).tolist()
@@ -121,9 +138,28 @@ def run_differential(backend_kind: str, seed: int, nemesis, *,
         futs.append(client.submit(kinds, keys))
         starts.append(opno)
         exps.append(apply_and_record(kinds, keys))
+        if scan_every and batch_no % scan_every == 0:
+            lo = int(srng.integers(0, key_space))
+            hi = lo + int(srng.integers(1, key_space // 2))
+            limit = int(srng.integers(1, 64))
+            # the span-conflict admission holds later span mutations
+            # behind the scan and the scan behind earlier ones, so the
+            # oracle *right now* — after this batch — is the exact
+            # expected snapshot, truncated from the low end
+            exp_keys = sorted(x for x in oracle.snapshot()
+                              if lo <= x < hi)[:limit]
+            scans.append((lo, hi, limit, exp_keys,
+                          client.range(lo, hi, limit)))
         client.pump()
         done += k
+        batch_no += 1
     client.drain(drain_rounds)
+
+    scan_mismatches = []
+    for lo, hi, limit, exp_keys, fut in scans:
+        got = [kv[0] for kv in fut.items(wait=False)]
+        if got != exp_keys:
+            scan_mismatches.append((lo, hi, limit, exp_keys, got))
 
     # ops-per-window: staleness bound is in rounds; at most one submitted
     # batch per round, so ops_per_round per round is a safe upper bound
@@ -157,6 +193,8 @@ def run_differential(backend_kind: str, seed: int, nemesis, *,
     final = backend.all_keys()
     return {
         "mismatches": mismatches,
+        "scan_mismatches": scan_mismatches,
+        "n_scans": len(scans),
         "keys_match": final == sorted(oracle.snapshot()),
         "final_keys": final,
         "oracle_keys": sorted(oracle.snapshot()),
@@ -174,6 +212,8 @@ def run_differential(backend_kind: str, seed: int, nemesis, *,
 def check(res: dict, repro: str) -> None:
     assert not res["mismatches"], \
         f"result mismatches {res['mismatches'][:5]} — repro {repro}"
+    assert not res.get("scan_mismatches"), \
+        f"scan mismatches {res['scan_mismatches'][:3]} — repro {repro}"
     assert res["keys_match"], \
         (f"final key sets diverged — repro {repro}\n"
          f"extra={sorted(set(res['final_keys'])-set(res['oracle_keys']))} "
@@ -190,6 +230,9 @@ def main(argv) -> int:
     import os
     kind, n_ops, seeds = argv[0], int(argv[1]), [int(s) for s in argv[2:]]
     cfg_json = os.environ.get("NEMESIS_CONFIG")
+    # RANGE_EVERY=<n> races one scan per n batches through the schedule
+    # (used by the shardmap scan-parity subprocess test)
+    scan_every = int(os.environ.get("RANGE_EVERY", "0"))
     if cfg_json:
         from repro.core.net import NemesisConfig
         nemesis = NemesisConfig.from_dict(json.loads(cfg_json))
@@ -199,7 +242,8 @@ def main(argv) -> int:
     for seed in seeds:
         repro = nemesis.repro(seed)
         try:
-            res = run_differential(kind, seed, nemesis, n_ops=n_ops)
+            res = run_differential(kind, seed, nemesis, n_ops=n_ops,
+                                   scan_every=scan_every)
             check(res, repro)
             from repro.core.net.digest import trace_digest
             print(f"OK {kind} seed={seed} rounds={res['rounds']} "

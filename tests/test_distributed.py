@@ -69,7 +69,7 @@ SCRIPT = textwrap.dedent("""
     zeros = jnp.zeros((4, cfg.batch_size, M.FIELDS), jnp.int32)
     for r in range(38):
         batch = client_batch(r) if r < 30 else zeros  # 8 drain rounds
-        states, bgs, inbox, cs, cv, _csrc, _cnt, _hits = rnd(
+        states, bgs, inbox, cs, cv, _csrc, _ckey, _cnt, _hits = rnd(
             states, bgs, inbox, batch)
         cs, cv = np.asarray(cs), np.asarray(cv)
         for s in range(4):

@@ -49,8 +49,11 @@ def test_corpus_schedule(entry):
     config = NemesisConfig.from_dict(entry["config"])
     repro = f"corpus:{entry['name']} {config.repro(entry['seed'])}"
     res = run_differential("local", entry["seed"], config,
-                           n_ops=entry["n_ops"])
+                           n_ops=entry["n_ops"],
+                           scan_every=entry.get("scan_every", 0))
     check(res, repro)
+    if entry.get("scan_every"):
+        assert res["n_scans"] > 0, repro
     # the schedule must actually have exercised the wire
     assert res["net_stats"]["sent"] > 0, repro
     if config.crashes:       # and the kill -9 must actually have fired
